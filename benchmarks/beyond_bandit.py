@@ -1,0 +1,76 @@
+"""Beyond-paper: reinforcement-based routing (the paper's future work).
+
+Compares the Thompson-sampling bandit policy (core/bandit.py) against the
+static multi-objective policy over a long workload, measuring the
+learning curve (success rate per quartile of traffic) and the learned
+capability matrix vs the ground-truth structure.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
+                    run_sim, save_result)
+from repro.core import ServiceRegistry, SimConfig
+from repro.core.bandit import BanditPolicy
+from repro.core.policies import MultiObjectivePolicy
+from repro.core.router import CAPABILITY
+from repro.core.simulator import ClusterSimulator
+from common import model_pool
+
+
+def run(n_prompts: int = 4000, timer: BenchTimer = None):
+    prompts = corpus(n_prompts, seed=13)
+    decisions = routers()["hybrid"].route_many([p.text for p in prompts])
+    workload = make_workload(prompts, decisions, rate=8.0, seed=13)
+
+    results = {}
+    print("\n== Beyond-paper: bandit (RL) routing vs static multi-objective ==")
+    print(f"{'policy':18s} {'succ_q1%':>9s} {'succ_q2%':>9s} {'succ_q3%':>9s} "
+          f"{'succ_q4%':>9s} {'cost/q$':>9s}")
+    for pol_cls in (MultiObjectivePolicy, BanditPolicy):
+        t0 = time.perf_counter()
+        reg = ServiceRegistry(model_pool())
+        pol = pol_cls(reg, seed=13)
+        sim = ClusterSimulator(reg, pol, PROFILES["balanced"],
+                               SimConfig(seed=13, static=True))
+        rep = sim.run(workload)
+        wall = time.perf_counter() - t0
+        reqs = sorted(rep.requests, key=lambda r: r.arrival)
+        qs = np.array_split(reqs, 4)
+        quart = [float(np.mean([r.success for r in q])) for q in qs]
+        results[pol.name] = {
+            "quartile_success": quart,
+            "cost_per_query": rep.attributed_cost_per_query(),
+            "overall": rep.success_rate(),
+        }
+        print(f"{pol.name:18s} " + " ".join(f"{100*v:9.1f}" for v in quart) +
+              f" {rep.attributed_cost_per_query():9.4f}")
+        if timer:
+            timer.add(f"bandit_{pol.name}", len(reqs), wall,
+                      f"q4_success={quart[-1]:.3f}")
+        if pol.name == "bandit":
+            learned = pol.learned_capability()
+            print("\nlearned capability (posterior means) vs ground truth:")
+            for arm in ("small", "medium", "large"):
+                row = " ".join(
+                    f"{t}:{learned.get(arm, {}).get(t, float('nan')):.2f}"
+                    f"/{CAPABILITY[arm][t]:.2f}"
+                    for t in ("low", "medium", "high"))
+                print(f"  {arm:7s} {row}")
+            results["learned_capability"] = {
+                a: learned.get(a, {}) for a in ("small", "medium", "large")}
+
+    mo_q, bd_q = (results["multi_objective"]["quartile_success"],
+                  results["bandit"]["quartile_success"])
+    print(f"\nderived: bandit learning curve q1->q4 "
+          f"{100*(bd_q[-1]-bd_q[0]):+.1f}pp; final quartile vs "
+          f"multi-objective {100*(bd_q[-1]-mo_q[-1]):+.1f}pp")
+    save_result("beyond_bandit", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

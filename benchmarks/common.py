@@ -1,0 +1,109 @@
+"""Shared benchmark infrastructure.
+
+Every paper table/figure benchmark pulls its corpus, routers, model pool
+and simulator runs from here. The trained classifier is cached under
+benchmarks/artifacts/ so repeated benchmark runs don't retrain.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core import (PROFILES, ClusterSimulator, HybridRouter,
+                        KeywordRouter, SemanticRouter, ServiceRegistry,
+                        SimConfig, poisson_arrivals)
+from repro.core.classifier import ClassifierConfig, train_classifier
+from repro.core.policies import POLICIES
+from repro.core.scoring import OperatorProfile
+from repro.checkpoint.checkpoint import load_pytree, save_pytree
+from repro.core.classifier import init_classifier
+from repro.data.benchmarks import generate_corpus, split
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+RESULTS = os.path.join(ART, "results")
+os.makedirs(RESULTS, exist_ok=True)
+
+# the serving pool: assigned archs spanning the paper's tier structure
+POOL = ["smollm-360m", "zamba2-1.2b", "phi3-medium-14b", "glm4-9b",
+        "command-r-plus-104b", "deepseek-v2-236b"]
+DEFAULT_MODEL = "glm4-9b"          # the paper-style single static default
+
+CLS_CFG = ClassifierConfig()
+
+
+def model_pool(names=None) -> Dict:
+    return {k: ARCHS[k] for k in (names or POOL)}
+
+
+def corpus(n: int = 1500, seed: int = 0):
+    return generate_corpus(n, seed)
+
+
+def get_classifier(n_train: int = 3000, epochs: int = 5, force: bool = False,
+                   log=print) -> Tuple[SemanticRouter, dict]:
+    """Train (or load the cached) complexity classifier."""
+    ckpt = os.path.join(ART, "classifier.ckpt")
+    rep_path = os.path.join(ART, "classifier_report.json")
+    if not force and os.path.exists(ckpt) and os.path.exists(rep_path):
+        import jax
+        template = init_classifier(CLS_CFG, jax.random.PRNGKey(0))
+        params = load_pytree(template, ckpt)
+        report = json.load(open(rep_path))
+        return SemanticRouter(params, CLS_CFG), report
+    full = generate_corpus(n_train, seed=0)
+    train, val = split(full, val_frac=0.1)
+    params, report = train_classifier(train, val, CLS_CFG, epochs=epochs,
+                                      log=log)
+    save_pytree(params, ckpt)
+    json.dump(report, open(rep_path, "w"))
+    return SemanticRouter(params, CLS_CFG), report
+
+
+def routers() -> Dict[str, object]:
+    sem, _ = get_classifier()
+    return {"keyword": KeywordRouter(), "distilbert": sem,
+            "hybrid": HybridRouter(sem)}
+
+
+def make_workload(prompts, decisions, rate: float, seed: int = 0):
+    arr = poisson_arrivals(prompts, rate, seed=seed)
+    return [(t, p, d) for (t, p), d in zip(arr, decisions)]
+
+
+def run_sim(policy_name: str, profile: OperatorProfile, workload,
+            static: bool = False, pool=None, seed: int = 0,
+            sim_cfg: SimConfig = None):
+    reg = ServiceRegistry(model_pool(pool))
+    cfg = sim_cfg or SimConfig(seed=seed, static=static)
+    if sim_cfg is None:
+        cfg.static = static
+    sim = ClusterSimulator(reg, POLICIES[policy_name](reg, seed=seed),
+                           profile, cfg)
+    return sim.run(workload), reg
+
+
+def save_result(name: str, payload: dict) -> None:
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+class BenchTimer:
+    """Produces the ``name,us_per_call,derived`` CSV contract."""
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, n_calls: int, wall_s: float, derived: str):
+        us = 1e6 * wall_s / max(1, n_calls)
+        self.rows.append((name, us, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.2f},{derived}")

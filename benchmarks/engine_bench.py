@@ -1,0 +1,58 @@
+"""Real-engine microbenchmarks (CPU, reduced models): per-backend decode
+step time, prefill time, and measured cold vs warm start — the calibration
+source for the simulator's small-arch constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from common import BenchTimer, save_result
+from repro.configs.registry import ARCHS
+from repro.models import init_model
+from repro.serving import (BACKENDS, InferenceEngine, Request,
+                           SamplingParams)
+
+
+def run(timer: BenchTimer = None, arch: str = "smollm-360m"):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
+    rng = np.random.RandomState(0)
+    results = {}
+    print(f"\n== Engine microbench ({cfg.name}, CPU) ==")
+    print(f"{'backend':8s} {'cold(s)':>8s} {'ttft(ms)':>9s} "
+          f"{'decode(ms/tok)':>15s} {'tok/s':>7s}")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    for bname, backend in BACKENDS.items():
+        t0 = time.perf_counter()
+        eng = InferenceEngine(cfg, params, backend, max_seq=96)
+        # cold start = build + first compile
+        warm = eng.run([Request(uid=-1, tokens=[1, 2, 3],
+                                sampling=SamplingParams(max_new_tokens=2))])
+        cold_s = time.perf_counter() - t0
+        reqs = [Request(uid=i,
+                        tokens=list(rng.randint(0, cfg.vocab_size, 24)),
+                        sampling=SamplingParams(max_new_tokens=12))
+                for i in range(backend.max_batch)]
+        t0 = time.perf_counter()
+        res = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(r.new_tokens) for r in res)
+        ttft = float(np.mean([r.ttft for r in res]))
+        per_tok = wall / max(n_tok, 1)
+        results[bname] = {"cold_s": cold_s, "ttft_ms": 1e3 * ttft,
+                          "decode_ms_per_tok": 1e3 * per_tok,
+                          "tok_per_s": n_tok / wall}
+        print(f"{bname:8s} {cold_s:8.2f} {1e3*ttft:9.1f} "
+              f"{1e3*per_tok:15.2f} {n_tok/wall:7.1f}")
+        if timer:
+            timer.add(f"engine_{bname}", n_tok, wall,
+                      f"tok/s={n_tok/wall:.1f};cold={cold_s:.2f}s")
+    save_result("engine_bench", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Fig. 4: complexity distributions, keyword vs DistilBERT routing.
+
+Reports the tier distribution each router assigns, its agreement with the
+ground truth, and the separation (total-variation distance) between the
+two routers' distributions — the paper's "clear separation supports
+relevance-driven routing" claim.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+
+import numpy as np
+
+from common import BenchTimer, corpus, routers, save_result
+from repro.data.benchmarks import TIERS
+
+
+def run(n_prompts: int = 1500, timer: BenchTimer = None):
+    prompts = corpus(n_prompts, seed=7)
+    texts = [p.text for p in prompts]
+    gold = Counter(p.complexity for p in prompts)
+    rts = routers()
+    t0 = time.perf_counter()
+    dists, accs = {}, {}
+    for name in ("keyword", "distilbert"):
+        ds = rts[name].route_many(texts)
+        dists[name] = Counter(d.tier for d in ds)
+        accs[name] = float(np.mean([d.tier == p.complexity
+                                    for d, p in zip(ds, prompts)]))
+    wall = time.perf_counter() - t0
+
+    n = len(prompts)
+    print("\n== Fig 4: complexity distributions ==")
+    print(f"{'tier':8s} {'gold%':>7s} {'keyword%':>9s} {'distilbert%':>12s}")
+    tv = 0.0
+    for t in TIERS:
+        kw = dists["keyword"][t] / n
+        db = dists["distilbert"][t] / n
+        tv += 0.5 * abs(kw - db)
+        print(f"{t:8s} {100*gold[t]/n:7.1f} {100*kw:9.1f} {100*db:12.1f}")
+    print(f"tier accuracy: keyword={100*accs['keyword']:.1f}% "
+          f"distilbert={100*accs['distilbert']:.1f}%; "
+          f"TV distance between routers = {tv:.3f}")
+    save_result("fig4_complexity", {
+        "gold": {t: gold[t] / n for t in TIERS},
+        **{name: {t: dists[name][t] / n for t in TIERS} for name in dists},
+        "accuracy": accs, "tv_distance": tv})
+    if timer:
+        timer.add("fig4_complexity", 2 * n, wall,
+                  f"kw_acc={accs['keyword']:.3f};db_acc={accs['distilbert']:.3f}")
+    return accs
+
+
+if __name__ == "__main__":
+    run()

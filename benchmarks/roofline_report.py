@@ -1,0 +1,101 @@
+"""§Roofline report: read the dry-run artifacts, emit the full baseline
+table (every arch x shape on the single-pod mesh) and flag the three
+hillclimb targets (worst roofline fraction / most collective-bound / most
+representative of the paper's serving technique).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from common import ART, BenchTimer, save_result
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config_for_shape
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS, \
+    analytic_memory_bytes
+
+DRYRUN = os.path.join(ART, "dryrun")
+
+
+def _recompute(r):
+    """Memory term = max(raw HLO bytes, analytic HBM floor); terms and
+    dominance recomputed uniformly regardless of artifact vintage."""
+    cfg = get_config_for_shape(r["arch"], r["shape"])
+    shape = INPUT_SHAPES[r["shape"]]
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind != "decode" else 1)
+    floor = r.get("analytic_memory_bytes") or analytic_memory_bytes(
+        cfg.param_count(), cfg.active_param_count(), shape.kind, tokens,
+        cfg.d_model, cfg.num_layers, r.get("cache_bytes", 0))
+    chips = r["chips"]
+    r["memory_s"] = max(r.get("hlo_bytes_raw", r["hlo_bytes"]), floor) \
+        / (chips * HBM_BW)
+    r["compute_s"] = r["hlo_flops"] / (chips * PEAK_FLOPS)
+    r["collective_s"] = r["collective_bytes"] / (chips * ICI_BW)
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    r["dominant"] = max(terms, key=terms.get)
+    return r
+
+
+def load_rows(mesh: str = "pod16x16"):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            rows.append(_recompute(json.load(f)))
+    return rows
+
+
+def run(timer: BenchTimer = None):
+    t0 = time.perf_counter()
+    rows = load_rows()
+    print("\n== Roofline baselines (single pod, 256 chips; seconds/step) ==")
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+           f"{'collective':>11s} {'dominant':>10s} {'useful%':>8s}")
+    print(hdr)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        useful = 100 * min(1.0, r.get("useful_flops_frac", 0.0))
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:11.4f} "
+              f"{r['dominant']:>10s} {useful:8.1f}")
+
+    # hillclimb target selection
+    def frac_collective(r):
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        return r["collective_s"] / tot if tot else 0.0
+
+    def roofline_fraction(r):
+        """max(term)/sum(terms): 1.0 == perfectly bound by one resource
+        (good overlap potential); low == badly mixed."""
+        tot = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        return max(r["compute_s"], r["memory_s"], r["collective_s"]) / tot \
+            if tot else 0.0
+
+    worst = min(rows, key=roofline_fraction)
+    most_coll = max(rows, key=frac_collective)
+    # most representative of the paper: the serving decode step of the
+    # biggest pool model (the Spin cost model's dominant regime)
+    decodes = [r for r in rows if r["shape"] == "decode_32k"]
+    rep = max(decodes, key=lambda r: r["active_param_count"])
+    print(f"\nhillclimb targets:")
+    print(f"  worst roofline fraction : {worst['arch']} x {worst['shape']} "
+          f"({roofline_fraction(worst):.2f})")
+    print(f"  most collective-bound   : {most_coll['arch']} x "
+          f"{most_coll['shape']} ({100*frac_collective(most_coll):.0f}% collective)")
+    print(f"  paper-representative    : {rep['arch']} x {rep['shape']} "
+          f"(largest served decode)")
+    save_result("roofline_baselines", {
+        "rows": rows,
+        "targets": {"worst_fraction": [worst["arch"], worst["shape"]],
+                    "most_collective": [most_coll["arch"], most_coll["shape"]],
+                    "representative": [rep["arch"], rep["shape"]]}})
+    if timer:
+        timer.add("roofline_report", len(rows), time.perf_counter() - t0,
+                  f"pairs={len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

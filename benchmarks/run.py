@@ -1,0 +1,58 @@
+"""Benchmark driver — one benchmark per paper table/figure.
+
+Prints the ``name,us_per_call,derived`` CSV contract at the end, after the
+per-table human-readable reports. JSON payloads land in
+benchmarks/artifacts/results/.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from common import BenchTimer  # noqa: E402
+
+import beyond_bandit  # noqa: E402
+import engine_bench  # noqa: E402
+import fig4_complexity  # noqa: E402
+import fig_scalability  # noqa: E402
+import fig_ttft  # noqa: E402
+import roofline_report  # noqa: E402
+import table1_baseline  # noqa: E402
+import table2_routing  # noqa: E402
+import table3_matrix  # noqa: E402
+import table4_scaling  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI mode)")
+    ap.add_argument("--skip-engine", action="store_true")
+    args = ap.parse_args()
+    n = 600 if args.fast else 1500
+
+    timer = BenchTimer()
+    table1_baseline.run(n_prompts=max(n, 1200), timer=timer)
+    table2_routing.run(n_prompts=n, timer=timer)
+    table3_matrix.run(n_prompts=n, timer=timer)
+    table4_scaling.run(n_prompts=n, timer=timer)
+    fig4_complexity.run(n_prompts=n, timer=timer)
+    fig_ttft.run(n_prompts=n, timer=timer)
+    fig_scalability.run(timer=timer)
+    beyond_bandit.run(n_prompts=min(4000, 3 * n), timer=timer)
+    roofline_report.run(timer=timer)
+    if not args.skip_engine:
+        engine_bench.run(timer=timer)
+
+    print("\n== CSV (name,us_per_call,derived) ==")
+    timer.emit()
+
+
+if __name__ == "__main__":
+    main()

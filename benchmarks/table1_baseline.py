@@ -1,0 +1,56 @@
+"""Paper Table 1: baseline inference completion per benchmark.
+
+Setup matches the paper's: a single static default deployment (no
+orchestration, no routing — every prompt to the default medium model's
+default backend), success = valid completion within time/token limits.
+Reported next to the paper's numbers.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from common import (BenchTimer, DEFAULT_MODEL, PROFILES, corpus,
+                    make_workload, run_sim, save_result)
+from repro.core import KeywordRouter
+from repro.data.benchmarks import BENCHMARK_STATS
+
+PAPER = {k: v["base_success"] for k, v in BENCHMARK_STATS.items()}
+
+
+def run(n_prompts: int = 2000, timer: BenchTimer = None):
+    prompts = corpus(n_prompts, seed=1)
+    decisions = KeywordRouter().route_many([p.text for p in prompts])
+    workload = make_workload(prompts, decisions, rate=6.0, seed=1)
+    t0 = time.perf_counter()
+    # static single-model deployment: restrict the pool to the default
+    rep, _ = run_sim("random", PROFILES["balanced"], workload, static=True,
+                     pool=[DEFAULT_MODEL], seed=1)
+    wall = time.perf_counter() - t0
+
+    by_bench = defaultdict(list)
+    for r in rep.requests:
+        by_bench[r.prompt.benchmark].append(r.success)
+    rows = []
+    print(f"\n== Table 1: baseline completion (n={len(rep.requests)}) ==")
+    print(f"{'benchmark':12s} {'n':>6s} {'success%':>9s} {'paper%':>7s}")
+    for bench, stats in BENCHMARK_STATS.items():
+        ours = float(np.mean(by_bench[bench])) if by_bench[bench] else 0.0
+        rows.append({"benchmark": bench, "n": len(by_bench[bench]),
+                     "success": ours, "paper": PAPER[bench]})
+        print(f"{bench:12s} {len(by_bench[bench]):6d} {100*ours:9.1f} "
+              f"{100*PAPER[bench]:7.1f}")
+    total = rep.success_rate()
+    print(f"{'TOTAL':12s} {len(rep.requests):6d} {100*total:9.1f}    77.1")
+    save_result("table1_baseline", {"rows": rows, "total": total,
+                                    "paper_total": 0.771})
+    if timer:
+        timer.add("table1_baseline", len(rep.requests), wall,
+                  f"success={total:.3f};paper=0.771")
+    return total
+
+
+if __name__ == "__main__":
+    run()

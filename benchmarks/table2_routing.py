@@ -1,0 +1,57 @@
+"""Paper Table 2 + Fig. 5: keyword vs DistilBERT routing strategies.
+
+Reports tier accuracy uplift over no-routing, latency delta, and GPU
+utilization per strategy, plus routing success rate under the full
+simulator (multi-objective selection, dynamic scaling).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
+                    run_sim, save_result)
+
+
+def run(n_prompts: int = 1500, timer: BenchTimer = None):
+    prompts = corpus(n_prompts, seed=2)
+    texts = [p.text for p in prompts]
+    gold = [p.complexity for p in prompts]
+    rts = routers()
+
+    results = {}
+    print("\n== Table 2: routing strategies ==")
+    print(f"{'strategy':12s} {'tier_acc%':>9s} {'succ%':>7s} {'lat(s)':>8s} "
+          f"{'ttft_p50':>9s} {'util%':>6s} {'overhead(ms)':>12s}")
+    for name in ("keyword", "distilbert", "hybrid"):
+        t0 = time.perf_counter()
+        decisions = rts[name].route_many(texts)
+        route_wall = time.perf_counter() - t0
+        tier_acc = float(np.mean([d.tier == g for d, g in zip(decisions, gold)]))
+        workload = make_workload(prompts, decisions, rate=6.0, seed=2)
+        rep, reg = run_sim("multi_objective", PROFILES["balanced"], workload)
+        s = rep.steady_state().summary()
+        results[name] = {"tier_accuracy": tier_acc,
+                         "route_overhead_ms": 1e3 * route_wall / len(texts),
+                         **s}
+        print(f"{name:12s} {100*tier_acc:9.1f} {100*s['success_rate']:7.1f} "
+              f"{s['mean_latency_s']:8.2f} {s['ttft_p50']:9.2f} "
+              f"{100*s['gpu_utilization']:6.1f} "
+              f"{1e3*route_wall/len(texts):12.3f}")
+        if timer:
+            timer.add(f"table2_routing_{name}", len(texts), route_wall,
+                      f"tier_acc={tier_acc:.3f};success={s['success_rate']:.3f}")
+
+    kw, db = results["keyword"], results["distilbert"]
+    print(f"\nderived: distilbert tier-acc uplift "
+          f"{100*(db['tier_accuracy']-kw['tier_accuracy']):+.1f}pp "
+          f"(paper: semantic > keyword); "
+          f"TTFT overhead {100*(db['ttft_p50']/max(kw['ttft_p50'],1e-9)-1):+.1f}% "
+          f"(paper: +23.5%)")
+    save_result("table2_routing", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Cluster-scale what-if: run the paper's full experiment loop in the
+discrete-event simulator with the FULL assigned architectures (104B/236B
+in the pool) and compare operator profiles.
+
+Run: PYTHONPATH=src python examples/simulate_cluster.py [--prompts 2000]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.registry import ARCHS
+from repro.core import (PROFILES, ClusterSimulator, KeywordRouter,
+                        MultiObjectivePolicy, ServiceRegistry, SimConfig,
+                        poisson_arrivals)
+from repro.data.benchmarks import generate_corpus
+
+POOL = ["smollm-360m", "zamba2-1.2b", "phi3-medium-14b", "glm4-9b",
+        "command-r-plus-104b", "deepseek-v2-236b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prompts", type=int, default=2000)
+    ap.add_argument("--rate", type=float, default=8.0)
+    args = ap.parse_args()
+
+    prompts = generate_corpus(args.prompts, seed=21)
+    decisions = KeywordRouter().route_many([p.text for p in prompts])
+    arr = poisson_arrivals(prompts, args.rate, seed=21)
+    workload = [(t, p, d) for (t, p), d in zip(arr, decisions)]
+    models = {k: ARCHS[k] for k in POOL}
+
+    print(f"pool: {', '.join(POOL)}")
+    print(f"{'profile':10s} {'succ%':>7s} {'lat(s)':>8s} {'ttft_p50':>9s} "
+          f"{'cost/q$':>9s} {'util%':>6s}")
+    for pname, profile in PROFILES.items():
+        reg = ServiceRegistry(models)
+        sim = ClusterSimulator(reg, MultiObjectivePolicy(reg, seed=0),
+                               profile, SimConfig(seed=0))
+        rep = sim.run(workload)
+        s = rep.summary()
+        print(f"{pname:10s} {100*s['success_rate']:7.1f} "
+              f"{s['mean_latency_s']:8.2f} {s['ttft_p50']:9.2f} "
+              f"{s['cost_per_query_usd']:9.4f} "
+              f"{100*s['gpu_utilization']:6.1f}")
+
+
+if __name__ == "__main__":
+    main()

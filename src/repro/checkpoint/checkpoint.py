@@ -1,0 +1,70 @@
+"""Msgpack pytree checkpointing (no orbax in this env).
+
+Format: {"__tree__": flattened {path: (dtype, shape)} manifest,
+         "__data__": raw little-endian bytes per leaf}, zstd-compressed.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    manifest = []
+    blobs = []
+    for p, leaf in leaves_with_paths:
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            dtype = "bfloat16"
+        else:
+            dtype = arr.dtype.name
+        manifest.append({"path": _path_str(p), "dtype": dtype,
+                         "shape": list(arr.shape)})
+        blobs.append(arr.tobytes())
+    payload = msgpack.packb({"manifest": manifest, "blobs": blobs,
+                             "treedef": str(treedef)})
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(zstd.ZstdCompressor(level=3).compress(payload))
+
+
+def load_pytree(template: Any, path: str) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(zstd.ZstdDecompressor().decompress(f.read()))
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    by_path = {m["path"]: (m, b) for m, b in
+               zip(payload["manifest"], payload["blobs"])}
+    out = []
+    for p, leaf in leaves_with_paths:
+        key = _path_str(p)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        m, blob = by_path[key]
+        if m["dtype"] == "bfloat16":
+            arr = np.frombuffer(blob, np.uint16).reshape(m["shape"])
+            arr = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(np.frombuffer(blob, m["dtype"]).reshape(m["shape"]))
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

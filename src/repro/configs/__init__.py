@@ -1,0 +1,1 @@
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig  # noqa: F401

@@ -1,0 +1,269 @@
+"""Model configuration system.
+
+One ``ModelConfig`` dataclass covers every assigned architecture family
+(dense GQA, MLA, MoE, SSM, hybrid, encoder-decoder, VLM/audio backbones).
+Each ``configs/<arch>.py`` exports ``CONFIG`` with the exact assigned
+dimensions; ``ModelConfig.reduced()`` yields the CPU-smoke variant
+(<=2 layers, d_model<=512, <=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "unnamed"
+    family: str = "dense"          # dense | moe | ssm | hybrid | encdec | vlm
+    source: str = ""               # citation for the assigned config
+
+    # trunk dims
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 1024
+
+    # attention
+    attention_type: str = "gqa"    # gqa | mla | none
+    rope_theta: float = 10000.0
+    use_qkv_bias: bool = False
+    use_attn_out_bias: bool = False
+    sliding_window: Optional[int] = None   # ring-buffer window (long-context variant)
+    kv_cache_dtype: str = "bf16"           # bf16 | int8 (quantized GQA cache)
+    logit_softcap: Optional[float] = None
+
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0    # leading layers that use dense FFN
+    router_aux_coef: float = 0.001
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    ssm_ngroups: int = 1
+
+    # hybrid (zamba2): one SHARED attention block applied every `attn_every`
+    # mamba layers (weights shared across applications).
+    attn_every: int = 0
+
+    # encoder-decoder
+    encoder_layers: int = 0
+    cross_attention: bool = False
+
+    # modality frontend (stubbed per assignment: input_specs provides the
+    # precomputed frame/patch embeddings)
+    modality: str = "text"         # text | audio | vision
+    frontend_seq: int = 0          # frames/patches produced by the stub
+    mrope_sections: Tuple[int, ...] = ()   # qwen2-vl M-RoPE (t, h, w) dims
+
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"              # silu (swiglu) | gelu
+    dtype: str = "bfloat16"
+    max_seq_len: int = 524288
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def d_head_total(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def has_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def decoder_layers(self) -> int:
+        return self.num_layers
+
+    def moe_layer_indices(self) -> Tuple[int, ...]:
+        if not self.has_moe:
+            return ()
+        return tuple(i for i in range(self.num_layers) if i >= self.first_dense_layers)
+
+    # ---- parameter counting (used by the orchestrator cost model) -------
+    def param_count(self) -> int:
+        """Approximate total parameters (embeddings included)."""
+        d = self.d_model
+        n = 0
+        # embeddings (+ output head unless tied)
+        n += self.vocab_size * d
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+
+        def attn_params() -> int:
+            if self.attention_type == "mla":
+                p = d * (self.q_lora_rank or d)
+                qd = self.num_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                p += (self.q_lora_rank or d) * qd
+                p += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                p += self.kv_lora_rank * self.num_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                p += self.num_heads * self.v_head_dim * d
+                return p
+            qkv = d * self.d_head_total + 2 * d * self.kv_dim
+            out = self.d_head_total * d
+            return qkv + out
+
+        def dense_ffn_params(dff: int) -> int:
+            mult = 3 if self.act == "silu" else 2   # swiglu has gate+up+down
+            return mult * d * dff
+
+        def moe_ffn_params() -> int:
+            routed = self.num_experts * dense_ffn_params(self.moe_d_ff) // 1
+            shared = self.num_shared_experts * dense_ffn_params(self.moe_d_ff)
+            router = d * self.num_experts
+            return routed + shared + router
+
+        def ssm_params() -> int:
+            di, ns = self.d_inner, self.ssm_state
+            nh = self.ssm_nheads
+            p = d * (2 * di + 2 * self.ssm_ngroups * ns + nh)  # in_proj (z,x,B,C,dt)
+            p += self.ssm_conv_width * (di + 2 * self.ssm_ngroups * ns)
+            p += di * d                                        # out_proj
+            p += 2 * nh                                        # A_log, D
+            return p
+
+        if self.family == "ssm":
+            n += self.num_layers * (ssm_params() + d)  # + norm
+        elif self.family == "hybrid":
+            n += self.num_layers * (ssm_params() + d)
+            n += attn_params() + dense_ffn_params(self.d_ff) + 2 * d  # one shared block
+        else:
+            per_layer_attn = attn_params() + 2 * d
+            if self.has_moe:
+                moe_layers = len(self.moe_layer_indices())
+                dense_layers = self.num_layers - moe_layers
+                n += self.num_layers * per_layer_attn
+                n += dense_layers * dense_ffn_params(self.d_ff)
+                n += moe_layers * moe_ffn_params()
+            else:
+                n += self.num_layers * (per_layer_attn + dense_ffn_params(self.d_ff))
+            if self.encoder_layers:
+                n += self.encoder_layers * (attn_params() + dense_ffn_params(self.d_ff) + 2 * d)
+                # decoder cross-attention
+                n += self.num_layers * (attn_params() + d)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top-k experts only)."""
+        if not self.has_moe:
+            return self.param_count()
+        d = self.d_model
+        mult = 3 if self.act == "silu" else 2
+        expert_p = mult * d * self.moe_d_ff
+        moe_layers = len(self.moe_layer_indices())
+        inactive = moe_layers * (self.num_experts - self.experts_per_token) * expert_p
+        return self.param_count() - inactive
+
+    # ---- reduced smoke variant ------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """CPU-runnable member of the same family: 2 layers, d_model<=512,
+        <=4 experts, tiny vocab. Keeps every structural feature (GQA ratio,
+        MLA, MoE shared+routed, SSD, hybrid period, enc-dec, M-RoPE)."""
+        d = min(self.d_model, 256)
+        heads = max(2, min(self.num_heads, 4))
+        kv_ratio = max(1, self.num_heads // max(1, self.num_kv_heads))
+        kv = max(1, heads // min(kv_ratio, heads))
+        hd = 32
+        changes = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 4 * d) or 4 * d,
+            vocab_size=min(self.vocab_size, 512),
+            max_seq_len=4096,
+        )
+        if self.has_moe:
+            changes.update(
+                num_experts=4,
+                experts_per_token=min(2, self.experts_per_token),
+                num_shared_experts=min(1, self.num_shared_experts),
+                moe_d_ff=max(32, d // 4),
+                first_dense_layers=min(self.first_dense_layers, 1),
+            )
+        if self.attention_type == "mla":
+            changes.update(
+                kv_lora_rank=64, q_lora_rank=96,
+                qk_rope_head_dim=16, qk_nope_head_dim=hd, v_head_dim=hd,
+            )
+        if self.family in ("ssm", "hybrid"):
+            changes.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=32)
+        if self.family == "hybrid":
+            changes.update(attn_every=1)
+        if self.encoder_layers:
+            changes.update(encoder_layers=2)
+        if self.sliding_window:
+            changes.update(sliding_window=64)
+        if self.frontend_seq:
+            changes.update(frontend_seq=16)
+        if self.mrope_sections:
+            # sections must sum to head_dim//2
+            changes.update(mrope_sections=(4, 6, 6))
+        return dataclasses.replace(self, **changes)
+
+    def with_sliding_window(self, window: int = 8192) -> "ModelConfig":
+        """Long-context variant: ring-buffer windowed attention."""
+        return dataclasses.replace(
+            self, name=self.name + "-sw", sliding_window=window)
+
+    def with_int8_kv(self) -> "ModelConfig":
+        """Serving variant: int8-quantized GQA KV cache (§Perf H1 it. 3)."""
+        return dataclasses.replace(
+            self, name=self.name + "-kvq", kv_cache_dtype="int8")
+
+
+# ------------------------------------------------------------------------
+# Input shapes assigned to this paper.
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524288, 1,   "decode"),
+}

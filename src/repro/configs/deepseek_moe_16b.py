@@ -1,0 +1,26 @@
+"""deepseek-moe-16b — fine-grained MoE: 2 shared + 64 routed experts, top-6.
+[arXiv:2401.06066]
+28L d_model=2048 16H (GQA kv=16) expert d_ff=1408 vocab=102400.
+First layer uses a dense FFN (d_ff=10944), per the released architecture.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,              # dense FFN width for the leading dense layer
+    vocab_size=102400,
+    num_experts=64,
+    num_shared_experts=2,
+    experts_per_token=6,
+    moe_d_ff=1408,
+    first_dense_layers=1,
+    rope_theta=10000.0,
+    act="silu",
+)

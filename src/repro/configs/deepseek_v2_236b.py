@@ -1,0 +1,33 @@
+"""deepseek-v2-236b — MoE with Multi-head Latent Attention (MLA).
+[arXiv:2405.04434]
+60L d_model=5120 128H, MLA kv_lora=512, 2 shared + 160 routed top-6,
+expert d_ff=1536, vocab=102400. First dense layer d_ff=12288.
+MLA dims: qk_nope=128, qk_rope=64, v=128, q_lora=1536.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,        # nominal; MLA stores a single latent KV stream
+    head_dim=128,
+    d_ff=12288,              # dense FFN width for the leading dense layer
+    vocab_size=102400,
+    attention_type="mla",
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_rope_head_dim=64,
+    qk_nope_head_dim=128,
+    v_head_dim=128,
+    num_experts=160,
+    num_shared_experts=2,
+    experts_per_token=6,
+    moe_d_ff=1536,
+    first_dense_layers=1,
+    rope_theta=10000.0,
+    act="silu",
+)

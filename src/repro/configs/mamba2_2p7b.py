@@ -1,0 +1,28 @@
+"""mamba2-2.7b — attention-free SSM with SSD (state-space duality).
+[arXiv:2405.21060]
+64L d_model=2560 (attn-free) vocab=50280, ssm_state=128.
+d_inner = 2*2560 = 5120, 80 SSD heads of dim 64.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attention_type="none",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    ssm_ngroups=1,
+    tie_embeddings=True,
+    norm_eps=1e-5,
+)

@@ -1,0 +1,28 @@
+"""qwen2-vl-7b — VLM backbone with M-RoPE, dynamic resolution.
+[arXiv:2409.12191]
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+The vision frontend (ViT + projector) is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings of shape
+(batch, frontend_seq, d_model) plus (t, h, w) position triplets for M-RoPE.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    rope_theta=1000000.0,
+    use_qkv_bias=True,
+    act="silu",
+    modality="vision",
+    frontend_seq=256,                 # stubbed ViT patch embeddings per image
+    mrope_sections=(16, 24, 24),      # t/h/w rotary sections (sum = head_dim/2)
+)

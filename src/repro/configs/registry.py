@@ -1,0 +1,108 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Maps the assigned architecture ids to their ``ModelConfig``s, carries the
+Pick-and-Spin model-tier assignment used by the router (the paper's model
+pool maps onto the assigned pool; see DESIGN.md §4), and records which
+input shapes each arch supports (``long_500k`` skips per DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import (
+    command_r_plus_104b,
+    deepseek_moe_16b,
+    deepseek_v2_236b,
+    glm4_9b,
+    mamba2_2p7b,
+    phi3_medium_14b,
+    qwen2_vl_7b,
+    seamless_m4t_medium,
+    smollm_360m,
+    zamba2_1p2b,
+)
+
+ARCHS: Dict[str, ModelConfig] = {
+    "seamless-m4t-medium": seamless_m4t_medium.CONFIG,
+    "command-r-plus-104b": command_r_plus_104b.CONFIG,
+    "qwen2-vl-7b": qwen2_vl_7b.CONFIG,
+    "mamba2-2.7b": mamba2_2p7b.CONFIG,
+    "zamba2-1.2b": zamba2_1p2b.CONFIG,
+    "phi3-medium-14b": phi3_medium_14b.CONFIG,
+    "deepseek-moe-16b": deepseek_moe_16b.CONFIG,
+    "glm4-9b": glm4_9b.CONFIG,
+    "smollm-360m": smollm_360m.CONFIG,
+    "deepseek-v2-236b": deepseek_v2_236b.CONFIG,
+}
+
+# Pick-and-Spin model tiers (router target classes). The paper's pool
+# (Gemma-3-27B / Llama-3-90B / Qwen-3-235B / DeepSeek-R1-685B) maps onto
+# the assigned pool by capacity.
+MODEL_TIERS: Dict[str, str] = {
+    "smollm-360m": "small",
+    "zamba2-1.2b": "small",
+    "mamba2-2.7b": "small",
+    "qwen2-vl-7b": "medium",
+    "glm4-9b": "medium",
+    "phi3-medium-14b": "medium",
+    "deepseek-moe-16b": "medium",
+    "seamless-m4t-medium": "medium",
+    "command-r-plus-104b": "large",
+    "deepseek-v2-236b": "large",
+}
+
+# long_500k policy (DESIGN.md §4):
+#   native  — sub-quadratic decode as-is (SSM / hybrid w/ windowed shared attn)
+#   sw      — runs under the sliding-window KV variant (ring buffer, 8192)
+#   skip    — out of family distribution (enc-dec speech model)
+LONG_CONTEXT_MODE: Dict[str, str] = {
+    "mamba2-2.7b": "native",
+    "zamba2-1.2b": "native",
+    "smollm-360m": "sw",
+    "phi3-medium-14b": "sw",
+    "glm4-9b": "sw",
+    "qwen2-vl-7b": "sw",
+    "command-r-plus-104b": "sw",
+    "deepseek-moe-16b": "sw",
+    "deepseek-v2-236b": "sw",
+    "seamless-m4t-medium": "skip",
+}
+
+SLIDING_WINDOW = 8192
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_config_for_shape(arch: str, shape: str) -> ModelConfig:
+    """Config adjusted for an input shape (sliding-window for long_500k)."""
+    cfg = get_config(arch)
+    if shape == "long_500k":
+        mode = LONG_CONTEXT_MODE[arch]
+        if mode == "skip":
+            raise ValueError(f"{arch} skips long_500k (see DESIGN.md)")
+        if mode == "sw":
+            cfg = cfg.with_sliding_window(SLIDING_WINDOW)
+        if mode == "native" and cfg.family == "hybrid":
+            cfg = cfg.with_sliding_window(SLIDING_WINDOW)
+    return cfg
+
+
+def supported_shapes(arch: str) -> List[InputShape]:
+    out = []
+    for name, shape in INPUT_SHAPES.items():
+        if name == "long_500k" and LONG_CONTEXT_MODE[arch] == "skip":
+            continue
+        out.append(shape)
+    return out
+
+
+def all_pairs():
+    """Every (arch, shape) combination the dry-run must pass."""
+    for arch in ARCHS:
+        for shape in supported_shapes(arch):
+            yield arch, shape

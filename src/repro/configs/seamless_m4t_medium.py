@@ -1,0 +1,31 @@
+"""seamless-m4t-medium — encoder-decoder multimodal (speech) backbone.
+[arXiv:2308.11596]
+12L (enc) + 12L (dec) d_model=1024 16H (GQA kv=16 = MHA) d_ff=4096
+vocab=256206.
+
+The audio frontend (mel-spectrogram + conformer conv feature extractor)
+is a STUB per the assignment: ``input_specs()`` provides precomputed frame
+embeddings (batch, frames, d_model) consumed by the text-side encoder.
+No decode shapes beyond its family norms: ``long_500k`` is skipped for
+this arch (full-attention enc-dec speech model; see DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    source="arXiv:2308.11596",
+    num_layers=12,           # decoder layers
+    encoder_layers=12,
+    cross_attention=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    rope_theta=10000.0,
+    act="gelu",
+    modality="audio",
+    frontend_seq=1024,       # stubbed audio frame embeddings
+)

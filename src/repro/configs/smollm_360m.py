@@ -1,0 +1,21 @@
+"""smollm-360m — llama-arch small dense model.
+[hf:HuggingFaceTB/SmolLM-135M family, 360M variant]
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    source="hf:HuggingFaceTB/SmolLM-360M",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=2560,
+    vocab_size=49152,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    act="silu",
+)

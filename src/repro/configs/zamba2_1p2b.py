@@ -1,0 +1,26 @@
+"""zamba2-1.2b — hybrid Mamba2 backbone + ONE shared attention block
+applied periodically (weights shared across applications). [arXiv:2411.15242]
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    attn_every=6,            # shared attention block after every 6 mamba layers
+    rope_theta=10000.0,
+    act="gelu",
+)

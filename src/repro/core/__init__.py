@@ -1,0 +1,20 @@
+"""Pick and Spin — the paper's primary contribution.
+
+Pick: routing (keyword / semantic classifier / hybrid) + the multi-
+objective orchestration score (Eq. 1-2). Spin: Algorithm-1 scaling with
+warm pools, cooldowns and scale-to-zero over the service matrix (Eq. 5 /
+Algorithm 2). Plus telemetry, the discrete-event cluster simulator, and
+the real in-process gateway.
+"""
+from repro.core.scoring import (PROFILES, STRATEGIES, MinMaxNormalizer,  # noqa: F401
+                                OperatorProfile, orchestration_score,
+                                routing_efficiency)
+from repro.core.router import (CAPABILITY, HybridRouter, KeywordRouter,  # noqa: F401
+                               RouteDecision, SemanticRouter, relevance)
+from repro.core.registry import ServiceEntry, ServiceRegistry  # noqa: F401
+from repro.core.telemetry import Telemetry  # noqa: F401
+from repro.core.orchestrator import Orchestrator, SpinConfig  # noqa: F401
+from repro.core.policies import (POLICIES, LatencyOnlyPolicy,  # noqa: F401
+                                 MultiObjectivePolicy, RandomPolicy)
+from repro.core.simulator import (ClusterSimulator, SimConfig, SimReport,  # noqa: F401
+                                  poisson_arrivals)

@@ -1,0 +1,108 @@
+"""Reinforcement-based routing — the paper's stated FUTURE WORK
+("Future work will explore reinforcement based routing for adaptive
+decision making"), implemented as a Thompson-sampling contextual bandit.
+
+Context  = the router's predicted complexity tier (low/medium/high).
+Arms     = model tiers (small/medium/large).
+Reward   = request success (Bernoulli), optionally cost-discounted.
+
+Per (context, arm) we keep a Beta(alpha, beta) posterior; selection samples
+from each posterior and routes to the argmax arm's best service (within-arm
+tie-break by predicted latency). Success/failure feedback flows back from
+the simulator's completion events — the same closed control loop the paper
+draws in Fig. 1, now learning the CAPABILITY structure online instead of
+assuming it.
+
+This subsumes the static capability matrix: with enough traffic the
+posterior means converge to the true tier-match success rates, and the
+router adapts when the pool or workload drifts (e.g. a model gets
+fine-tuned, a benchmark mix shifts).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policies import Selection, SelectionPolicy
+from repro.core.router import RouteDecision, relevance
+from repro.data.benchmarks import TIERS
+
+ARMS = ("small", "medium", "large")
+
+
+@dataclass
+class BetaArm:
+    alpha: float = 1.0
+    beta: float = 1.0
+
+    def sample(self, rng) -> float:
+        return float(rng.beta(self.alpha, self.beta))
+
+    def update(self, success: bool, weight: float = 1.0) -> None:
+        if success:
+            self.alpha += weight
+        else:
+            self.beta += weight
+
+    @property
+    def mean(self) -> float:
+        return self.alpha / (self.alpha + self.beta)
+
+
+class BanditPolicy(SelectionPolicy):
+    """Thompson-sampling tier selection + latency tie-break within tier.
+
+    ``cost_penalty`` discounts each arm's sampled success rate by the
+    arm's normalized cost, trading accuracy for spend like the paper's mu
+    preference — but learned, not configured.
+    """
+    name = "bandit"
+
+    def __init__(self, registry, seed: int = 0, cost_penalty: float = 0.0,
+                 require_capacity: bool = True):
+        super().__init__(registry, seed, require_capacity)
+        self.cost_penalty = cost_penalty
+        self.posteriors: Dict[Tuple[str, str], BetaArm] = defaultdict(BetaArm)
+        self.n_feedback = 0
+
+    # -- selection ---------------------------------------------------------
+    def select(self, decision: RouteDecision, prompt_tokens: int,
+               out_tokens: int, profile) -> Selection:
+        ctx = decision.tier
+        ents = self._viable(require_capacity=True)
+        by_tier = {}
+        for e in ents:
+            by_tier.setdefault(e.tier, []).append(e)
+        # Thompson sample per available arm
+        best_arm, best_draw = None, -1e9
+        for arm, arm_ents in by_tier.items():
+            draw = self.posteriors[(ctx, arm)].sample(self.rng)
+            if self.cost_penalty:
+                chips = min(e.cost.chips for e in arm_ents)
+                draw -= self.cost_penalty * np.log1p(chips) / 10.0
+            if draw > best_draw:
+                best_arm, best_draw = arm, draw
+        # within the arm: fastest predicted service
+        best, best_lat, best_cost = None, float("inf"), 0.0
+        for e in by_tier[best_arm]:
+            lat, cost = self._predict(e, prompt_tokens, out_tokens)
+            if lat < best_lat:
+                best, best_lat, best_cost = e, lat, cost
+        return Selection(best, float(best_draw), best_lat, best_cost,
+                         relevance(decision, best.tier))
+
+    # -- closed-loop feedback ------------------------------------------------
+    def feedback(self, context_tier: str, model_tier: str,
+                 success: bool) -> None:
+        self.posteriors[(context_tier, model_tier)].update(success)
+        self.n_feedback += 1
+
+    def learned_capability(self) -> Dict[str, Dict[str, float]]:
+        """Posterior means in CAPABILITY-matrix layout (for inspection)."""
+        out = {a: {} for a in ARMS}
+        for (ctx, arm), post in self.posteriors.items():
+            out.setdefault(arm, {})[ctx] = post.mean
+        return out

@@ -1,0 +1,97 @@
+"""Physics-grounded cost model for every (arch x backend) service instance.
+
+The simulator needs TTFT / tokens-per-second / $ / cold-start numbers for
+models far too large to execute on this CPU. We derive them from first
+principles on the TPU v5e target (the same constants the roofline module
+uses) instead of inventing them:
+
+  * decode step time  = max(compute, memory) roofline on ACTIVE params
+  * prefill time      = 2 * N_active * prompt_len / (chips * peak * MFU)
+  * replica size      = ceil(bytes(params) / (HBM_per_chip * budget)) chips
+  * cold start        = weight load from PVC + program compile + warmup
+  * cost              = chip_seconds * $/chip-hour
+
+Backend profiles multiply these base numbers (serving/backend.py).
+Small archs additionally get CPU-measured constants when the real engine
+runs them (core/gateway.py feeds telemetry back in — the paper's closed
+control loop).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.serving.backend import BackendProfile
+
+# TPU v5e hardware constants (shared with repro/roofline)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+HBM_BYTES = 16e9             # per chip
+ICI_BW = 50e9                # bytes/s per link
+USD_PER_CHIP_HOUR = 1.20     # on-demand v5e list-ish price
+PVC_LOAD_BW = 2.0e9          # bytes/s weight streaming from PVC
+COMPILE_S = 25.0             # program load+compile on activation
+WARM_ACTIVATE_S = 1.5        # warm pool -> active
+MFU_PREFILL = 0.45           # achievable prefill efficiency
+MBU_DECODE = 0.60            # achievable decode memory-bandwidth util
+
+
+@dataclass(frozen=True)
+class InstanceCost:
+    arch: str
+    backend: str
+    chips: int
+    ttft_base_s: float         # prefill time for a reference 512-token prompt
+    tokens_per_s: float        # decode throughput per replica (full batch)
+    tokens_per_s_single: float # decode speed for a single stream
+    cold_start_s: float        # scale-0 -> active
+    warm_start_s: float        # warm -> active
+    usd_per_s: float           # replica cost while active
+    hbm_bytes: int
+
+
+def instance_cost(cfg: ModelConfig, backend: BackendProfile,
+                  ref_prompt: int = 512) -> InstanceCost:
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    bytes_total = 2 * n_total                     # bf16 weights
+    chips = max(1, math.ceil(bytes_total * backend.mem_mult / (HBM_BYTES * 0.65)))
+    # round to a power of two (mesh slice)
+    chips = 1 << max(0, math.ceil(math.log2(chips)))
+
+    # decode: memory-bound on active params (weights streamed per token)
+    step_mem = 2 * n_active
+    step_compute = 2 * n_active
+    t_step = max(step_mem / (chips * HBM_BW * MBU_DECODE),
+                 step_compute / (chips * PEAK_FLOPS * 0.5))
+    tps_single = 1.0 / t_step
+    # batched decode amortizes weight streaming; tps_mult captures the
+    # backend's batching efficiency
+    tokens_per_s = tps_single * backend.max_batch * 0.45 * backend.tps_mult
+
+    ttft = (2 * n_active * ref_prompt) / (chips * PEAK_FLOPS * MFU_PREFILL)
+    ttft *= backend.ttft_mult
+
+    cold = bytes_total / (PVC_LOAD_BW * max(1, chips // 4)) + COMPILE_S
+    usd_per_s = chips * USD_PER_CHIP_HOUR / 3600.0
+    return InstanceCost(
+        arch=cfg.name, backend=backend.name, chips=chips,
+        ttft_base_s=ttft, tokens_per_s=tokens_per_s,
+        tokens_per_s_single=tps_single, cold_start_s=cold,
+        warm_start_s=WARM_ACTIVATE_S, usd_per_s=usd_per_s,
+        hbm_bytes=int(bytes_total))
+
+
+def predict_latency(ic: InstanceCost, prompt_tokens: int, out_tokens: int,
+                    queue_s: float = 0.0, batch_share: float = 1.0) -> float:
+    """End-to-end latency estimate for one request on an ACTIVE replica."""
+    ttft = ic.ttft_base_s * max(1, prompt_tokens) / 512.0
+    decode = out_tokens / max(ic.tokens_per_s_single * batch_share, 1e-6)
+    return queue_s + ttft + decode
+
+
+def predict_cost(ic: InstanceCost, latency_s: float,
+                 batch_share: float = 1.0) -> float:
+    """USD attributed to one request (replica cost / concurrent batch)."""
+    return ic.usd_per_s * latency_s * batch_share

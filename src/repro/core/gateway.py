@@ -1,0 +1,133 @@
+"""API Gateway — the real (non-simulated) Pick-and-Spin path.
+
+Wires Router -> Registry -> Policy (Alg. 2) -> Orchestrator lifecycle ->
+real ``InferenceEngine`` instances executing reduced models on this host.
+Model "spin-up" here is genuinely expensive (param init/load + XLA compile),
+so cold starts, warm pools and scale-to-zero are measured, not modeled —
+this is the calibration source for the simulator's constants on small
+archs, and the end-to-end serving example.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.policies import MultiObjectivePolicy, SelectionPolicy
+from repro.core.registry import ServiceRegistry
+from repro.core.router import KeywordRouter, RouteDecision
+from repro.core.scoring import PROFILES, OperatorProfile
+from repro.core.telemetry import Telemetry
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import init_model
+from repro.serving import (BACKENDS, InferenceEngine, Request,
+                           SamplingParams)
+
+import jax
+
+
+@dataclass
+class GatewayResult:
+    text_prompt: str
+    model: str
+    backend: str
+    tier: str
+    new_tokens: List[int]
+    ttft_s: float
+    latency_s: float
+    cold_start_s: float
+    completed: bool
+
+
+class Gateway:
+    def __init__(self, models: Dict[str, ModelConfig], router=None,
+                 policy_cls=MultiObjectivePolicy,
+                 profile: OperatorProfile = PROFILES["balanced"],
+                 backends: Tuple[str, ...] = ("trt",),
+                 max_seq: int = 256, seed: int = 0,
+                 cost_configs: Dict[str, ModelConfig] = None):
+        """``models`` are what EXECUTES (reduced on CPU); ``cost_configs``
+        (default: the full assigned configs with the same names) drive the
+        registry's production cost model, so tier economics — the reason
+        Pick exists — stay realistic even when stand-in models serve."""
+        from repro.configs.registry import ARCHS as _FULL
+        self.models = models
+        self.router = router or KeywordRouter()
+        cost_cfgs = cost_configs or {
+            name: _FULL.get(name.replace("-smoke", ""), cfg)
+            for name, cfg in models.items()}
+        self.registry = ServiceRegistry(cost_cfgs, backends)
+        # scale-from-zero on route: cold start priced into the prediction
+        self.policy: SelectionPolicy = policy_cls(self.registry, seed,
+                                                  require_capacity=False)
+        self.profile = profile
+        self.telemetry = Telemetry()
+        self.max_seq = max_seq
+        self.tok = ByteTokenizer()
+        self._engines: Dict[Tuple[str, str], InferenceEngine] = {}
+        self._params_cache: Dict[str, dict] = {}      # "warm" weights
+        self.cold_starts: List[Tuple[str, float]] = []
+        self._uid = 0
+
+    # -- lifecycle ("Spin") ------------------------------------------------
+    def _spin_up(self, model: str, backend: str) -> InferenceEngine:
+        key = (model, backend)
+        if key in self._engines:
+            return self._engines[key]
+        t0 = time.perf_counter()
+        cfg = self.models[model]
+        warm = model in self._params_cache
+        if not warm:
+            self._params_cache[model] = init_model(cfg, jax.random.PRNGKey(0))
+        eng = InferenceEngine(cfg, self._params_cache[model],
+                              BACKENDS[backend], max_seq=self.max_seq)
+        # trigger compile (the dominant real cold-start cost)
+        eng.run([Request(uid=-1, tokens=[1, 2, 3],
+                         sampling=SamplingParams(max_new_tokens=2))])
+        cold = time.perf_counter() - t0
+        self.cold_starts.append((f"{model}/{backend}/"
+                                 f"{'warm' if warm else 'cold'}", cold))
+        self._engines[key] = eng
+        self.registry.entry(model, backend).replicas = 1
+        return eng
+
+    def scale_to_zero(self, model: str, backend: str, keep_warm: bool = True
+                      ) -> None:
+        key = (model, backend)
+        if key in self._engines:
+            del self._engines[key]
+            self.registry.entry(model, backend).replicas = 0
+            if not keep_warm:
+                self._params_cache.pop(model, None)
+
+    # -- request path ("Pick" -> serve) -------------------------------------
+    def handle(self, text: str, max_new_tokens: int = 16,
+               deadline_s: Optional[float] = None) -> GatewayResult:
+        t_arrive = time.perf_counter()
+        decision = self.router.route(text)
+        tokens = self.tok.encode(text)
+        sel = self.policy.select(decision, len(tokens), max_new_tokens,
+                                 self.profile)
+        model, backend = sel.entry.model, sel.entry.backend
+        self.telemetry.record_request(model, t_arrive)
+
+        had_engine = (model, backend) in self._engines
+        eng = self._spin_up(model, backend)
+        cold = 0.0 if had_engine else self.cold_starts[-1][1]
+
+        cfg = self.models[model]
+        req = Request(uid=self._uid, arrival_t=t_arrive,
+                      tokens=[t % cfg.vocab_size for t in tokens],
+                      sampling=SamplingParams(max_new_tokens=max_new_tokens),
+                      deadline_s=deadline_s)
+        self._uid += 1
+        res = eng.run([req])[0]
+        self.telemetry.record_latency(model, time.perf_counter(), res.latency)
+        return GatewayResult(
+            text_prompt=text, model=model, backend=backend,
+            tier=sel.entry.tier, new_tokens=res.new_tokens,
+            ttft_s=res.ttft, latency_s=res.latency, cold_start_s=cold,
+            completed=res.completed)

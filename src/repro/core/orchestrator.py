@@ -1,0 +1,120 @@
+"""Spin — orchestration-aware scaling (paper Algorithm 1).
+
+Verbatim implementation of the paper's loop:
+
+    for each model m:
+        r_m    <- GetAvgRequestRate(m, w)          # telemetry, w = 5 min
+        lat_m  <- GetAvgLatency(m)
+        target <- ceil(r_m * lat_m / Concurrency)  # Little's Law
+        min_warm <- WarmPoolSize(ModelTier(m))
+        if target > current and CooldownExpired(): scale(m, max(target, min_warm))
+        elif IdleTime(m) > tau:                     scale(m, max(0, min_warm))
+
+plus the lifecycle pieces the paper describes around it: warm pools per
+tier, cooldown windows against oscillation, scale-to-zero for idle models,
+and cold/warm start latencies on activation. ``scale`` is a callback so the
+same orchestrator drives both the discrete-event simulator and the real
+in-process gateway.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.registry import ServiceRegistry
+from repro.core.telemetry import Telemetry
+from repro.serving.backend import BACKENDS
+
+# warm-pool sizes per model tier (paper: "maintains warm pools for
+# frequently accessed models"); small models are cheap to keep warm.
+WARM_POOL = {"small": 1, "medium": 1, "large": 0}
+
+
+@dataclass
+class SpinConfig:
+    window_s: float = 300.0        # telemetry window w
+    cooldown_s: float = 30.0       # CooldownExpired()
+    idle_tau_s: float = 120.0      # IdleTime threshold tau
+    max_replicas: int = 8
+    tick_s: float = 5.0            # control-loop period
+    scale_to_zero: bool = True     # PS(auto); False reproduces PS(base)
+    warm_pool: Dict[str, int] = field(default_factory=lambda: dict(WARM_POOL))
+
+
+class Orchestrator:
+    def __init__(self, registry: ServiceRegistry, telemetry: Telemetry,
+                 cfg: SpinConfig = SpinConfig(),
+                 scale_cb: Optional[Callable] = None):
+        self.reg = registry
+        self.tel = telemetry
+        self.cfg = cfg
+        self.scale_cb = scale_cb          # (model, backend, new_replicas, now)
+        self._last_scale_t: Dict[str, float] = {}
+
+    # -- Algorithm 1 ---------------------------------------------------------
+    def tick(self, now: float) -> Dict[str, int]:
+        """One control-loop pass. Returns {model: new replica target}."""
+        decisions: Dict[str, int] = {}
+        for model in self.reg.models:
+            r_m = self.tel.request_rate(model, now)               # line 2
+            lat_m = self.tel.avg_latency(model, now)              # line 3
+            # Concurrency: requests a replica serves at once (its backend's
+            # batch slots); use the max across this model's columns.
+            conc = max(BACKENDS[b].max_batch for b in self.reg.backends)
+            target = math.ceil(r_m * lat_m / conc)                # line 4
+            # stranded-queue guard: work waiting on a scaled-down service
+            # whose arrival telemetry has aged out of the window must still
+            # pull capacity (Little's law sees rate 0 for it)
+            queued = self.reg.model_queued(model)
+            if queued:
+                target = max(target, math.ceil(queued / conc))
+            current = self.reg.model_replicas(model)              # line 5
+            min_warm = self.cfg.warm_pool.get(
+                self._tier(model), 0)                             # line 6
+            if target > current and self._cooldown_expired(model, now):  # 7
+                new = min(max(target, min_warm), self.cfg.max_replicas)
+                self._scale(model, new, now)                      # line 8
+                decisions[model] = new
+            elif (self.tel.idle_time(model, now) > self.cfg.idle_tau_s
+                  and self.reg.model_active(model) == 0):         # line 9
+                # IdleTime alone (arrivals) would flap a model that is
+                # still DRAINING queued work — require no in-flight too
+                floor = min_warm if self.cfg.scale_to_zero else max(1, min_warm)
+                new = max(0, floor)                               # line 10
+                if new != current:
+                    self._scale(model, new, now)
+                    decisions[model] = new
+        return decisions
+
+    def active_models(self):
+        """Return set A = {m : replicas(m) > 0} (Algorithm 1 line 13)."""
+        return {m for m in self.reg.models if self.reg.model_replicas(m) > 0}
+
+    # -- internals -------------------------------------------------------
+    def _tier(self, model: str) -> str:
+        for e in self.reg.entries():
+            if e.model == model:
+                return e.tier
+        return "medium"
+
+    def _cooldown_expired(self, model: str, now: float) -> bool:
+        return now - self._last_scale_t.get(model, -1e9) >= self.cfg.cooldown_s
+
+    def _scale(self, model: str, replicas: int, now: float) -> None:
+        """KubernetesScale(m, n): distribute replicas across the model's
+        backend columns, preferring the latency backend for the first
+        replica and the throughput backend for capacity."""
+        self._last_scale_t[model] = now
+        order = [b for b in ("trt", "vllm", "tgi") if b in self.reg.backends]
+        order += [b for b in self.reg.backends if b not in order]
+        per = {b: 0 for b in self.reg.backends}
+        for i in range(replicas):
+            per[order[min(i, len(order) - 1) % len(order)]] += 1
+        for b in self.reg.backends:
+            e = self.reg.entry(model, b)
+            e.accrue(now)
+            if self.scale_cb:
+                self.scale_cb(model, b, per[b], now)
+            else:
+                e.replicas = per[b]

@@ -1,0 +1,135 @@
+"""Matrix selection and routing — paper Algorithm 2 + baselines.
+
+Given a prompt's RouteDecision and the service matrix, select (x*, y*) =
+argmax f(p, S_xy). Three strategies, matching the paper's Table 3:
+
+  random          — uniform over healthy services (baseline)
+  latency_only    — argmin predicted latency (healthy, has capacity)
+  multi_objective — Algorithm 2 with the Eq. 2 score
+
+The policies only READ the registry; queuing/cold-start consequences are
+the simulator's (or gateway's) business.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import predict_cost, predict_latency
+from repro.core.registry import ServiceEntry, ServiceRegistry
+from repro.core.router import RouteDecision, relevance
+from repro.core.scoring import MinMaxNormalizer, OperatorProfile, \
+    orchestration_score
+
+
+@dataclass
+class Selection:
+    entry: ServiceEntry
+    score: float
+    pred_latency: float
+    pred_cost: float
+    relevance: float
+
+
+class SelectionPolicy:
+    name = "base"
+
+    def __init__(self, registry: ServiceRegistry, seed: int = 0,
+                 require_capacity: bool = True):
+        """``require_capacity=False`` lets the policy pick scaled-to-zero
+        services (their cold start enters the latency prediction) — the
+        gateway's scale-from-zero-on-route mode."""
+        self.reg = registry
+        self.rng = np.random.RandomState(seed)
+        self.require_capacity = require_capacity
+        self.t_norm = MinMaxNormalizer(0.0, 1.0)
+        self.c_norm = MinMaxNormalizer(0.0, 1e-4)
+
+    def _viable(self, require_capacity: bool) -> List[ServiceEntry]:
+        require_capacity = require_capacity and self.require_capacity
+        ents = [e for e in self.reg.entries() if e.healthy]
+        if require_capacity:
+            up = [e for e in ents if e.has_capacity()]
+            if up:
+                return up
+        return ents
+
+    def _predict(self, e: ServiceEntry, prompt_tokens: int, out_tokens: int
+                 ) -> Tuple[float, float]:
+        queue = 0.0
+        if e.replicas == 0:
+            queue += e.cost.cold_start_s if e.warm == 0 else e.cost.warm_start_s
+        if e.queued or not e.has_capacity():
+            # waiting work ahead of us, drained at the fleet's batched rate
+            fleet_tps = e.cost.tokens_per_s * max(e.replicas, 1)
+            queue += (e.queued + 1) * out_tokens / max(fleet_tps, 1e-6)
+        # mild batching penalty mirrors the simulator's decode model
+        from repro.serving.backend import BACKENDS
+        nb = max(1, min(e.active_requests + 1, BACKENDS[e.backend].max_batch))
+        penalty = 1.0 + 0.25 * (nb - 1) / BACKENDS[e.backend].max_batch
+        lat = predict_latency(e.cost, prompt_tokens, out_tokens, queue,
+                              1.0 / penalty)
+        cost = predict_cost(e.cost, lat - queue, 1.0 / nb)
+        self.t_norm.update(lat)
+        self.c_norm.update(cost)
+        return lat, cost
+
+    def select(self, decision: RouteDecision, prompt_tokens: int,
+               out_tokens: int, profile: OperatorProfile) -> Selection:
+        raise NotImplementedError
+
+
+class RandomPolicy(SelectionPolicy):
+    name = "random"
+
+    def select(self, decision, prompt_tokens, out_tokens, profile) -> Selection:
+        ents = self._viable(require_capacity=False)
+        e = ents[self.rng.randint(len(ents))]
+        lat, cost = self._predict(e, prompt_tokens, out_tokens)
+        return Selection(e, 0.0, lat, cost, relevance(decision, e.tier))
+
+
+class LatencyOnlyPolicy(SelectionPolicy):
+    name = "latency_only"
+
+    def select(self, decision, prompt_tokens, out_tokens, profile) -> Selection:
+        best, best_lat, best_cost = None, float("inf"), 0.0
+        for e in self._viable(require_capacity=True):
+            lat, cost = self._predict(e, prompt_tokens, out_tokens)
+            if lat < best_lat:
+                best, best_lat, best_cost = e, lat, cost
+        return Selection(best, 0.0, best_lat, best_cost,
+                         relevance(decision, best.tier))
+
+
+class MultiObjectivePolicy(SelectionPolicy):
+    """Algorithm 2: evaluate f over every healthy (model x backend) pair."""
+    name = "multi_objective"
+
+    def select(self, decision, prompt_tokens, out_tokens, profile) -> Selection:
+        # two passes: predict ALL candidates first so the min-max bounds
+        # cover this round before any score is computed (order-independent)
+        cands = []
+        for e in self._viable(require_capacity=True):         # line 3 (healthy)
+            r = relevance(decision, e.tier)                   # R(p, L_x)
+            lat, cost = self._predict(e, prompt_tokens, out_tokens)
+            cands.append((e, r, lat, cost))
+        best: Optional[Selection] = None
+        for e, r, lat, cost in cands:
+            f = orchestration_score(r, lat, cost, profile,
+                                    self.t_norm, self.c_norm)  # Eq. 2 (line 5)
+            if best is None or f > best.score:
+                best = Selection(e, f, lat, cost, r)           # line 7 argmax
+        return best
+
+
+def _load_policies():
+    from repro.core.bandit import BanditPolicy
+    return {p.name: p for p in
+            (RandomPolicy, LatencyOnlyPolicy, MultiObjectivePolicy,
+             BanditPolicy)}
+
+
+POLICIES = _load_policies()

@@ -1,0 +1,85 @@
+"""Service Registry: the deployment matrix M in R^{L x I} (paper Eq. 5).
+
+Rows are model families, columns are inference backends; each element is a
+``ServiceEntry`` (cost model + live replica/health state). Both the
+orchestrator (Alg. 1) and the selection policies (Alg. 2) read it; scale
+actions write it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import MODEL_TIERS
+from repro.core.costmodel import InstanceCost, instance_cost
+from repro.serving.backend import BACKENDS, BackendProfile
+
+
+@dataclass
+class ServiceEntry:
+    model: str
+    backend: str
+    tier: str                       # small | medium | large
+    cost: InstanceCost
+    replicas: int = 0               # active replicas
+    warm: int = 0                   # warm (params resident, not serving)
+    healthy: bool = True
+    active_requests: int = 0
+    queued: int = 0                 # waiting in this service's FIFO
+    # bookkeeping for cost integration (chip-seconds)
+    last_change_t: float = 0.0
+    chip_seconds: float = 0.0
+
+    @property
+    def capacity(self) -> int:
+        return self.replicas * BACKENDS[self.backend].max_batch
+
+    def has_capacity(self) -> bool:
+        return self.healthy and self.replicas > 0 and \
+            self.active_requests < self.capacity
+
+    def accrue(self, now: float) -> None:
+        """Integrate chip-seconds up to ``now`` (warm pools bill too)."""
+        dt = max(0.0, now - self.last_change_t)
+        self.chip_seconds += dt * self.cost.chips * (self.replicas + self.warm)
+        self.last_change_t = now
+
+
+class ServiceRegistry:
+    def __init__(self, models: Dict[str, ModelConfig],
+                 backends: Optional[Iterable[str]] = None):
+        self.models = models
+        self.backends = list(backends or BACKENDS)
+        self.matrix: Dict[Tuple[str, str], ServiceEntry] = {}
+        for name, cfg in models.items():
+            for b in self.backends:
+                self.matrix[(name, b)] = ServiceEntry(
+                    model=name, backend=b, tier=MODEL_TIERS[name],
+                    cost=instance_cost(cfg, BACKENDS[b]))
+
+    def entries(self) -> List[ServiceEntry]:
+        return list(self.matrix.values())
+
+    def entry(self, model: str, backend: str) -> ServiceEntry:
+        return self.matrix[(model, backend)]
+
+    def model_replicas(self, model: str) -> int:
+        return sum(e.replicas for (m, _), e in self.matrix.items() if m == model)
+
+    def model_active(self, model: str) -> int:
+        """In-flight requests across the model's backends."""
+        return sum(e.active_requests for (m, _), e in self.matrix.items()
+                   if m == model)
+
+    def model_queued(self, model: str) -> int:
+        return sum(e.queued for (m, _), e in self.matrix.items()
+                   if m == model)
+
+    def by_tier(self, tier: str) -> List[ServiceEntry]:
+        return [e for e in self.entries() if e.tier == tier]
+
+    def total_chip_seconds(self, now: float) -> float:
+        for e in self.entries():
+            e.accrue(now)
+        return sum(e.chip_seconds for e in self.entries())

@@ -1,0 +1,87 @@
+"""The paper's multi-objective orchestration score (Eq. 1–2).
+
+    f(p, S_xy) = w_R * R_hat(p, L_x) + w_T * T_hat(S_xy) + w_C * C_hat(S_xy)
+
+with R_hat/T_hat/C_hat normalized into [0, 1] (min–max over historical
+system statistics) and (w_R, w_T, w_C) the normalized operator preference
+weights. f is a convex combination, so f in [0, 1] by construction — the
+property tests assert exactly this invariant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+
+@dataclass(frozen=True)
+class OperatorProfile:
+    """Non-negative preference parameters (alpha, lambda, mu) — paper §3."""
+    name: str
+    alpha: float     # relevance / quality
+    lam: float       # latency
+    mu: float        # cost
+
+    @property
+    def weights(self):
+        s = self.alpha + self.lam + self.mu
+        return (self.alpha / s, self.lam / s, self.mu / s)
+
+
+# Paper's four operator profiles (grid-searched on 3,000 validation prompts)
+PROFILES: Dict[str, OperatorProfile] = {
+    "quality":  OperatorProfile("quality",  1.0, 0.1, 0.1),
+    "cost":     OperatorProfile("cost",     0.3, 0.2, 0.8),
+    "speed":    OperatorProfile("speed",    0.3, 0.8, 0.2),
+    "balanced": OperatorProfile("balanced", 0.5, 0.3, 0.3),
+}
+# the paper's five inference strategies = baseline + the four profiles
+STRATEGIES = ("baseline", "quality", "cost", "speed", "balanced")
+
+
+class MinMaxNormalizer:
+    """Distributional min–max normalization over historical statistics.
+
+    norm(v) maps into [0, 1]; T_hat and C_hat are 1 - norm(.) so that
+    HIGHER is BETTER for every component (paper Eq. block after Eq. 1).
+    Bounds update online from telemetry; a widening margin guards against
+    early-history collapse (min == max)."""
+
+    def __init__(self, lo: float = 0.0, hi: float = 1.0):
+        self.lo = lo
+        self.hi = hi
+
+    def update(self, value: float) -> None:
+        self.lo = min(self.lo, value)
+        self.hi = max(self.hi, value)
+
+    def update_many(self, values: Sequence[float]) -> None:
+        for v in values:
+            self.update(v)
+
+    def norm(self, value: float) -> float:
+        span = self.hi - self.lo
+        if span <= 0:
+            return 0.0
+        return min(1.0, max(0.0, (value - self.lo) / span))
+
+
+def orchestration_score(
+    relevance: float,          # R_hat(p, L_x) in [0,1]
+    latency_s: float,          # predicted latency for S_xy
+    cost_usd: float,           # predicted cost for S_xy
+    profile: OperatorProfile,
+    t_norm: MinMaxNormalizer,
+    c_norm: MinMaxNormalizer,
+) -> float:
+    w_r, w_t, w_c = profile.weights
+    t_hat = 1.0 - t_norm.norm(latency_s)
+    c_hat = 1.0 - c_norm.norm(cost_usd)
+    f = w_r * relevance + w_t * t_hat + w_c * c_hat
+    assert -1e-9 <= f <= 1 + 1e-9, f
+    return float(min(1.0, max(0.0, f)))
+
+
+def routing_efficiency(acc_routed: float, acc_base: float,
+                       cost_routed: float, cost_base: float) -> float:
+    """Paper Eq. 9: eta = (A_r/A_b) / (C_r/C_b)."""
+    return (acc_routed / acc_base) / (cost_routed / cost_base)

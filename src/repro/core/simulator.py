@@ -1,0 +1,331 @@
+"""Discrete-event cluster simulator for Pick-and-Spin.
+
+Runs the REAL control-plane code — routers (core/router.py), Algorithm 2
+policies (core/policies.py), Algorithm 1 orchestrator (core/orchestrator.py),
+telemetry — against a physics-grounded data plane (core/costmodel.py), so
+the paper's cluster-scale experiments (31k prompts, scale-to-zero dynamics,
+cold starts, 10->1000 qps sweeps) are reproducible on this CPU-only box.
+The data-plane numbers for small archs are cross-checked against the real
+in-process engine (tests/test_gateway.py).
+
+Event kinds: arrival | finish | tick (Alg. 1 control loop) | scale_ready.
+
+Success semantics follow the paper: "success indicates valid completion
+within time and token limits, measuring inference reliability rather than
+task correctness" — a request succeeds iff it finishes before its deadline
+AND its completion is valid, with validity probability
+
+    p = clip(base * (0.215 + cap(tier_m, tier_p))
+                  / (0.215 + cap(medium, tier_p)), .02, .995)
+
+base = the benchmark's Table-1 baseline success rate. The modifier is
+normalized so a MEDIUM-tier model reproduces Table 1 exactly (the paper's
+baseline was its default single-model deployment); smaller models lose on
+hard prompts, larger models gain — see core/router.CAPABILITY.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import predict_latency
+from repro.core.orchestrator import Orchestrator, SpinConfig
+from repro.core.policies import SelectionPolicy
+from repro.core.registry import ServiceEntry, ServiceRegistry
+from repro.core.router import CAPABILITY, RouteDecision
+from repro.core.scoring import OperatorProfile
+from repro.core.telemetry import Telemetry
+from repro.data.benchmarks import Prompt
+from repro.serving.backend import BACKENDS
+
+
+@dataclass
+class SimRequest:
+    rid: int
+    prompt: Prompt
+    decision: RouteDecision
+    arrival: float
+    deadline_s: float
+    entry: Optional[ServiceEntry] = None
+    start: float = 0.0
+    ttft: float = 0.0
+    finish: float = 0.0
+    success: bool = False
+    timed_out: bool = False
+    cost_usd: float = 0.0
+    pred_latency: float = 0.0
+
+
+@dataclass
+class SimReport:
+    requests: List[SimRequest]
+    duration_s: float
+    total_chip_seconds: float
+    busy_chip_seconds: float
+    usd_total: float
+
+    # -- headline metrics ---------------------------------------------------
+    def success_rate(self) -> float:
+        if not self.requests:
+            return 0.0
+        return float(np.mean([r.success for r in self.requests]))
+
+    def latencies(self) -> np.ndarray:
+        return np.asarray([r.finish - r.arrival for r in self.requests
+                           if not r.timed_out] or [0.0])
+
+    def ttfts(self) -> np.ndarray:
+        return np.asarray([r.ttft - r.arrival for r in self.requests
+                           if r.ttft > 0] or [0.0])
+
+    def mean_latency(self) -> float:
+        return float(self.latencies().mean())
+
+    def median_ttft(self) -> float:
+        return float(np.median(self.ttfts()))
+
+    def ttft_percentiles(self) -> Dict[str, float]:
+        t = self.ttfts()
+        return {"p50": float(np.percentile(t, 50)),
+                "p95": float(np.percentile(t, 95)),
+                "p99": float(np.percentile(t, 99))}
+
+    def cost_per_query(self) -> float:
+        """Deployment-level: total cluster spend / queries (Table 4)."""
+        if not self.requests:
+            return 0.0
+        return self.usd_total / len(self.requests)
+
+    def attributed_cost_per_query(self) -> float:
+        """Per-request attributed spend (replica cost shared across its
+        concurrent batch) — the Table-3 'Cost (USD)' semantics: what did
+        THIS query consume, independent of idle allocation."""
+        if not self.requests:
+            return 0.0
+        return float(np.mean([r.cost_usd for r in self.requests]))
+
+    def steady_state(self, warmup_frac: float = 0.25) -> "SimReport":
+        """View excluding the first arrivals (cold-start warmup)."""
+        reqs = sorted(self.requests, key=lambda r: r.arrival)
+        cut = int(len(reqs) * warmup_frac)
+        return SimReport(requests=reqs[cut:], duration_s=self.duration_s,
+                         total_chip_seconds=self.total_chip_seconds,
+                         busy_chip_seconds=self.busy_chip_seconds,
+                         usd_total=self.usd_total)
+
+    def utilization(self) -> float:
+        if self.total_chip_seconds <= 0:
+            return 0.0
+        return min(1.0, self.busy_chip_seconds / self.total_chip_seconds)
+
+    def throughput(self) -> float:
+        done = [r for r in self.requests if r.finish > 0]
+        if not done or self.duration_s <= 0:
+            return 0.0
+        return len(done) / self.duration_s
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n": len(self.requests),
+            "success_rate": self.success_rate(),
+            "mean_latency_s": self.mean_latency(),
+            "median_ttft_s": self.median_ttft(),
+            **{f"ttft_{k}": v for k, v in self.ttft_percentiles().items()},
+            "cost_per_query_usd": self.cost_per_query(),
+            "attr_cost_per_query_usd": self.attributed_cost_per_query(),
+            "gpu_utilization": self.utilization(),
+            "throughput_rps": self.throughput(),
+            "usd_total": self.usd_total,
+        }
+
+
+@dataclass
+class SimConfig:
+    deadline_s: float = 240.0
+    seed: int = 0
+    static: bool = False            # static deployment: fixed replicas, no Spin
+    static_replicas: int = 1
+    spin: SpinConfig = field(default_factory=SpinConfig)
+    failure_detect_s: float = 10.0  # static-deployment fault detection
+
+
+class ClusterSimulator:
+    def __init__(self, registry: ServiceRegistry, policy: SelectionPolicy,
+                 profile: OperatorProfile, cfg: SimConfig = SimConfig()):
+        self.reg = registry
+        self.policy = policy
+        self.profile = profile
+        self.cfg = cfg
+        self.tel = Telemetry(cfg.spin.window_s)
+        self.rng = np.random.RandomState(cfg.seed)
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._queues: Dict[Tuple[str, str], List[SimRequest]] = {
+            k: [] for k in registry.matrix}
+        self._pending_scale: Dict[Tuple[str, str], int] = {}
+        self.busy_chip_seconds = 0.0
+        self.orch: Optional[Orchestrator] = None
+        if not cfg.static:
+            self.orch = Orchestrator(registry, self.tel, cfg.spin,
+                                     scale_cb=self._apply_scale)
+        else:
+            for e in registry.entries():
+                e.replicas = cfg.static_replicas
+                e.last_change_t = 0.0
+
+    # -- event plumbing ------------------------------------------------------
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+
+    # -- scaling --------------------------------------------------------
+    def _apply_scale(self, model: str, backend: str, replicas: int,
+                     now: float) -> None:
+        e = self.reg.entry(model, backend)
+        e.accrue(now)
+        if replicas > e.replicas:
+            delay = e.cost.warm_start_s if e.warm > 0 else e.cost.cold_start_s
+            self._pending_scale[(model, backend)] = replicas
+            self._push(now + delay, "scale_ready", (model, backend))
+        else:
+            # scale down is immediate; keep warm pool if configured
+            tier_warm = self.cfg.spin.warm_pool.get(e.tier, 0)
+            e.warm = max(e.warm, min(tier_warm, e.replicas - replicas))
+            e.replicas = replicas
+
+    def _on_scale_ready(self, key: Tuple[str, str], now: float) -> None:
+        e = self.reg.entry(*key)
+        e.accrue(now)
+        target = self._pending_scale.pop(key, None)
+        if target is not None and target > e.replicas:
+            e.replicas = target
+            e.warm = max(0, e.warm - target)
+        while self._queues[key] and e.has_capacity():
+            self._start(self._queues[key].pop(0), e, now)
+            e.queued = max(0, e.queued - 1)
+
+    # -- request lifecycle -----------------------------------------------
+    def _start(self, req: SimRequest, e: ServiceEntry, now: float) -> None:
+        e.active_requests += 1
+        req.entry = e
+        req.start = now
+        plen = max(8, len(req.prompt.text) // 4)
+        nb = max(1, min(e.active_requests, BACKENDS[e.backend].max_batch))
+        # memory-bound decode: weight streaming dominates, so per-stream
+        # speed degrades only mildly with batch (continuous batching);
+        # replica cost is SHARED across the concurrent streams.
+        batch_penalty = 1.0 + 0.25 * (nb - 1) / BACKENDS[e.backend].max_batch
+        cost_share = 1.0 / nb
+        ttft = e.cost.ttft_base_s * plen / 512.0 + req.decision.overhead_s
+        decode_s = (req.prompt.out_tokens * batch_penalty
+                    / max(e.cost.tokens_per_s_single, 1e-9))
+        req.ttft = now + ttft
+        req.finish = now + ttft + decode_s
+        req.cost_usd = e.cost.usd_per_s * (ttft + decode_s) * cost_share
+        self.busy_chip_seconds += e.cost.chips * (ttft + decode_s) * cost_share
+        self._push(req.finish, "finish", req)
+
+    def _on_finish(self, req: SimRequest, now: float) -> None:
+        self._outstanding = max(0, getattr(self, "_outstanding", 1) - 1)
+        e = req.entry
+        e.active_requests = max(0, e.active_requests - 1)
+        lat = now - req.arrival
+        req.timed_out = lat > req.deadline_s
+        cap = CAPABILITY[e.tier][req.prompt.complexity]
+        cap_med = CAPABILITY["medium"][req.prompt.complexity]
+        p_valid = float(np.clip(
+            req.prompt.base_success * (0.215 + cap) / (0.215 + cap_med),
+            0.02, 0.995))
+        req.success = (not req.timed_out) and (self.rng.rand() < p_valid)
+        if hasattr(self.policy, "feedback"):
+            # closed-loop reward for learning policies (core/bandit.py)
+            self.policy.feedback(req.decision.tier, e.tier, req.success)
+        self.tel.record_latency(e.model, now, lat)
+        key = (e.model, e.backend)
+        while self._queues[key] and e.has_capacity():
+            self._start(self._queues[key].pop(0), e, now)
+            e.queued = max(0, e.queued - 1)
+
+    def _on_arrival(self, req: SimRequest, now: float) -> None:
+        plen = max(8, len(req.prompt.text) // 4)
+        sel = self.policy.select(req.decision, plen, req.prompt.out_tokens,
+                                 self.profile)
+        e = sel.entry
+        req.pred_latency = sel.pred_latency
+        self.tel.record_request(e.model, now)
+        if e.has_capacity():
+            self._start(req, e, now)
+        else:
+            self._queues[(e.model, e.backend)].append(req)
+            e.queued += 1
+            # a queued request on a scaled-to-zero service waits for the
+            # control loop; nothing to do here (Alg. 1 sees the telemetry)
+
+    # -- main loop -------------------------------------------------------
+    def run(self, workload: List[Tuple[float, Prompt, RouteDecision]]
+            ) -> SimReport:
+        reqs: List[SimRequest] = []
+        self._outstanding = len(workload)
+        for i, (t, p, d) in enumerate(workload):
+            r = SimRequest(rid=i, prompt=p, decision=d, arrival=t,
+                           deadline_s=self.cfg.deadline_s)
+            reqs.append(r)
+            self._push(t, "arrival", r)
+        horizon = max(t for t, _, _ in workload) + 1.0 if workload else 0.0
+        if self.orch:
+            tt = 0.0
+            while tt < horizon + 600.0:
+                self._push(tt, "tick")
+                tt += self.cfg.spin.tick_s
+
+        end = 0.0
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            end = max(end, t)
+            if kind == "arrival":
+                self._on_arrival(payload, t)
+            elif kind == "finish":
+                self._on_finish(payload, t)
+            elif kind == "scale_ready":
+                self._on_scale_ready(payload, t)
+            elif kind == "tick":
+                if self.orch and self._outstanding > 0:
+                    self.orch.tick(t)
+                # unstick queues whose services got capacity meanwhile
+                for key, q in self._queues.items():
+                    e = self.reg.entry(*key)
+                    while q and e.has_capacity():
+                        self._start(q.pop(0), e, t)
+                        e.queued = max(0, e.queued - 1)
+        # expire anything still queued
+        for q in self._queues.values():
+            for r in q:
+                r.timed_out = True
+                r.finish = r.arrival + r.deadline_s
+                self._outstanding = max(0, self._outstanding - 1)
+
+        # duration = end of actual serving (idle control ticks continue past
+        # the workload and must not dilute throughput/cost-per-query)
+        serve_end = max((r.finish for r in reqs if r.finish > 0),
+                        default=end)
+        total_cs = self.reg.total_chip_seconds(serve_end)
+        usd = sum(e.chip_seconds for e in self.reg.entries()) / 3600.0 * 1.2
+        return SimReport(requests=reqs, duration_s=serve_end,
+                         total_chip_seconds=total_cs,
+                         busy_chip_seconds=self.busy_chip_seconds,
+                         usd_total=usd)
+
+
+def poisson_arrivals(prompts: List[Prompt], rate_per_s: float, seed: int = 0
+                     ) -> List[Tuple[float, Prompt]]:
+    rng = np.random.RandomState(seed)
+    t = 0.0
+    out = []
+    for p in prompts:
+        t += rng.exponential(1.0 / rate_per_s)
+        out.append((t, p))
+    return out

@@ -1,0 +1,64 @@
+"""Telemetry: sliding-window service statistics (paper Fig. 1 feedback loop).
+
+Feeds Algorithm 1 (request rate + average latency over a window, default
+w = 5 min) and the score normalizers (historical latency/cost bounds).
+Works on either real wall-clock (gateway) or simulated time (simulator).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Tuple
+
+WINDOW_S = 300.0   # paper: w = 5 min
+
+
+class Telemetry:
+    def __init__(self, window_s: float = WINDOW_S):
+        self.window_s = window_s
+        self._requests: Dict[str, Deque[float]] = defaultdict(deque)
+        self._latency: Dict[str, Deque[Tuple[float, float]]] = defaultdict(deque)
+        self._last_seen: Dict[str, float] = {}
+
+    # -- recording ---------------------------------------------------------
+    def record_request(self, model: str, t: float) -> None:
+        self._requests[model].append(t)
+        self._last_seen[model] = t
+        self._gc(model, t)
+
+    def record_latency(self, model: str, t: float, latency_s: float) -> None:
+        self._latency[model].append((t, latency_s))
+        self._gc(model, t)
+
+    def _gc(self, model: str, now: float) -> None:
+        cut = now - self.window_s
+        q = self._requests[model]
+        while q and q[0] < cut:
+            q.popleft()
+        ql = self._latency[model]
+        while ql and ql[0][0] < cut:
+            ql.popleft()
+
+    # -- queries (Algorithm 1 inputs) ---------------------------------------
+    def request_rate(self, model: str, now: float) -> float:
+        """GetAvgRequestRate(m, w): requests/second over the window."""
+        self._gc(model, now)
+        q = self._requests[model]
+        if not q:
+            return 0.0
+        span = max(now - q[0], 1.0)
+        return len(q) / span
+
+    def avg_latency(self, model: str, now: float, default: float = 1.0) -> float:
+        """GetAvgLatency(m)."""
+        self._gc(model, now)
+        ql = self._latency[model]
+        if not ql:
+            return default
+        return sum(v for _, v in ql) / len(ql)
+
+    def idle_time(self, model: str, now: float) -> float:
+        """IdleTime(m): seconds since the last request."""
+        if model not in self._last_seen:
+            return float("inf")
+        return now - self._last_seen[model]

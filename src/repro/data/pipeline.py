@@ -1,0 +1,59 @@
+"""Data pipeline: packed LM batches from the synthetic corpus.
+
+Used by the end-to-end training example (train a ~100M model a few hundred
+steps) and by per-arch smoke tests. Deterministic, seeded, infinite.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.benchmarks import generate_corpus
+from repro.data.tokenizer import ByteTokenizer
+
+
+def lm_batches(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+               n_prompts: int = 4000) -> Iterator[dict]:
+    """Infinite (tokens, labels) batches packed from the synthetic corpus."""
+    tok = ByteTokenizer()
+    corpus = generate_corpus(n_prompts, seed)
+    stream: list = []
+    for p in corpus:
+        stream.extend(tok.encode(p.text, eos=True))
+    stream = np.asarray(stream, np.int64) % cfg.vocab_size
+    rng = np.random.RandomState(seed)
+    n = len(stream) - seq - 1
+    while True:
+        starts = rng.randint(0, n, size=batch)
+        toks = np.stack([stream[s:s + seq] for s in starts])
+        labs = np.stack([stream[s + 1:s + seq + 1] for s in starts])
+        b = {"tokens": jnp.asarray(toks, jnp.int32),
+             "labels": jnp.asarray(labs, jnp.int32)}
+        yield _add_modality(cfg, b, rng)
+
+
+def _add_modality(cfg: ModelConfig, b: dict, rng) -> dict:
+    B, S = b["tokens"].shape
+    if cfg.family == "vlm":
+        F = cfg.frontend_seq
+        b["vision_embeds"] = jnp.asarray(
+            rng.randn(B, F, cfg.d_model).astype(np.float32) * 0.02)
+        # M-RoPE positions: image patches first (t=0, spatial grid), then text
+        g = max(1, int(np.sqrt(F)))
+        t = np.zeros((F,), np.int32)
+        hh = (np.arange(F) // g).astype(np.int32)
+        ww = (np.arange(F) % g).astype(np.int32)
+        img = np.stack([t, hh, ww], -1)
+        text_start = int(hh.max()) + 1
+        txt = np.arange(text_start, text_start + S, dtype=np.int32)
+        txt = np.stack([txt, txt, txt], -1)
+        pos = np.concatenate([img, txt], 0)
+        b["positions"] = jnp.asarray(np.broadcast_to(pos[None], (B, F + S, 3)).copy())
+    if cfg.family == "encdec":
+        F = cfg.frontend_seq
+        b["src_embeds"] = jnp.asarray(
+            rng.randn(B, F, cfg.d_model).astype(np.float32) * 0.02)
+    return b

@@ -1,0 +1,38 @@
+"""Byte-level tokenizer (vocab 256 bytes + 4 specials).
+
+Every assigned arch has vocab >= 512 even in reduced form, so byte ids are
+universally valid. Deterministic, reversible, dependency-free.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+SEP_ID = 259
+VOCAB_SIZE = 260
+
+
+class ByteTokenizer:
+    pad_id = PAD_ID
+    bos_id = BOS_ID
+    eos_id = EOS_ID
+    sep_id = SEP_ID
+    vocab_size = VOCAB_SIZE
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = list(text.encode("utf-8"))
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return ids
+
+    def decode(self, ids: List[int]) -> str:
+        return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+
+def clamp_vocab(ids: List[int], vocab_size: int) -> List[int]:
+    """Fold special ids into range for tiny-vocab smoke models."""
+    return [i % vocab_size for i in ids]

@@ -1,0 +1,242 @@
+"""Declarative sharding rules for every architecture in the zoo.
+
+Strategy (DESIGN.md §5, updated through the §Perf iterations in
+EXPERIMENTS.md):
+  * weights: Megatron-style TP — parallel dim (heads / d_ff / experts /
+    SSD heads / vocab) over ``model``; MoE expert banks keep a secondary
+    ``data`` dim for memory; embeddings are vocab-parallel with a
+    d@data fallback ONLY when the vocab doesn't divide (either-or);
+  * activations: batch over ``data`` (x ``pod``);
+  * KV caches: batch over ``data``; kv-heads over ``model`` when divisible,
+    otherwise the cache SEQUENCE dim over ``model`` (context-parallel
+    decode). MLA latent caches seq-shard over ``model`` by default (§Perf
+    H3: -96% decode collectives). Batch=1 long-context decode shards the
+    sequence dim over ``data`` too.
+  * every rule passes through divisibility pruning, so all ten
+    heterogeneous archs lower without per-arch special cases.
+
+Rules match on the parameter path (joined with '/') with trailing-ndim
+awareness; specs are padded with leading None for stacked (scanned) layers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+# (regex on path, ndim of the TRAILING dims the spec describes, spec)
+# first match wins.
+#
+# Baseline scheme: Megatron-style tensor parallelism — the "parallel" dim
+# (heads / d_ff / experts / SSD heads / vocab) shards over ``model``; the
+# contraction dim stays unsharded so forward matmuls produce at most ONE
+# partial-sum all-reduce per block (wo / w_down row-parallel layers).
+# MoE expert banks additionally shard their FFN width over ``data`` for
+# memory (236B must fit 16 GB/chip).
+#
+# NOTE (§Perf iteration 0, recorded in EXPERIMENTS.md): the first version
+# of these rules was FSDP-style 2D weight sharding (second weight dim over
+# ``data``). XLA's SPMD partitioner lowered the d-contractions against
+# data-sharded weight dims into partial-sum all-reduces over activations
+# with the BATCH dim replicated — 2.4 TB of collectives per smollm train
+# step (~100x the Megatron form). Hypothesis refuted; scheme replaced.
+PARAM_RULES = [
+    # MoE expert banks: (E, d, f) / (E, f, d) — experts over model,
+    # expert-FFN width over data (memory), contraction dims unsharded
+    (r"ffn/w_(gate|up)$", 3, ("model", None, "data")),
+    (r"ffn/w_down$", 3, ("model", "data", None)),
+    (r"ffn/router$", 2, (None, "model")),
+    # dense FFN (incl. shared experts)
+    (r"(ffn|shared|shared_ffn)/w_(gate|up|1)$", 2, (None, "model")),
+    (r"(ffn|shared|shared_ffn)/w_(down|2)$", 2, ("model", None)),
+    # attention projections (column-parallel qkv, row-parallel out)
+    (r"attn/w(q|k|v)$|wqkv$", 2, (None, "model")),
+    (r"attn/wo$|/wo$", 2, ("model", None)),
+    (r"attn/b(q|k|v)$", 1, ("model",)),
+    # MLA: LoRA ranks column-sharded; up-projections head-sharded
+    (r"w_dq$|w_dkv$", 2, (None, "model")),
+    (r"w_uq$|w_uk$|w_uv$", 2, (None, "model")),
+    # mamba2: SSD heads over model (in_* column-, out_proj row-parallel)
+    (r"mixer/in_(z|xbc|dt)$", 2, (None, "model")),
+    (r"mixer/out_proj$", 2, ("model", None)),
+    (r"mixer/conv_w$", 2, (None, "model")),
+    (r"mixer/(conv_b)$", 1, ("model",)),
+    (r"mixer/(A_log|D|dt_bias)$", 1, ("model",)),
+    # embeddings / unembedding: vocab-parallel; when the assigned vocab
+    # doesn't divide the model axis (mamba2's 50280), fall back to sharding
+    # d_model over data (prune_spec resolves per-dim)
+    (r"embed$|lm_head$|^pos$", 2, ("model", "data")),
+    # norms and everything 1-D: replicate
+    (r".*", 1, (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def prune_spec(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the dim or are already used."""
+    used = set()
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        keep = []
+        for a in axes:
+            if a in used or a not in mesh.shape:
+                continue
+            size = mesh.shape[a]
+            cur = int(np.prod([mesh.shape[x] for x in keep])) or 1
+            if dim % (cur * size) == 0:
+                keep.append(a)
+                used.add(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    # embeddings: vocab-parallel, with d-over-data ONLY as a fallback when
+    # the vocab doesn't divide (both at once re-creates the pathological
+    # 2D-sharded-weight gather pattern — §Perf H2 iteration 3).
+    if re.search(r"embed$|lm_head$|^pos$", path) and len(shape) == 2:
+        vocab_spec = prune_spec(shape, ("model", None), mesh)
+        if vocab_spec[0] is not None:
+            return vocab_spec
+        return prune_spec(shape, (None, "data"), mesh)
+    for pat, ndim, spec in PARAM_RULES:
+        if re.search(pat, path) and len(shape) >= ndim:
+            lead = (None,) * (len(shape) - ndim)
+            return prune_spec(shape, lead + tuple(spec), mesh)
+    return P()
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """Tree of NamedSharding matching a params (shape) tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_for_param(_path_str(path),
+                                                  tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(opt_shape, mesh: Mesh):
+    """AdamW state: mu/nu shard like params; step replicated."""
+    def one(path, leaf):
+        p = _path_str(path)
+        if p.endswith("step"):
+            return NamedSharding(mesh, P())
+        # strip the leading mu/ nu/ component so param rules match
+        stripped = p.split("/", 1)[1] if "/" in p else p
+        return NamedSharding(mesh, spec_for_param(stripped,
+                                                  tuple(leaf.shape), mesh))
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(cfg: ModelConfig, batch_tree, mesh: Mesh):
+    """Input batch specs: batch dim over (pod, data); positions replicate
+    trailing dims; modality embeds shard d_model over model."""
+    da = data_axes(mesh)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        if p.endswith(("tokens", "labels", "loss_mask")):
+            spec = (da,) + (None,) * (len(shape) - 1)
+        elif p.endswith("positions"):
+            spec = (da,) + (None,) * (len(shape) - 1)
+        elif p.endswith(("vision_embeds", "src_embeds")):
+            spec = (da, None, None)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, prune_spec(shape, spec, mesh))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_shardings(cfg: ModelConfig, cache_tree, mesh: Mesh, batch: int,
+                    mla_seq_shard: bool = True):
+    """KV / state cache specs.
+
+    ``mla_seq_shard``: shard the MLA latent cache's SEQUENCE dim over
+    ``model`` (context-parallel decode) — §Perf H3 optimization: the
+    absorbed einsums then reduce partial-softmax stats instead of
+    all-gathering the f32 latent stream to every model rank.
+
+    Layout reminders (leading L = stacked layers axis):
+      gqa:    k/v (L, B, S, Hkv, D)
+      mla:    ckv (L, B, S, r), krope (L, B, S, dr)
+      ssm:    conv (L, B, W-1, CH), ssm (L, B, H, P, N)
+      hybrid: mamba.* like ssm; attn.k/v (APPS, B, S, Hkv, D)
+      encdec: stack.self|cross.k/v (L, B, S, Hkv, D)
+    """
+    da = data_axes(mesh)
+    msize = mesh.shape.get("model", 1)
+    batch_shardable = all(batch % int(np.prod([mesh.shape[a] for a in da[:i + 1]])) == 0
+                          for i in range(len(da))) and batch > 1
+
+    def one(path, leaf):
+        p = _path_str(path)
+        shape = tuple(leaf.shape)
+        name = p.rsplit("/", 1)[-1]
+        if name in ("k_scale", "v_scale"):
+            hkv = shape[3]
+            head_ax = "model" if hkv % msize == 0 else None
+            spec = (None, da if batch_shardable else None, None, head_ax, None)
+        elif name in ("k", "v"):
+            hkv = shape[3]
+            head_ax = "model" if hkv % msize == 0 else None
+            seq_axes = []
+            if not batch_shardable:
+                seq_axes.extend(da)            # context-parallel over data
+            if head_ax is None:
+                seq_axes.append("model")       # heads indivisible -> seq
+            spec = (None,
+                    da if batch_shardable else None,
+                    tuple(seq_axes) or None,
+                    head_ax, None)
+        elif name in ("ckv", "krope"):
+            seq_axes = [] if batch_shardable else list(da)
+            if mla_seq_shard:
+                seq_axes.append("model")
+            spec = (None, da if batch_shardable else None,
+                    tuple(seq_axes) or None, None)
+        elif name == "conv":
+            spec = (None, da if batch_shardable else None, None, "model")
+        elif name == "ssm":
+            spec = (None, da if batch_shardable else None, "model", None, None)
+        else:
+            spec = (None,) * len(shape)
+        return NamedSharding(mesh, prune_spec(shape, spec, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def logits_sharding(cfg: ModelConfig, mesh: Mesh, batch: int, with_seq: bool):
+    da = data_axes(mesh)
+    bx = da if batch > 1 else None
+    spec = (bx, None, "model") if with_seq else (bx, "model")
+    shape = (batch, 1, cfg.vocab_size) if with_seq else (batch, cfg.vocab_size)
+    return NamedSharding(mesh, prune_spec(shape, spec, mesh))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

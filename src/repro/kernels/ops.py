@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this container) the kernels execute in interpret mode
+— the kernel body runs as traced JAX on CPU, preserving semantics for
+tests. On TPU they compile to Mosaic. ``interpret`` can be forced either
+way for debugging.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("ring", "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, valid_len, *, ring: bool = False,
+                     block_k: int = 512, interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _dec.decode_attention(q, k_cache, v_cache, valid_len, ring=ring,
+                                 block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    """q: (B,Hq,Sq,D); k/v: (B,Hkv,Skv,D). Naive full-materialized softmax."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_decode_attention(q, k_cache, v_cache, valid_len, *, ring=False,
+                         scale: Optional[float] = None):
+    """q: (B,Hq,D); caches: (B,Hkv,S,D); valid_len: (B,)."""
+    B, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = jnp.repeat(k_cache, G, axis=1)
+    v = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    slot = jnp.arange(S)[None, :]
+    vl = valid_len[:, None]
+    live = slot < jnp.minimum(vl, S) if ring else slot < vl
+    s = jnp.where(live[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_ssd(x, dt, A, Bm, Cm):
+    """Naive O(L) recurrence. x: (B,L,H,P); dt: (B,L,H); A: (H,);
+    Bm/Cm: (B,L,H,N). Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    x, dt, A, Bm, Cm = (t.astype(f32) for t in (x, dt, A, Bm, Cm))
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        g = jnp.exp(dtt * A[None, :])
+        h = h * g[..., None, None] + jnp.einsum("bhp,bhn->bhpn",
+                                                xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), f32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), final

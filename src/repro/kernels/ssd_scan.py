@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan. [arXiv:2405.21060]
+
+TPU adaptation (DESIGN.md §6): the chunk's dual ("attention-like") form is
+three MXU matmuls per chunk — C·Bᵀ (Q x Q), masked-decay weighting, and the
+(Q x Q)·(Q x P) product — plus a rank-N state update. Chunk length Q = 128
+aligns every matmul to the 128x128 MXU tile. The inter-chunk recurrence is
+carried in VMEM scratch across the sequential grid walk over chunks (the
+TPU grid is executed in order, so the (P, N) state scratch persists from
+chunk j to chunk j+1; the grid is (B, H, n_chunks) with chunks innermost).
+
+Validated against ``ref.ref_ssd`` (naive recurrence) in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                h_scr, *, chunk: int):
+    cj = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)            # (Q,)
+    A = a_ref[0].astype(jnp.float32)                    # scalar (per head)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)          # (Q, N)
+
+    a = dt * A                                          # (Q,) decay logs
+    a_cum = jnp.cumsum(a)                               # inclusive
+    xdt = x * dt[:, None]                               # (Q, P)
+
+    # intra-chunk dual form: L[i,j] = exp(cum[i]-cum[j]) for i >= j
+    seg = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    Lmat = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    scores = (Cm @ Bm.T) * Lmat                          # (Q, Q) on MXU
+    y = scores @ xdt                                     # (Q, P) on MXU
+
+    # carried-in state contribution
+    h = h_scr[...]                                       # (N, P)
+    y += jnp.exp(a_cum)[:, None] * (Cm @ h)
+
+    # state update: h' = exp(sum a) * h + sum_l exp(cum[-1]-cum[l]) B_l x_l
+    decay_tail = jnp.exp(a_cum[-1] - a_cum)              # (Q,)
+    h_scr[...] = jnp.exp(a_cum[-1]) * h + (Bm * decay_tail[:, None]).T @ xdt
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(cj == nc - 1)
+    def _final():
+        state_ref[0, 0] = h_scr[...].T.astype(state_ref.dtype)  # (P, N)
+
+
+def ssd_scan(
+    x: jnp.ndarray,      # (B, L, H, P)
+    dt: jnp.ndarray,     # (B, L, H) — post-softplus
+    A: jnp.ndarray,      # (H,) negative
+    Bm: jnp.ndarray,     # (B, L, H, N)
+    Cm: jnp.ndarray,     # (B, L, H, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y (B,L,H,P) f32-accumulated, final_state (B,H,P,N) f32)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    kernel = functools.partial(_ssd_kernel, chunk=Q)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, state

@@ -1,0 +1,96 @@
+"""Serving launcher: run the full Pick-and-Spin gateway on this host.
+
+Spins a model pool (reduced variants on CPU; the same code drives TPU
+deployments with full configs), routes a synthetic request stream, and
+prints per-model serving stats + lifecycle events.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --pool smollm-360m,glm4-9b \
+      --requests 32 --profile balanced --router hybrid
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.core.gateway import Gateway
+from repro.core.router import KeywordRouter
+from repro.core.scoring import PROFILES
+from repro.data.benchmarks import generate_corpus
+
+DEFAULT_POOL = "smollm-360m,phi3-medium-14b,command-r-plus-104b"
+
+
+def build_router(kind: str):
+    if kind == "keyword":
+        return KeywordRouter()
+    # semantic/hybrid need the trained classifier checkpoint from
+    # benchmarks; fall back to keyword with a notice if missing
+    try:
+        import os
+        import sys
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "../../../benchmarks"))
+        from common import get_classifier
+        sem, rep = get_classifier(log=None)
+        if kind == "distilbert":
+            return sem
+        from repro.core.router import HybridRouter
+        return HybridRouter(sem)
+    except Exception as e:  # noqa: BLE001
+        print(f"[serve] classifier unavailable ({e!r}); keyword routing")
+        return KeywordRouter()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pool", default=DEFAULT_POOL)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--profile", default="quality", choices=sorted(PROFILES))
+    ap.add_argument("--router", default="keyword",
+                    choices=("keyword", "distilbert", "hybrid"))
+    ap.add_argument("--deadline-s", type=float, default=120.0)
+    args = ap.parse_args()
+
+    pool = {}
+    for name in args.pool.split(","):
+        name = name.strip()
+        if name not in ARCHS:
+            raise SystemExit(f"unknown arch {name!r}; choose from "
+                             f"{sorted(ARCHS)}")
+        pool[name] = dataclasses.replace(ARCHS[name].reduced(),
+                                         dtype="float32")
+
+    gw = Gateway(pool, router=build_router(args.router),
+                 profile=PROFILES[args.profile], max_seq=96)
+    prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
+
+    t0 = time.perf_counter()
+    results = [gw.handle(p.text, max_new_tokens=args.max_new_tokens,
+                         deadline_s=args.deadline_s) for p in prompts]
+    wall = time.perf_counter() - t0
+
+    print(f"\nserved {len(results)} requests in {wall:.1f}s "
+          f"(router={args.router}, profile={args.profile})")
+    by_model = {}
+    for r in results:
+        by_model.setdefault((r.model, r.backend), []).append(r)
+    print(f"{'service':30s} {'n':>4s} {'mean_ttft(s)':>12s} "
+          f"{'mean_lat(s)':>11s} {'ok':>6s}")
+    for (m, b), rs in sorted(by_model.items()):
+        print(f"{m + '/' + b:30s} {len(rs):4d} "
+              f"{np.mean([r.ttft_s for r in rs]):12.3f} "
+              f"{np.mean([r.latency_s for r in rs]):11.3f} "
+              f"{sum(r.completed for r in rs):3d}/{len(rs)}")
+    print("\nlifecycle events (cold/warm starts):")
+    for name, secs in gw.cold_starts:
+        print(f"  {name:40s} {secs:6.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+Weak-type-correct, shardable, zero allocation — consumed by
+``jax.jit(...).lower()`` in the dry-run and by the roofline module.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _frontend_len(cfg: ModelConfig) -> int:
+    return cfg.frontend_seq
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    """Batch spec for the step the shape exercises.
+
+    train    -> {tokens, labels (+modality extras)}   (B, S)
+    prefill  -> {tokens (+modality extras)}           (B, S)
+    decode   -> {token}  (B, 1) — the cache is built separately
+    """
+    B, S = shape.global_batch, shape.seq_len
+    adt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.kind == "decode":
+        return {"tokens": SDS((B, 1), jnp.int32)}
+    out: Dict[str, SDS] = {"tokens": SDS((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = SDS((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        F = _frontend_len(cfg)
+        out["vision_embeds"] = SDS((B, F, cfg.d_model), adt)
+        out["positions"] = SDS((B, F + S, 3), jnp.int32)
+    if cfg.family == "encdec":
+        F = _frontend_len(cfg)
+        out["src_embeds"] = SDS((B, F, cfg.d_model), adt)
+    return out
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStruct tree via eval_shape (no allocation)."""
+    from repro.models import init_model
+    key = SDS((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: init_model(cfg, k, dtype), key)
+
+
+def cache_specs_tree(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    from repro.models import init_cache
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len, dtype))

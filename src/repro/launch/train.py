@@ -1,0 +1,58 @@
+"""Training launcher.
+
+Two modes:
+  * CPU (default): trains the REDUCED variant of ``--arch`` for real on
+    this host — the end-to-end driver used by examples/train_lm.py.
+  * --production: builds the sharded train step for the production mesh
+    and reports the lowered/compiled artifact (use launch/dryrun.py for
+    the full sweep; this is the single-config entry point).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config
+from repro.data.pipeline import lm_batches
+from repro.models import init_model
+from repro.training.optimizer import AdamWConfig
+from repro.training.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (assigned) config instead of reduced "
+                         "(requires the production mesh / dryrun env)")
+    ap.add_argument("--ckpt", default=None, help="save final params here")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch={args.batch} seq={args.seq}")
+
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                      total_steps=args.steps)
+    tr = Trainer(cfg, opt, params, log_every=max(1, args.steps // 20))
+    stats = tr.fit(lm_batches(cfg, args.batch, args.seq), steps=args.steps)
+    print({k: round(float(v), 4) for k, v in stats.items()})
+    if args.ckpt:
+        from repro.checkpoint.checkpoint import save_pytree
+        save_pytree(tr.params, args.ckpt)
+        print(f"saved params to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

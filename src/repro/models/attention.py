@@ -1,0 +1,415 @@
+"""Attention: GQA (full / sliding-window / decode) and MLA (DeepSeek-V2).
+
+Three execution modes per layer:
+  * ``train`` / ``prefill`` — chunked online-softmax attention in pure JAX
+    (``flash_attention_jnp``): O(q_chunk x kv) live memory so 32k prefill
+    lowers without materializing (S x S) scores. The Pallas kernels in
+    ``repro.kernels`` implement the same contract for the TPU hot path and
+    are validated against these semantics.
+  * ``decode`` — one new token against a cache: either a full linear cache
+    or a ring-buffer sliding-window cache (keys RoPE'd at write time, so
+    ring order is irrelevant to softmax).
+  * ``cross`` — encoder-decoder cross attention over precomputed KV.
+
+Caches are per-layer dicts of arrays; the trunk stacks them with a leading
+``num_layers`` axis for ``lax.scan``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def dyn_write(cache: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at sequence
+    position ``pos`` (scalar, or (B,) for ragged continuous batching)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    new = new.astype(cache.dtype)
+    if pos.ndim == 0:
+        start = (0, pos) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, start)
+
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (p,) + (0,) * (c.ndim - 1))
+
+    return jax.vmap(one)(cache, new, pos)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_gqa(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * hd, dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": dense_init(ks[3], hq * hd, d, dtype, scale=1.0 / math.sqrt(hq * hd)),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.use_attn_out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_mla(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    qn, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    q_in = cfg.q_lora_rank or d
+    p = {
+        "w_dkv": dense_init(ks[2], d, cfg.kv_lora_rank + qr, dtype),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora_rank,), dtype)},
+        "w_uk": dense_init(ks[3], cfg.kv_lora_rank, h * qn, dtype),
+        "w_uv": dense_init(ks[4], cfg.kv_lora_rank, h * vh, dtype),
+        "wo": dense_init(ks[5], h * vh, d, dtype, scale=1.0 / math.sqrt(h * vh)),
+    }
+    if cfg.q_lora_rank:
+        kq = jax.random.split(ks[0], 2)
+        p["w_dq"] = dense_init(kq[0], d, cfg.q_lora_rank, dtype)
+        p["q_norm"] = {"scale": jnp.ones((cfg.q_lora_rank,), dtype)}
+        p["w_uq"] = dense_init(kq[1], cfg.q_lora_rank, h * (qn + qr), dtype)
+    else:
+        p["w_uq"] = dense_init(ks[0], d, h * (qn + qr), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (pure JAX; mirrors the Pallas kernel)
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,            # (B, Sq, Hq, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D)
+    v: jnp.ndarray,            # (B, Skv, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    q_offset=0,                # global position of q[0] (int or traced scalar)
+    scale: Optional[float] = None,
+    kv_valid_len: Optional[jnp.ndarray] = None,   # (B,) valid kv prefix
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    q = q.reshape(B, Sq, Hkv, G, D)
+    qc = min(q_chunk, Sq)
+    n_chunks = (Sq + qc - 1) // qc
+    pad = n_chunks * qc - Sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    q = q.reshape(B, n_chunks, qc, Hkv, G, D)
+    q = jnp.moveaxis(q, 1, 0)  # (n_chunks, B, qc, Hkv, G, D)
+
+    kv_pos = jnp.arange(Skv)
+
+    def chunk_body(carry, inp):
+        ci, qi = inp
+        q_pos = q_offset + ci * qc + jnp.arange(qc)
+        # logits: (B, qc, Hkv, G, Skv)
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        mask = jnp.ones((qc, Skv), dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask_b = mask[None, :, None, None, :]
+        if kv_valid_len is not None:
+            valid = kv_pos[None, :] < kv_valid_len[:, None]     # (B, Skv)
+            mask_b = mask_b & valid[:, None, None, None, :]
+        logits = jnp.where(mask_b, logits, NEG_INF)
+        out = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bqhgk,bkhd->bqhgd", out, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    _, outs = jax.lax.scan(chunk_body, None, (jnp.arange(n_chunks), q))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_chunks * qc, Hkv, G, Dv)
+    if pad:
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, Hq, Dv)
+
+
+def decode_attention_jnp(
+    q: jnp.ndarray,            # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,      # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,      # (B, S, Hkv, Dv)
+    valid_len: jnp.ndarray,    # scalar or (B,): number of written entries
+    *,
+    ring: bool = False,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """One-token attention against a cache. ``ring=True`` means the cache is
+    a ring buffer (all slots < min(valid_len, S) are live past tokens)."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    Dv = v_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qv = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qv.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    slot = jnp.arange(S)
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        vl = jnp.broadcast_to(vl, (B,))
+    cap = jnp.minimum(vl, S) if ring else vl
+    live = slot[None, :] < cap[:, None]                     # (B, S)
+    logits = jnp.where(live[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer forward
+
+
+def _proj_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _out_proj(p: Params, cfg: ModelConfig, o: jnp.ndarray):
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, -1) @ p["wo"].astype(o.dtype)
+    if "bo" in p:
+        o = o + p["bo"].astype(o.dtype)
+    return o
+
+
+def gqa_full(params: Params, cfg: ModelConfig, x, cos, sin, *,
+             causal: bool = True, q_chunk: int = 512) -> jnp.ndarray:
+    """Training / encoder forward (no cache)."""
+    q, k, v = _proj_qkv(params, cfg, x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    o = flash_attention_jnp(q, k, v, causal=causal,
+                            window=cfg.sliding_window, q_chunk=q_chunk)
+    return _out_proj(params, cfg, o)
+
+
+def gqa_prefill(params: Params, cfg: ModelConfig, x, cos, sin, cache_len: int,
+                q_chunk: int = 512) -> Tuple[jnp.ndarray, Params]:
+    """Causal forward that also returns the populated per-layer cache.
+
+    Full cache: (B, cache_len, Hkv, D) zero-padded past S.
+    Sliding window: ring layout of the last ``window`` keys (cache_len is
+    the window size in that case).
+    """
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(params, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = flash_attention_jnp(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_chunk=q_chunk)
+    w = cfg.sliding_window
+    if w is not None:
+        # keep the last `window` tokens, laid out at ring slots pos % window
+        last = max(S - w, 0)
+        idx_tok = last + jnp.arange(min(w, S))
+        ring_slot = idx_tok % w
+        kc = jnp.zeros((B, w, cfg.num_kv_heads, cfg.head_dim), k.dtype)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, ring_slot].set(k[:, idx_tok])
+        vc = vc.at[:, ring_slot].set(v[:, idx_tok])
+        cache = _pack_kv(cfg, kc, vc)
+    else:
+        pad = cache_len - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = _pack_kv(cfg, kc, vc)
+    return _out_proj(params, cfg, o), cache
+
+
+def _pack_kv(cfg: ModelConfig, k: jnp.ndarray, v: jnp.ndarray) -> Params:
+    """Cache layout: bf16 {k, v} or int8 {k, k_scale, v, v_scale}
+    (per-token-per-head absmax; §Perf H1 iteration 3)."""
+    if cfg.kv_cache_dtype != "int8":
+        return {"k": k, "v": v}
+    from repro.serving.kvquant import quantize
+    kq, ks = quantize(k)
+    vq, vs = quantize(v)
+    return {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+
+
+def _unpack_kv(cfg: ModelConfig, cache: Params):
+    if "k_scale" not in cache:
+        return cache["k"], cache["v"]
+    from repro.serving.kvquant import dequantize
+    return (dequantize(cache["k"], cache["k_scale"]),
+            dequantize(cache["v"], cache["v_scale"]))
+
+
+def gqa_decode(params: Params, cfg: ModelConfig, x, cos, sin,
+               cache: Params, pos) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. ``pos`` is the global index of the new token
+    (scalar int32). Returns (out, updated cache)."""
+    B = x.shape[0]
+    q, k, v = _proj_qkv(params, cfg, x)           # S == 1
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    w = cfg.sliding_window
+    ring = w is not None
+    slot = (jnp.asarray(pos) % w) if ring else pos
+    if "k_scale" in cache:
+        from repro.serving.kvquant import quantize
+        kq, ks = quantize(k)
+        vq, vs = quantize(v)
+        new_cache = {"k": dyn_write(cache["k"], kq, slot),
+                     "k_scale": dyn_write(cache["k_scale"], ks, slot),
+                     "v": dyn_write(cache["v"], vq, slot),
+                     "v_scale": dyn_write(cache["v_scale"], vs, slot)}
+    else:
+        new_cache = {"k": dyn_write(cache["k"], k, slot),
+                     "v": dyn_write(cache["v"], v, slot)}
+    kc, vc = _unpack_kv(cfg, new_cache)
+    o = decode_attention_jnp(q, kc, vc, jnp.asarray(pos) + 1, ring=ring)
+    return _out_proj(params, cfg, o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (encoder-decoder)
+
+
+def cross_kv(params: Params, cfg: ModelConfig, enc_out: jnp.ndarray):
+    B, S, _ = enc_out.shape
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": k, "v": v}
+
+
+def cross_attend(params: Params, cfg: ModelConfig, x, kv: Params,
+                 q_chunk: int = 512) -> jnp.ndarray:
+    B, S, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    o = flash_attention_jnp(q, kv["k"], kv["v"], causal=False, q_chunk=q_chunk)
+    return _out_proj(params, cfg, o)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — DeepSeek-V2
+
+
+def _mla_q(params: Params, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    if cfg.q_lora_rank:
+        cq = x @ params["w_dq"].astype(x.dtype)
+        from repro.models.common import rmsnorm
+        cq = rmsnorm(params["q_norm"], cq, cfg.norm_eps)
+        q = cq @ params["w_uq"].astype(x.dtype)
+    else:
+        q = x @ params["w_uq"].astype(x.dtype)
+    q = q.reshape(B, S, h, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    return q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim:]
+
+
+def _mla_latent(params: Params, cfg: ModelConfig, x, cos, sin):
+    """Compress x into the latent KV stream: c_kv (B,S,r), k_rope (B,S,dr)."""
+    from repro.models.common import rmsnorm
+    ckv = x @ params["w_dkv"].astype(x.dtype)
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = rmsnorm(params["kv_norm"], c, cfg.norm_eps)
+    # k_rope is a single shared rotary key stream (one "head")
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    return c, k_rope
+
+
+def mla_full(params: Params, cfg: ModelConfig, x, cos, sin, *,
+             q_chunk: int = 512) -> jnp.ndarray:
+    """Train/prefill MLA via naive expansion (cache-free)."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qn, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, cfg, x)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c, k_rope = _mla_latent(params, cfg, x, cos, sin)
+    k_nope = (c @ params["w_uk"].astype(x.dtype)).reshape(B, S, h, qn)
+    v = (c @ params["w_uv"].astype(x.dtype)).reshape(B, S, h, vh)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, h, qr))], axis=-1)
+    scale = 1.0 / math.sqrt(qn + qr)
+    o = flash_attention_jnp(q, k, v, causal=True, q_chunk=q_chunk, scale=scale)
+    return o.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
+
+
+def mla_prefill(params: Params, cfg: ModelConfig, x, cos, sin, cache_len: int,
+                q_chunk: int = 512) -> Tuple[jnp.ndarray, Params]:
+    B, S, _ = x.shape
+    out = mla_full(params, cfg, x, cos, sin, q_chunk=q_chunk)
+    c, k_rope = _mla_latent(params, cfg, x, cos, sin)
+    pad = cache_len - S
+    cache = {
+        "ckv": jnp.pad(c, ((0, 0), (0, pad), (0, 0))),
+        "krope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+    return out, cache
+
+
+def mla_decode(params: Params, cfg: ModelConfig, x, cos, sin,
+               cache: Params, pos) -> Tuple[jnp.ndarray, Params]:
+    """Absorbed-matrices MLA decode: attention runs in the latent space, so
+    the cache is (kv_lora + rope_dim) per token instead of 2*H*D — the MLA
+    serving advantage."""
+    B = x.shape[0]
+    h = cfg.num_heads
+    qn, qr, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(params, cfg, x)            # (B,1,h,qn),(B,1,h,qr)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_new, krope_new = _mla_latent(params, cfg, x, cos, sin)
+    ckv = dyn_write(cache["ckv"], c_new, pos)
+    krope = dyn_write(cache["krope"], krope_new, pos)
+
+    # absorb W_uk into q: q_lat (B,h,r)
+    w_uk = params["w_uk"].astype(x.dtype).reshape(r, h, qn)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    logits = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+    logits += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                         krope.astype(jnp.float32))
+    logits *= 1.0 / math.sqrt(qn + qr)
+    S = ckv.shape[1]
+    posb = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    live = jnp.arange(S)[None, None, :] <= posb[:, None, None]
+    logits = jnp.where(live, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, ckv.astype(jnp.float32)).astype(x.dtype)
+    # absorb W_uv on the way out
+    w_uv = params["w_uv"].astype(x.dtype).reshape(r, h, vh)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(B, 1, h * vh)
+    out = o @ params["wo"].astype(x.dtype)
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,168 @@
+"""Encoder-decoder trunk (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``src_embeds`` (B, F, d_model) supplied by
+``input_specs()``. The text decoder is causal self-attention +
+cross-attention over the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (Params, embed_init, init_rmsnorm, rmsnorm,
+                                 rope_cos_sin, stack_init)
+from repro.models.mlp import ffn, init_ffn
+from repro.models.transformer import _adtype, unembed
+
+
+def init_encdec(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_gqa(cfg, k1, dtype),
+            "ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_ffn(cfg, k2, dtype=dtype),
+        }
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "self_norm": init_rmsnorm(cfg.d_model, dtype),
+            "self_attn": attn.init_gqa(cfg, k1, dtype),
+            "cross_norm": init_rmsnorm(cfg.d_model, dtype),
+            "cross_attn": attn.init_gqa(cfg, k2, dtype),
+            "ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+            "ffn": init_ffn(cfg, k3, dtype=dtype),
+        }
+
+    return {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": stack_init(ks[1], cfg.encoder_layers, enc_block),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "dec_layers": stack_init(ks[2], cfg.num_layers, dec_block),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "lm_head": embed_init(ks[3], cfg.vocab_size, cfg.d_model, dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, src_embeds: jnp.ndarray, *,
+           q_chunk: int = 512, remat: bool = True) -> jnp.ndarray:
+    h = src_embeds.astype(_adtype(cfg))
+    B, F, _ = h.shape
+    cos, sin = rope_cos_sin(jnp.arange(F)[None, :].repeat(B, 0),
+                            cfg.head_dim, cfg.rope_theta)
+
+    def body(h, lp):
+        x = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        h = h + attn.gqa_full(lp["attn"], cfg, x, cos, sin, causal=False,
+                              q_chunk=q_chunk)
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        return h + ffn(lp["ffn"], cfg, x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def encdec_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                   src_embeds: jnp.ndarray = None, q_chunk: int = 512,
+                   remat: bool = True, return_hidden: bool = False,
+                   **_) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc = encode(params, cfg, src_embeds, q_chunk=q_chunk, remat=remat)
+    h = params["embed"][tokens].astype(_adtype(cfg))
+    B, S, _ = h.shape
+    cos, sin = rope_cos_sin(jnp.arange(S)[None, :].repeat(B, 0),
+                            cfg.head_dim, cfg.rope_theta)
+
+    def body(h, lp):
+        x = rmsnorm(lp["self_norm"], h, cfg.norm_eps)
+        h = h + attn.gqa_full(lp["self_attn"], cfg, x, cos, sin, q_chunk=q_chunk)
+        x = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+        kv = attn.cross_kv(lp["cross_attn"], cfg, enc)
+        h = h + attn.cross_attend(lp["cross_attn"], cfg, x, kv, q_chunk=q_chunk)
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        return h + ffn(lp["ffn"], cfg, x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def encdec_prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   cache_len: int, *, src_embeds: jnp.ndarray = None,
+                   q_chunk: int = 512, **_) -> Tuple[jnp.ndarray, Params]:
+    enc = encode(params, cfg, src_embeds, q_chunk=q_chunk, remat=False)
+    h = params["embed"][tokens].astype(_adtype(cfg))
+    B, S, _ = h.shape
+    cos, sin = rope_cos_sin(jnp.arange(S)[None, :].repeat(B, 0),
+                            cfg.head_dim, cfg.rope_theta)
+
+    def body(h, lp):
+        x = rmsnorm(lp["self_norm"], h, cfg.norm_eps)
+        o, self_c = attn.gqa_prefill(lp["self_attn"], cfg, x, cos, sin,
+                                     cache_len, q_chunk=q_chunk)
+        h = h + o
+        x = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+        kv = attn.cross_kv(lp["cross_attn"], cfg, enc)
+        h = h + attn.cross_attend(lp["cross_attn"], cfg, x, kv, q_chunk=q_chunk)
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        return h + ffn(lp["ffn"], cfg, x), {"self": self_c, "cross": kv}
+
+    h, caches = jax.lax.scan(body, h, params["dec_layers"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h[:, -1]), {"stack": caches}
+
+
+def encdec_decode(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                  cache: Params, pos, **_) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][token].astype(_adtype(cfg))
+    B = h.shape[0]
+    p_ = jnp.asarray(pos, jnp.int32)
+    positions = jnp.full((B, 1), p_) if p_.ndim == 0 else p_[:, None]
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    def body(h, xs):
+        lp, c = xs
+        x = rmsnorm(lp["self_norm"], h, cfg.norm_eps)
+        o, self_c = attn.gqa_decode(lp["self_attn"], cfg, x, cos, sin,
+                                    c["self"], pos)
+        h = h + o
+        x = rmsnorm(lp["cross_norm"], h, cfg.norm_eps)
+        o = attn.decode_attention_jnp(
+            (x @ lp["cross_attn"]["wq"].astype(x.dtype)).reshape(
+                B, 1, cfg.num_heads, cfg.head_dim),
+            c["cross"]["k"], c["cross"]["v"],
+            jnp.int32(c["cross"]["k"].shape[1]))
+        o = attn._out_proj(lp["cross_attn"], cfg, o)
+        h = h + o
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        return h + ffn(lp["ffn"], cfg, x), {"self": self_c, "cross": c["cross"]}
+
+    h, new_stack = jax.lax.scan(body, h, (params["dec_layers"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h[:, -1]), {"stack": new_stack}
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      enc_len: Optional[int] = None, dtype=None) -> Params:
+    dtype = dtype or _adtype(cfg)
+    enc_len = enc_len or cfg.frontend_seq
+    L = cfg.num_layers
+    kv = lambda s: jnp.zeros((L, batch, s, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return {"stack": {
+        "self": {"k": kv(cache_len), "v": kv(cache_len)},
+        "cross": {"k": kv(enc_len), "v": kv(enc_len)},
+    }}

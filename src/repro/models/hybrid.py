@@ -1,0 +1,188 @@
+"""Zamba2-style hybrid trunk: Mamba2 backbone + ONE shared attention
+transformer block applied after every ``attn_every`` mamba layers
+(weights shared across applications, each application owning its own KV
+cache). [arXiv:2411.15242]
+
+Simplification recorded in DESIGN.md: Zamba2 concatenates the original
+embedding stream into the shared block's input and applies per-application
+LoRA deltas; we feed the running hidden state directly and share the block
+verbatim. The scheduling structure (periodic shared global-attention over a
+linear-time SSM backbone) — which is what matters for serving cost and for
+the orchestrator's latency model — is preserved.
+
+Layer grouping: mamba layers run under ``lax.scan`` per group
+(num_layers split into ceil(L / attn_every) groups), the shared attention
+block is unrolled between groups.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import (Params, embed_init, init_rmsnorm, rmsnorm,
+                                 rope_cos_sin, stack_init)
+from repro.models.mlp import ffn, init_ffn
+from repro.models.ssm import (init_mamba2, init_mamba2_state, mamba2_decode,
+                              mamba2_forward)
+from repro.models.transformer import _adtype, unembed
+
+
+def _groups(cfg: ModelConfig):
+    """[(start, end, has_attn_after)] covering all mamba layers."""
+    k = cfg.attn_every
+    out = []
+    i = 0
+    while i < cfg.num_layers:
+        j = min(i + k, cfg.num_layers)
+        out.append((i, j, j - i == k))
+        i = j
+    return out
+
+
+def num_attn_applications(cfg: ModelConfig) -> int:
+    return sum(1 for _, _, a in _groups(cfg) if a)
+
+
+def init_hybrid(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "layers": stack_init(ks[1], cfg.num_layers, lambda k: {
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+            "mixer": init_mamba2(cfg, k, dtype),
+        }),
+        "shared_attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "shared_attn": attn.init_gqa(cfg, ks[2], dtype),
+        "shared_ffn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "shared_ffn": init_ffn(cfg, ks[3], dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[4], cfg.vocab_size, cfg.d_model, dtype)
+    return p
+
+
+def _slice_layers(layers: Params, a: int, b: int) -> Params:
+    return jax.tree_util.tree_map(lambda x: x[a:b], layers)
+
+
+def _shared_block_full(params, cfg, h, cos, sin, q_chunk):
+    x = rmsnorm(params["shared_attn_norm"], h, cfg.norm_eps)
+    h = h + attn.gqa_full(params["shared_attn"], cfg, x, cos, sin,
+                          q_chunk=q_chunk)
+    x = rmsnorm(params["shared_ffn_norm"], h, cfg.norm_eps)
+    return h + ffn(params["shared_ffn"], cfg, x)
+
+
+def hybrid_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                   remat: bool = True, q_chunk: int = 512,
+                   return_hidden: bool = False,
+                   **_) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = params["embed"][tokens].astype(_adtype(cfg))
+    B, S, _ = h.shape
+    cos, sin = rope_cos_sin(jnp.arange(S)[None, :].repeat(B, 0),
+                            cfg.head_dim, cfg.rope_theta)
+
+    def mamba_body(h, lp):
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        return h + mamba2_forward(lp["mixer"], cfg, x), None
+
+    if remat:
+        mamba_body = jax.checkpoint(mamba_body)
+    for a, b, has_attn in _groups(cfg):
+        h, _ = jax.lax.scan(mamba_body, h, _slice_layers(params["layers"], a, b))
+        if has_attn:
+            h = _shared_block_full(params, cfg, h, cos, sin, q_chunk)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def hybrid_prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   cache_len: int, *, q_chunk: int = 512,
+                   **_) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][tokens].astype(_adtype(cfg))
+    B, S, _ = h.shape
+    cos, sin = rope_cos_sin(jnp.arange(S)[None, :].repeat(B, 0),
+                            cfg.head_dim, cfg.rope_theta)
+    eff = cache_len if cfg.sliding_window is None else cfg.sliding_window
+
+    def mamba_body(h, lp):
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        o, st = mamba2_forward(lp["mixer"], cfg, x, return_state=True)
+        return h + o, st
+
+    mamba_states, attn_caches = [], []
+    for a, b, has_attn in _groups(cfg):
+        h, st = jax.lax.scan(mamba_body, h, _slice_layers(params["layers"], a, b))
+        mamba_states.append(st)
+        if has_attn:
+            x = rmsnorm(params["shared_attn_norm"], h, cfg.norm_eps)
+            o, c = attn.gqa_prefill(params["shared_attn"], cfg, x, cos, sin,
+                                    eff, q_chunk=q_chunk)
+            h = h + o
+            x = rmsnorm(params["shared_ffn_norm"], h, cfg.norm_eps)
+            h = h + ffn(params["shared_ffn"], cfg, x)
+            attn_caches.append(c)
+    mamba_stack = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *mamba_states)
+    attn_stack = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs, axis=0), *attn_caches)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h[:, -1]), {"mamba": mamba_stack,
+                                            "attn": attn_stack}
+
+
+def hybrid_decode(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                  cache: Params, pos, **_) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][token].astype(_adtype(cfg))
+    B = h.shape[0]
+    p_ = jnp.asarray(pos, jnp.int32)
+    positions = jnp.full((B, 1), p_) if p_.ndim == 0 else p_[:, None]
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+
+    def mamba_body(h, xs):
+        lp, st = xs
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        o, st = mamba2_decode(lp["mixer"], cfg, x, st)
+        return h + o, st
+
+    new_mamba, new_attn = [], []
+    app = 0
+    for a, b, has_attn in _groups(cfg):
+        lp = _slice_layers(params["layers"], a, b)
+        st = jax.tree_util.tree_map(lambda x: x[a:b], cache["mamba"])
+        h, st = jax.lax.scan(mamba_body, h, (lp, st))
+        new_mamba.append(st)
+        if has_attn:
+            c = jax.tree_util.tree_map(lambda x: x[app], cache["attn"])
+            x = rmsnorm(params["shared_attn_norm"], h, cfg.norm_eps)
+            o, c = attn.gqa_decode(params["shared_attn"], cfg, x, cos, sin, c, pos)
+            h = h + o
+            x = rmsnorm(params["shared_ffn_norm"], h, cfg.norm_eps)
+            h = h + ffn(params["shared_ffn"], cfg, x)
+            new_attn.append(c)
+            app += 1
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    new_cache = {
+        "mamba": jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+        "attn": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, 0), *new_attn),
+    }
+    return unembed(params, cfg, h[:, -1]), new_cache
+
+
+def init_hybrid_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> Params:
+    dtype = dtype or _adtype(cfg)
+    eff = cache_len if cfg.sliding_window is None else min(cfg.sliding_window, cache_len)
+    one = init_mamba2_state(cfg, batch, dtype)
+    mamba = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+    napp = num_attn_applications(cfg)
+    kv = jnp.zeros((napp, batch, eff, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return {"mamba": mamba, "attn": {"k": kv, "v": kv}}

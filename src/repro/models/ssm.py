@@ -1,0 +1,248 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD forward (training/prefill): intra-chunk dual-form matmuls +
+inter-chunk state recurrence under ``lax.scan`` — the structure the Pallas
+``ssd_scan`` kernel tiles for the MXU (chunk = 128 aligns the Q x Q and
+Q x N matmuls to hardware tiles). Decode is the O(1) recurrent update —
+this is why SSM archs are the natural ``long_500k`` servers (DESIGN.md §4).
+
+State layout per layer:
+  conv_state: (B, conv_w - 1, d_conv_channels)   causal-conv tail
+  ssm_state:  (B, H, P, N)                       SSD recurrent state
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_nheads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    G = cfg.ssm_ngroups
+    conv_ch = di + 2 * G * N
+    return di, nh, P, N, G, conv_ch
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di, nh, P, N, G, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # separate z / xBC / dt projections (single fused matrix has a width
+    # like 10832 that no mesh axis divides — split keeps TP clean)
+    p = {
+        "in_z": dense_init(ks[4], d, di, dtype),
+        "in_xbc": dense_init(ks[5], d, conv_ch, dtype),
+        "in_dt": dense_init(ks[0], d, nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch),
+                                     jnp.float32) / math.sqrt(cfg.ssm_conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} a_k for
+    i >= j (diag 0), -inf above the diagonal."""
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,        # (B, L, H, P) — already dt-scaled NO (raw)
+    dt: jnp.ndarray,       # (B, L, H) — post-softplus
+    A: jnp.ndarray,        # (H,) negative
+    Bm: jnp.ndarray,       # (B, L, H, N) — group-broadcast to heads
+    Cm: jnp.ndarray,       # (B, L, H, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N)). Computation in f32."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (L + pad) // Q
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, Q, H, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, Q, H, N).astype(f32)
+    a = dtc * A.astype(f32)[None, None, None, :]          # (B,nc,Q,H)
+    a_hq = jnp.moveaxis(a, -1, -2)                        # (B,nc,H,Q)
+    a_cum = jnp.cumsum(a_hq, axis=-1)                     # (B,nc,H,Q)
+    xdt = xc * dtc[..., None]                             # dt-scaled input
+
+    # intra-chunk (dual / attention-like form)
+    Lmat = jnp.exp(_segsum(a_hq))                         # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Cc, Bc, Lmat, xdt)
+
+    # per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)       # (B,nc,H,Q)
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cum[..., -1])                 # (B,nc,H)
+    h0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), f32))
+
+    def step(h, inp):
+        s_c, g_c = inp                                    # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * g_c[..., None, None] + s_c
+        return h, h_prev
+
+    states_s = jnp.moveaxis(states, 1, 0)                 # (nc,B,H,P,N)
+    decay_s = jnp.moveaxis(chunk_decay, 1, 0)             # (nc,B,H)
+    final, prev_states = jax.lax.scan(step, h0, (states_s, decay_s))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B,nc,H,P,N)
+
+    # contribution of the carried-in state within each chunk
+    state_decay = jnp.exp(a_cum)                          # (B,nc,H,Q)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, P)
+    if pad:
+        y = y[:, :L]
+    return y, final
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x: (B, L, C); w: (W, C) depthwise taps; tail: (B, W-1, C) carry-in."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    L = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + L] * w[i].astype(x.dtype)
+    return y + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block forward
+
+
+def _in_proj(params: Params, cfg: ModelConfig, x: jnp.ndarray):
+    z = x @ params["in_z"].astype(x.dtype)
+    xBC = x @ params["in_xbc"].astype(x.dtype)
+    dt = x @ params["in_dt"].astype(x.dtype)
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jnp.ndarray):
+    di, nh, P, N, G, _ = _dims(cfg)
+    xs = xBC[..., :di]
+    Bm = xBC[..., di:di + G * N]
+    Cm = xBC[..., di + G * N:]
+    B_, L = xs.shape[:2]
+    xs = xs.reshape(B_, L, nh, P)
+    rep = nh // G
+    Bm = jnp.repeat(Bm.reshape(B_, L, G, N), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B_, L, G, N), rep, axis=2)
+    return xs, Bm, Cm
+
+
+def mamba2_forward(
+    params: Params, cfg: ModelConfig, x: jnp.ndarray,
+    state: Optional[Params] = None, return_state: bool = False,
+):
+    """Full-sequence forward. x: (B, L, d). Returns y (+ state dict)."""
+    di, nh, P, N, G, conv_ch = _dims(cfg)
+    B_, L, _ = x.shape
+    z, xBC_raw, dt_raw = _in_proj(params, cfg, x)
+    xBC = xBC_raw
+    tail = state["conv"] if state is not None else None
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"], tail))
+    xs, Bm, Cm = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+    init = state["ssm"] if state is not None else None
+    y, final = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, L, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        prev_tail = (tail if tail is not None else
+                     jnp.zeros((B_, cfg.ssm_conv_width - 1, conv_ch), x.dtype))
+        new_tail = jnp.concatenate([prev_tail, xBC_raw],
+                                   axis=1)[:, -(cfg.ssm_conv_width - 1):]
+        return out, {"conv": new_tail, "ssm": final.astype(jnp.float32)}
+    return out
+
+
+def mamba2_decode(
+    params: Params, cfg: ModelConfig, x: jnp.ndarray, state: Params,
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token recurrent step. x: (B, 1, d)."""
+    di, nh, P, N, G, conv_ch = _dims(cfg)
+    B_ = x.shape[0]
+    z, xBC_new, dt_raw = _in_proj(params, cfg, x)
+
+    conv_in = jnp.concatenate([state["conv"].astype(x.dtype), xBC_new], axis=1)
+    w = params["conv_w"].astype(x.dtype)
+    xBC = jnp.einsum("bwc,wc->bc", conv_in, w)[:, None, :] + params["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(xBC)
+    new_conv = conv_in[:, 1:]
+
+    xs, Bm, Cm = _split_xbc(cfg, xBC)                     # (B,1,H,P/N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])[:, 0]   # (B,H)
+    A = -jnp.exp(params["A_log"])
+    g = jnp.exp(dt * A[None, :])                          # (B,H)
+    h = state["ssm"].astype(jnp.float32)                  # (B,H,P,N)
+    xdt = xs[:, 0].astype(jnp.float32) * dt[..., None]    # (B,H,P)
+    h = h * g[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xdt,
+                                            Bm[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(B_, 1, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": h}
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, nh, P, N, G, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, P, N), jnp.float32),
+    }

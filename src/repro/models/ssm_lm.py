@@ -1,0 +1,86 @@
+"""Mamba2 LM trunk (attention-free): scan over SSD blocks."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Params, embed_init, init_rmsnorm, rmsnorm, stack_init
+from repro.models.ssm import (init_mamba2, init_mamba2_state, mamba2_decode,
+                              mamba2_forward)
+from repro.models.transformer import _adtype, unembed
+
+
+def init_ssm_lm(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "embed": embed_init(k1, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+        "layers": stack_init(k2, cfg.num_layers, lambda k: {
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+            "mixer": init_mamba2(cfg, k, dtype),
+        }),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(k3, cfg.vocab_size, cfg.d_model, dtype)
+    return p
+
+
+def ssm_lm_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+                   remat: bool = True, return_hidden: bool = False,
+                   **_) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = params["embed"][tokens].astype(_adtype(cfg))
+
+    def body(h, lp):
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        h = h + mamba2_forward(lp["mixer"], cfg, x)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if return_hidden:
+        return h, jnp.zeros((), jnp.float32)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def ssm_lm_prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                   cache_len: int = 0, **_) -> Tuple[jnp.ndarray, Params]:
+    """cache_len is irrelevant for SSMs (O(1) state)."""
+    h = params["embed"][tokens].astype(_adtype(cfg))
+
+    def body(h, lp):
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        o, state = mamba2_forward(lp["mixer"], cfg, x, return_state=True)
+        return h + o, state
+
+    h, states = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h[:, -1]), {"stack": states}
+
+
+def ssm_lm_decode(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                  cache: Params, pos, **_) -> Tuple[jnp.ndarray, Params]:
+    h = params["embed"][token].astype(_adtype(cfg))
+
+    def body(h, xs):
+        lp, st = xs
+        x = rmsnorm(lp["norm"], h, cfg.norm_eps)
+        o, st = mamba2_decode(lp["mixer"], cfg, x, st)
+        return h + o, st
+
+    h, new_states = jax.lax.scan(body, h, (params["layers"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h[:, -1]), {"stack": new_states}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, cache_len: int = 0,
+                   dtype=None) -> Params:
+    dtype = dtype or _adtype(cfg)
+    one = init_mamba2_state(cfg, batch, dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+    return {"stack": stacked}

@@ -1,0 +1,230 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text, summing output
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with while-loop (scan) bodies multiplied by their
+trip count (recovered from the loop condition's comparison constant).
+``cost_analysis`` under scan is cross-checked against the analytic
+6*N*D model-FLOPs and a trip-count correction is applied when XLA
+reports the loop body only once (logged per entry).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e constants (assignment-specified)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s/link
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every TYPE[dims] group in a (possibly tuple) shape."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text (full names, incl. '.clone' suffixes)."""
+    comps: Dict[str, str] = {}
+    cur_name: Optional[str] = None
+    cur_lines: List[str] = []
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{", line)
+        if m:
+            cur_name = m.group(1)
+            cur_lines = []
+            continue
+        if cur_name is not None:
+            if line.startswith("}"):
+                comps[cur_name] = "\n".join(cur_lines)
+                cur_name = None
+            else:
+                cur_lines.append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    return m.group(1) if m else None
+
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>.*?)\s"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<variant>-start|-done)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+
+
+def _trip_count(cond_body: str) -> int:
+    """Loop bound: the largest integer constant compared in the condition."""
+    consts = [int(c) for c in
+              re.findall(r"constant\((\d+)\)", cond_body)]
+    return max(consts) if consts else 1
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+
+    # direct collective bytes per computation
+    direct: Dict[str, Dict[str, int]] = {}
+    counts: Dict[str, Dict[str, int]] = {}
+    whiles: Dict[str, List[Tuple[str, str]]] = {}   # comp -> [(body, cond)]
+    for name, body in comps.items():
+        d: Dict[str, int] = {}
+        c: Dict[str, int] = {}
+        for line in body.splitlines():
+            m = _COLL_RE.search(line)
+            if m and m.group("variant") != "-done":   # count starts once
+                b = _shape_bytes(m.group("shape"))
+                op = m.group("op")
+                d[op] = d.get(op, 0) + b
+                c[op] = c.get(op, 0) + 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                whiles.setdefault(name, []).append((wm.group(2), wm.group(1)))
+        direct[name] = d
+        counts[name] = c
+
+    # expand while bodies by trip count (one level of nesting handled by
+    # recursion)
+    def total(name: str, depth: int = 0) -> Tuple[Dict[str, int], Dict[str, int]]:
+        if depth > 8 or name not in direct:
+            return {}, {}
+        d = dict(direct[name])
+        c = dict(counts[name])
+        for body, cond in whiles.get(name, []):
+            trips = _trip_count(comps.get(cond, ""))
+            bd, bc = total(body, depth + 1)
+            for k, v in bd.items():
+                d[k] = d.get(k, 0) + v * trips
+            for k, v in bc.items():
+                c[k] = c.get(k, 0) + v * trips
+        return d, c
+
+    if entry:
+        d, c = total(entry)
+    else:   # fallback: flat sum
+        d, c = {}, {}
+        for dd in direct.values():
+            for k, v in dd.items():
+                d[k] = d.get(k, 0) + v
+        for cc in counts.values():
+            for k, v in cc.items():
+                c[k] = c.get(k, 0) + v
+    return CollectiveStats(bytes_by_op=d, count_by_op=c)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float          # analytic 6*N_active*D (train) or 2*N*D
+    scan_corrected: bool
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "scan_corrected": self.scan_corrected,
+        }
+
+
+def analytic_model_flops(param_count_active: int, shape_kind: str,
+                         tokens: int) -> float:
+    """6*N*D for training; 2*N*D for inference (per step tokens)."""
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * param_count_active * tokens
+
+
+def analytic_memory_bytes(param_count: int, active_param_count: int,
+                          shape_kind: str, tokens: int, d_model: int,
+                          num_layers: int, cache_bytes: int = 0) -> float:
+    """HBM-traffic floor per step (the scan undercount makes raw HLO bytes
+    a lower bound too; the roofline memory term takes the max of both).
+
+      train   : params f32 (read+write) + grads f32 (write+read) +
+                AdamW mu/nu f32 (read+write each) + activation traffic
+                (~14 d_model-sized tensors per layer per token, bf16,
+                x2 for the remat recompute pass)
+      prefill : weights bf16 read + activation traffic + cache write
+      decode  : active weights bf16 read (streamed once per step) +
+                full cache read + activations (1 token)
+    """
+    act_traffic = 14 * tokens * d_model * num_layers * 2     # bf16
+    if shape_kind == "train":
+        params_traffic = param_count * 4 * (2 + 2 + 4)       # p, g, mu, nu
+        return params_traffic + 2 * act_traffic
+    if shape_kind == "prefill":
+        return 2 * active_param_count + act_traffic + cache_bytes
+    # decode
+    return 2 * active_param_count + cache_bytes + 14 * d_model * num_layers * 2

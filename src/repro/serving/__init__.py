@@ -1,0 +1,3 @@
+from repro.serving.backend import BACKENDS, BackendProfile, get_backend  # noqa: F401
+from repro.serving.engine import GenResult, InferenceEngine, Request  # noqa: F401
+from repro.serving.sampling import SamplingParams, sample  # noqa: F401

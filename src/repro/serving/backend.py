@@ -1,0 +1,55 @@
+"""Inference-backend execution profiles.
+
+The paper's service matrix pairs each model with one of three backends
+(vLLM / TensorRT-LLM / TGI). We implement the analogous profiles as
+genuinely different execution configs of our own JAX engine — not labels:
+
+  throughput ("vllm-like")   large decode batch, batching wait, paged-ish
+                             big KV blocks, bf16 cache — max tokens/s.
+  latency    ("trt-like")    small batch, zero batching wait, fused decode
+                             attention path, small q-chunk — min TTFT.
+  memory     ("tgi-like")    bf16 KV + tighter batch — min HBM per replica.
+
+These feed two places: (1) the real in-process engine (CPU, reduced
+models) compiles different step functions per profile; (2) the cluster
+simulator's cost model uses the profile's multipliers for the large archs
+(calibrated from dry-run step costs; see core/costmodel.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class BackendProfile:
+    name: str
+    kind: str                 # throughput | latency | memory
+    max_batch: int            # decode slots per replica
+    q_chunk: int              # prefill chunking
+    batch_wait_s: float       # how long the scheduler waits to fill a batch
+    kv_dtype: str             # cache dtype
+    # simulator multipliers relative to the `latency` profile
+    ttft_mult: float
+    tps_mult: float           # decode tokens/s multiplier (batch efficiency)
+    mem_mult: float           # HBM footprint multiplier per replica
+
+
+BACKENDS: Dict[str, BackendProfile] = {
+    "vllm": BackendProfile(
+        name="vllm", kind="throughput", max_batch=16, q_chunk=512,
+        batch_wait_s=0.010, kv_dtype="bfloat16",
+        ttft_mult=1.25, tps_mult=1.60, mem_mult=1.15),
+    "trt": BackendProfile(
+        name="trt", kind="latency", max_batch=4, q_chunk=256,
+        batch_wait_s=0.0, kv_dtype="bfloat16",
+        ttft_mult=1.00, tps_mult=1.00, mem_mult=1.25),
+    "tgi": BackendProfile(
+        name="tgi", kind="memory", max_batch=8, q_chunk=512,
+        batch_wait_s=0.004, kv_dtype="bfloat16",
+        ttft_mult=1.35, tps_mult=1.20, mem_mult=0.85),
+}
+
+
+def get_backend(name: str) -> BackendProfile:
+    return BACKENDS[name]

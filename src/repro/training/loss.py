@@ -1,0 +1,74 @@
+"""Training losses: next-token cross entropy (+ z-loss) + MoE aux."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray = None, z_loss: float = 0.0
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """logits: (B, S, V) f32; labels: (B, S) int32; mask: (B, S) {0,1}."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return loss, {"nll": loss, "token_acc": acc,
+                  "ppl": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, unembed_w: jnp.ndarray,
+                          labels: jnp.ndarray, chunk: int = 512,
+                          logit_softcap=None) -> Tuple[jnp.ndarray, dict]:
+    """Cross entropy WITHOUT materializing (B, S, V) logits.
+
+    hidden: (B, S, d); unembed_w: (V, d); labels: (B, S).
+    Scans over sequence chunks (rematerialized), so live logits are
+    (B, chunk, V) — the difference between petabytes and sub-GB at
+    global-batch 256 x 4k seq x 256k vocab (DESIGN.md §5).
+    """
+    B, S, d = hidden.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nc = (S + pad) // C
+    hs = jnp.moveaxis(hidden.reshape(B, nc, C, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, C), 1, 0)
+    valid = jnp.moveaxis(
+        (jnp.arange(S + pad) < S).reshape(nc, C)[None].repeat(B, 0)
+        .reshape(B, nc, C), 1, 0)
+    w = unembed_w.astype(jnp.float32)
+
+    def body(carry, inp):
+        h_c, l_c, v_c = inp
+        logits = h_c.astype(jnp.float32) @ w.T            # (B, C, V)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        hit = (jnp.argmax(logits, -1) == l_c)
+        m = v_c.astype(jnp.float32)
+        nll_sum, acc_sum, n = carry
+        return (nll_sum + ((lse - gold) * m).sum(),
+                acc_sum + (hit * m).sum(), n + m.sum()), None
+
+    body = jax.checkpoint(body)
+    (nll_sum, acc_sum, n), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        (hs, ls, valid))
+    n = jnp.maximum(n, 1.0)
+    loss = nll_sum / n
+    return loss, {"nll": loss, "token_acc": acc_sum / n,
+                  "ppl": jnp.exp(jnp.minimum(loss, 20.0))}

@@ -1,0 +1,86 @@
+"""Train-step builder + loop.
+
+``make_train_step`` returns the jit-able pure function that the launcher
+shards with pjit for the production mesh (see launch/train.py and
+launch/dryrun.py — the same function lowers for the 512-chip dry-run).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_forward
+from repro.training.loss import chunked_cross_entropy, cross_entropy
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+def make_loss_fn(cfg: ModelConfig, q_chunk: int = 512, loss_chunk: int = 512,
+                 remat: bool = True):
+    def loss_fn(params, batch):
+        hidden, aux = model_forward(params, cfg, batch, q_chunk=q_chunk,
+                                    return_hidden=True, remat=remat)
+        labels = batch["labels"]
+        # multimodal prefixes (vision/audio embeds) prepend positions that
+        # have no labels; score only the trailing text region.
+        S = labels.shape[1]
+        hidden = hidden[:, -S:]
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        loss, metrics = chunked_cross_entropy(hidden, w, labels,
+                                              chunk=loss_chunk,
+                                              logit_softcap=cfg.logit_softcap)
+        total = loss + cfg.router_aux_coef * aux
+        metrics = dict(metrics, moe_aux=aux, loss=total)
+        return total, metrics
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, q_chunk: int = 512,
+                    loss_chunk: int = 512, remat: bool = True):
+    loss_fn = make_loss_fn(cfg, q_chunk, loss_chunk, remat)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(opt, grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    opt: AdamWConfig
+    params: dict
+    q_chunk: int = 512
+    log_every: int = 10
+    opt_state: dict = field(default=None)
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.opt_state is None:
+            self.opt_state = init_adamw(self.params)
+        self._step_fn = jax.jit(make_train_step(self.cfg, self.opt, self.q_chunk),
+                                donate_argnums=(0, 1))
+
+    def fit(self, batches: Iterator[dict], steps: int,
+            log: Optional[Callable[[str], None]] = print) -> Dict[str, float]:
+        t0 = time.perf_counter()
+        metrics = {}
+        for i in range(steps):
+            batch = next(batches)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            if i % self.log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": i, **m})
+                if log:
+                    log(f"step {i:5d} loss={m['loss']:.4f} acc={m['token_acc']:.3f} "
+                        f"ppl={m['ppl']:.1f} gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e}")
+        wall = time.perf_counter() - t0
+        return {**{k: float(v) for k, v in metrics.items()},
+                "wall_s": wall, "steps_per_s": steps / wall}

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the single real CPU
+# device; only launch/dryrun.py forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.registry import ARCHS
+
+
+def reduced_f32(arch: str):
+    """Reduced smoke config in f32 (exact-parity friendly)."""
+    return dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,33 @@
+"""Checkpoint roundtrip (incl. bf16 leaves and nested/list structures)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import load_pytree, save_pytree
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2, 2), jnp.bfloat16) * 1.5,
+              "d": [jnp.asarray([1, 2, 3], jnp.int32),
+                    jnp.asarray(7, jnp.int32)]},
+    }
+    p = str(tmp_path / "ckpt.zst")
+    save_pytree(tree, p)
+    out = load_pytree(tree, p)
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_missing_leaf_raises(tmp_path):
+    p = str(tmp_path / "c.zst")
+    save_pytree({"a": jnp.zeros(2)}, p)
+    try:
+        load_pytree({"a": jnp.zeros(2), "b": jnp.zeros(3)}, p)
+        assert False, "should raise"
+    except KeyError:
+        pass

@@ -1,0 +1,70 @@
+"""Roofline module unit tests: HLO collective parser + analytic models."""
+import textwrap
+
+from repro.roofline.analysis import (Roofline, analytic_memory_bytes,
+                                     analytic_model_flops, parse_collectives,
+                                     _shape_bytes)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step, is_scheduled=true
+
+    %wide.body.1 (arg: (f32[8,16])) -> (f32[8,16]) {
+      %p = f32[8,16]{1,0} parameter(0)
+      %ag = f32[8,16]{1,0} all-gather(%p), dimensions={0}
+      ROOT %t = (f32[8,16]{1,0}) tuple(%ag)
+    }
+
+    %wide.cond.1 (arg: (f32[8,16])) -> pred[] {
+      %c = s32[] constant(5)
+      ROOT %lt = pred[] compare(%c, %c), direction=LT
+    }
+
+    ENTRY %main.1 (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %ar = f32[8,16]{1,0} all-reduce(%a), to_apply=%add
+      %w = (f32[8,16]{1,0}) while(%ar), condition=%wide.cond.1, body=%wide.body.1
+      %aa = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %a)
+      ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=0
+    }
+""")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4,4]{1,0}, bf16[2,2]{1,0})") == 64 + 8
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_with_loop_trips():
+    st = parse_collectives(HLO)
+    # all-reduce once (512B), all-to-all once (2x64B), all-gather x5 trips
+    assert st.count_by_op["all-reduce"] == 1
+    assert st.count_by_op["all-to-all"] == 1
+    assert st.count_by_op["all-gather"] == 5
+    assert st.bytes_by_op["all-gather"] == 5 * 8 * 16 * 4
+    assert st.bytes_by_op["all-reduce"] == 8 * 16 * 4
+    assert st.bytes_by_op["all-to-all"] == 2 * 4 * 4 * 4
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(arch="a", shape="train_4k", mesh="m", chips=256,
+                 hlo_flops=256 * 197e12,           # exactly 1 s compute
+                 hlo_bytes=256 * 819e9 * 0.5,      # 0.5 s memory
+                 collective_bytes=256 * 50e9 * 0.1,
+                 model_flops=256 * 197e12, scan_corrected=False)
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 0.5) < 1e-9
+    assert r.dominant == "compute"
+    assert abs(r.useful_flops_frac - 1.0) < 1e-9
+
+
+def test_analytic_models_scale_sensibly():
+    f_train = analytic_model_flops(1e9, "train", 1000)
+    f_serve = analytic_model_flops(1e9, "decode", 1000)
+    assert f_train == 3 * f_serve            # 6ND vs 2ND
+    m_dec = analytic_memory_bytes(2e9, 1e9, "decode", 128, 1024, 32,
+                                  cache_bytes=5e9)
+    assert m_dec >= 2e9 + 5e9                # weights + cache at least
+    m_train = analytic_memory_bytes(1e9, 1e9, "train", 10000, 1024, 32)
+    assert m_train > 8 * 1e9                 # params+grads+opt f32 traffic

@@ -1,0 +1,71 @@
+"""Serving engine behaviour: continuous batching, slots, deadlines."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.models import init_model
+from repro.serving import (BACKENDS, InferenceEngine, Request,
+                           SamplingParams, get_backend)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduced_f32("smollm-360m")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, InferenceEngine(cfg, params, get_backend("trt"), max_seq=96)
+
+
+def _reqs(cfg, n, max_new=6, seed=0, **kw):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i,
+                    tokens=list(rng.randint(0, cfg.vocab_size,
+                                            rng.randint(5, 30))),
+                    sampling=SamplingParams(max_new_tokens=max_new), **kw)
+            for i in range(n)]
+
+
+def test_engine_serves_all(engine):
+    cfg, eng = engine
+    res = eng.run(_reqs(cfg, 7))
+    assert len(res) == 7
+    for r in res:
+        assert r.completed and len(r.new_tokens) == 6
+        assert 0 < r.ttft <= r.latency
+
+
+def test_engine_more_requests_than_slots(engine):
+    cfg, eng = engine
+    # trt backend has 4 slots; 9 requests must queue and still finish
+    res = eng.run(_reqs(cfg, 9, seed=1))
+    assert len(res) == 9 and all(r.completed for r in res)
+
+
+def test_engine_deadline_marks_timeout(engine):
+    cfg, eng = engine
+    res = eng.run(_reqs(cfg, 2, max_new=8, seed=2, deadline_s=1e-9))
+    assert all(r.timed_out and not r.completed for r in res)
+
+
+def test_greedy_deterministic(engine):
+    cfg, eng = engine
+    r1 = eng.run(_reqs(cfg, 1, seed=3))[0]
+    r2 = eng.run(_reqs(cfg, 1, seed=3))[0]
+    assert r1.new_tokens == r2.new_tokens
+
+
+def test_backend_profiles_are_distinct():
+    names = set()
+    for b in BACKENDS.values():
+        names.add((b.max_batch, b.q_chunk, b.batch_wait_s))
+    assert len(names) == 3    # genuinely different execution configs
+
+
+def test_prompt_bucketing():
+    assert InferenceEngine._bucket(5) == 8
+    assert InferenceEngine._bucket(8) == 8
+    assert InferenceEngine._bucket(9) == 8
+    assert InferenceEngine._bucket(16) == 16
+    assert InferenceEngine._bucket(250) == 128

@@ -1,0 +1,124 @@
+"""Sharding rule engine: divisibility pruning + per-arch spec coverage.
+
+Uses AbstractMesh so the production (16, 16) topology is testable on a
+1-device host without touching jax device state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_config_for_shape
+from repro.distributed.sharding import (PARAM_RULES, prune_spec,
+                                        spec_for_param)
+from repro.launch.specs import param_specs
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+@given(dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       axes=st.lists(st.sampled_from([None, "data", "model", "pod", "bogus"]),
+                     min_size=1, max_size=4))
+@settings(max_examples=300, deadline=None)
+def test_prune_spec_invariants(dims, axes):
+    """Pruned specs only use each mesh axis once and always divide."""
+    n = min(len(dims), len(axes))
+    spec = prune_spec(tuple(dims[:n]), tuple(axes[:n]), MESH3)
+    used = []
+    for dim, ax in zip(dims, spec):
+        if ax is None:
+            continue
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            assert a in MESH3.shape
+            assert dim % MESH3.shape[a] == 0
+            used.append(a)
+    assert len(used) == len(set(used))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_every_param_gets_a_valid_spec(arch):
+    cfg = ARCHS[arch]
+    psds = param_specs(cfg)
+
+    def check(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in path)
+        spec = spec_for_param(pstr, tuple(leaf.shape), MESH)
+        assert len(spec) <= len(leaf.shape)
+        used = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                assert dim % MESH.shape[a] == 0, (pstr, leaf.shape, spec)
+                used.append(a)
+        assert len(used) == len(set(used)), (pstr, spec)
+    jax.tree_util.tree_map_with_path(check, psds)
+
+
+@pytest.mark.parametrize("arch", ["command-r-plus-104b", "deepseek-v2-236b",
+                                  "mamba2-2.7b"])
+def test_big_matrices_are_model_sharded(arch):
+    """The parallel dim of every large matrix must actually shard (memory)."""
+    cfg = ARCHS[arch]
+    psds = param_specs(cfg)
+
+    def check(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in path)
+        if int(np.prod(leaf.shape)) < 10_000_000:
+            return
+        spec = spec_for_param(pstr, tuple(leaf.shape), MESH)
+        assert any(ax is not None for ax in spec), \
+            f"large param {pstr} {leaf.shape} fully replicated"
+    jax.tree_util.tree_map_with_path(check, psds)
+
+
+def test_moe_experts_sharded_over_model():
+    cfg = ARCHS["deepseek-v2-236b"]
+    spec = spec_for_param("layers/ffn/w_gate", (160, 5120, 1536), MESH)
+    assert spec[0] == "model"        # expert parallelism
+    spec_d = spec_for_param("layers/ffn/w_down", (160, 1536, 5120), MESH)
+    assert spec_d[0] == "model"
+
+
+def test_kv_head_fallback_to_seq():
+    """kv heads that don't divide the model axis fall back to sequence
+    sharding of the cache (context-parallel decode)."""
+    from repro.distributed.sharding import cache_shardings
+    from repro.launch.specs import cache_specs_tree
+    cfg = get_config_for_shape("command-r-plus-104b", "decode_32k")  # kv=8
+    tree = cache_specs_tree(cfg, 128, 32768)
+    shards = cache_shardings(cfg, tree, MESH, 128)
+    kspec = shards["stack"]["k"].spec
+    # (L, B, S, H, D): batch over data; heads(8) can't take model(16)
+    assert kspec[1] == "data"
+    assert kspec[2] == "model" or kspec[3] is None
+
+
+def test_long_context_batch1_context_parallel():
+    from repro.distributed.sharding import cache_shardings
+    from repro.launch.specs import cache_specs_tree
+    cfg = get_config_for_shape("phi3-medium-14b", "long_500k")
+    assert cfg.sliding_window == 8192
+    tree = cache_specs_tree(cfg, 1, 524288)
+    shards = cache_shardings(cfg, tree, MESH, 1)
+    kspec = shards["stack"]["k"].spec
+    assert kspec[1] is None                     # batch=1 unsharded
+    assert kspec[2] is not None                 # seq takes the data axis
+
+
+def test_multipod_batch_axes():
+    from repro.distributed.sharding import batch_shardings
+    cfg = ARCHS["smollm-360m"]
+    tree = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    sh = batch_shardings(cfg, tree, MESH3)
+    spec = sh["tokens"].spec
+    flat = []
+    for ax in spec:
+        if ax:
+            flat.extend(ax if isinstance(ax, tuple) else [ax])
+    assert "pod" in flat and "data" in flat
