@@ -1,0 +1,146 @@
+"""Serve-plane benchmark: serial ``Gateway.handle`` loop vs the concurrent
+``AsyncGateway`` (replica pools + bounded-queue scheduler + live Spin
+control loop), on the SAME mixed-tier workload of reduced models on CPU.
+
+The serial plane serves one blocking request at a time; the concurrent
+plane overlaps requests via iteration-level continuous batching across
+the pool, under open-loop Poisson arrivals, with Algorithm 1 ticking
+against the live engines (scale-up under load, scale-to-zero when idle).
+
+Reports request throughput (acceptance: concurrent >= 2x serial),
+TTFT/latency percentiles, and the real lifecycle event log.
+
+Run: PYTHONPATH=src python benchmarks/serve_bench.py [--requests 48]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from common import save_result
+from repro.configs.registry import ARCHS
+from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+from repro.data.benchmarks import generate_corpus
+
+POOL = ("smollm-360m", "phi3-medium-14b", "command-r-plus-104b")
+
+
+def _models():
+    return {name: dataclasses.replace(ARCHS[name].reduced(), dtype="float32")
+            for name in POOL}
+
+
+def _stats(ttfts, lats):
+    return {"mean_ttft_s": float(np.mean(ttfts)),
+            "p95_ttft_s": float(np.percentile(ttfts, 95)),
+            "mean_latency_s": float(np.mean(lats)),
+            "p95_latency_s": float(np.percentile(lats, 95))}
+
+
+def run_serial(prompts, max_new: int):
+    gw = Gateway(_models(), profile=PROFILES["balanced"], max_seq=96)
+    for m in POOL:                      # pre-warm: measure serving, not compile
+        gw._spin_up(m, "trt")
+    t0 = time.perf_counter()
+    results = [gw.handle(p.text, max_new_tokens=max_new, deadline_s=120.0)
+               for p in prompts]
+    wall = time.perf_counter() - t0
+    out = _stats([r.ttft_s for r in results], [r.latency_s for r in results])
+    out.update(n=len(results), wall_s=wall,
+               throughput_rps=len(results) / wall,
+               completed=sum(r.completed for r in results))
+    return out
+
+
+def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
+    spin = SpinConfig(window_s=30.0, cooldown_s=0.3, idle_tau_s=1.5,
+                      tick_s=0.1, max_replicas=3,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    gw = AsyncGateway(_models(), profile=PROFILES["balanced"], max_seq=96,
+                      spin=spin)
+    for m in POOL:                      # same pre-warm as the serial plane
+        gw.pool.scale(m, "trt", 1)
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(prompts)))
+    jobs = [(p.text, dict(max_new_tokens=max_new, deadline_s=120.0))
+            for p in prompts]
+    uids, wall = serve_open_loop(gw, jobs, arrivals)
+    # let the Spin idle branch fire: real scale-to-zero on live engines
+    gw.settle(timeout_s=4.0)
+    done = [gw.poll(u) for u in uids if u is not None]
+    done = [r for r in done if r is not None]
+    out = _stats([r.ttft_s for r in done] or [0.0],
+                 [r.latency_s for r in done] or [0.0])
+    out.update(n=len(done), wall_s=wall, throughput_rps=len(done) / wall,
+               completed=sum(r.completed for r in done),
+               shed=len(gw.shed_uids), offered_rate_rps=rate,
+               peak_replicas=max((e.after for e in gw.pool.events),
+                                 default=0),
+               orch_events=[str(e) for e in gw.orch_events],
+               pool_events=[str(e) for e in gw.pool.events])
+    return out, gw
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate (rps); 0 = 3x serial tput")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    prompts = generate_corpus(max(args.requests, 64),
+                              seed=args.seed)[: args.requests]
+    tiers = sorted({p.complexity for p in prompts})
+    print(f"== serve_bench: {len(prompts)} prompts (complexities: "
+          f"{','.join(tiers)}), {args.max_new_tokens} new tokens ==")
+
+    print("\n-- serial plane (Gateway.handle, one request at a time) --")
+    serial = run_serial(prompts, args.max_new_tokens)
+    print(f"wall={serial['wall_s']:.1f}s  tput={serial['throughput_rps']:.2f} "
+          f"rps  mean_ttft={serial['mean_ttft_s']:.3f}s  "
+          f"p95_lat={serial['p95_latency_s']:.3f}s  "
+          f"completed={serial['completed']}/{serial['n']}")
+
+    rate = args.rate or 3.0 * serial["throughput_rps"]
+    print(f"\n-- concurrent plane (AsyncGateway, open-loop Poisson "
+          f"@ {rate:.1f} rps) --")
+    conc, gw = run_concurrent(prompts, args.max_new_tokens, rate, args.seed)
+    print(f"wall={conc['wall_s']:.1f}s  tput={conc['throughput_rps']:.2f} "
+          f"rps  mean_ttft={conc['mean_ttft_s']:.3f}s  "
+          f"p95_lat={conc['p95_latency_s']:.3f}s  "
+          f"completed={conc['completed']}/{conc['n']}  "
+          f"shed={conc['shed']}  peak_replicas={conc['peak_replicas']}")
+
+    print("\nlifecycle events (pool — measured on live engines):")
+    for e in gw.pool.events:
+        print(f"  {e}")
+    print("orchestrator decisions (Algorithm 1 against live engines):")
+    for e in gw.orch_events:
+        print(f"  {e}")
+
+    ratio = conc["throughput_rps"] / max(serial["throughput_rps"], 1e-9)
+    ups = [e for e in gw.orch_events if e.kind == "scale-up"]
+    zeros = [e for e in gw.orch_events if e.kind == "scale-to-zero"]
+    print(f"\nthroughput ratio (concurrent/serial): {ratio:.2f}x "
+          f"({'PASS' if ratio >= 2.0 else 'BELOW 2x'})")
+    print(f"orchestrator scale-ups: {len(ups)} "
+          f"({'PASS' if ups else 'MISSING'})  "
+          f"scale-to-zero: {len(zeros)} "
+          f"({'PASS' if zeros else 'MISSING'})")
+
+    save_result("serve_bench", {
+        "serial": serial, "concurrent": conc, "throughput_ratio": ratio,
+        "orch_scale_ups": len(ups), "orch_scale_to_zeros": len(zeros),
+        "requests": len(prompts), "max_new_tokens": args.max_new_tokens})
+    return ratio
+
+
+if __name__ == "__main__":
+    main()

@@ -4,9 +4,13 @@ decode) — the paper's Figure-1 loop on live models.
 
 Trains nothing, simulates nothing: routing -> Algorithm-2 selection ->
 engine spin-up -> iteration-level batched decode, with telemetry flowing
-back into the registry normalizers.
+back into the registry normalizers. With ``--concurrent``, requests
+arrive open-loop (Poisson) into the AsyncGateway serve plane — replica
+pools, bounded admission queues, and the live Algorithm-1 Spin loop —
+instead of being served one at a time.
 
 Run: PYTHONPATH=src python examples/serve_orchestrated.py [--requests 24]
+     PYTHONPATH=src python examples/serve_orchestrated.py --concurrent --rate 8
 """
 import argparse
 import dataclasses
@@ -19,7 +23,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.core.gateway import Gateway
+from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
 from repro.data.benchmarks import generate_corpus
@@ -30,19 +35,41 @@ def main():
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--profile", default="quality",
                     choices=sorted(PROFILES))
+    ap.add_argument("--concurrent", action="store_true",
+                    help="serve via the concurrent AsyncGateway plane")
+    ap.add_argument("--rate", type=float, default=6.0,
+                    help="open-loop arrival rate, rps (--concurrent)")
     args = ap.parse_args()
 
     pool = {name: dataclasses.replace(ARCHS[name].reduced(), dtype="float32")
             for name in ("smollm-360m", "zamba2-1.2b", "phi3-medium-14b",
                          "command-r-plus-104b")}
-    gw = Gateway(pool, router=KeywordRouter(),
-                 profile=PROFILES[args.profile], max_seq=96)
-
     prompts = generate_corpus(max(args.requests, 64), seed=11)[:args.requests]
-    t0 = time.perf_counter()
-    results = [gw.handle(p.text, max_new_tokens=8, deadline_s=120.0)
-               for p in prompts]
-    wall = time.perf_counter() - t0
+
+    if args.concurrent:
+        if args.rate <= 0:
+            ap.error("--rate must be > 0 (open-loop arrivals per second)")
+        spin = SpinConfig(window_s=60.0, cooldown_s=0.5, idle_tau_s=2.0,
+                          tick_s=0.2, max_replicas=4)
+        gw = AsyncGateway(pool, router=KeywordRouter(),
+                          profile=PROFILES[args.profile], max_seq=96,
+                          spin=spin)
+        rng = np.random.RandomState(5)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                             size=len(prompts)))
+        jobs = [(p.text, dict(max_new_tokens=8, deadline_s=120.0))
+                for p in prompts]
+        uids, wall = serve_open_loop(gw, jobs, arrivals)
+        gw.settle(timeout_s=spin.idle_tau_s + 1.0)
+        results = [r for r in (gw.poll(u) for u in uids if u is not None)
+                   if r is not None]
+    else:
+        gw = Gateway(pool, router=KeywordRouter(),
+                     profile=PROFILES[args.profile], max_seq=96)
+        t0 = time.perf_counter()
+        results = [gw.handle(p.text, max_new_tokens=8, deadline_s=120.0)
+                   for p in prompts]
+        wall = time.perf_counter() - t0
 
     by_model = {}
     for r in results:
@@ -61,6 +88,10 @@ def main():
     print(f"\ncold starts paid: {len(colds)} "
           f"(total {sum(colds):.1f}s, max {max(colds):.1f}s) — "
           f"Spin amortizes these across the workload")
+    if args.concurrent:
+        print("\nlive Spin decisions (Algorithm 1 on real engines):")
+        for e in gw.orch_events:
+            print(f"  {e}")
 
 
 if __name__ == "__main__":

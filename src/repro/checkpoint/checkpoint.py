@@ -1,18 +1,45 @@
 """Msgpack pytree checkpointing (no orbax in this env).
 
 Format: {"__tree__": flattened {path: (dtype, shape)} manifest,
-         "__data__": raw little-endian bytes per leaf}, zstd-compressed.
+         "__data__": raw little-endian bytes per leaf}, compressed with
+zstd when the optional ``zstandard`` package is present, else stdlib
+zlib. Loading sniffs the container magic, so checkpoints written with
+either codec read back on any install (as long as zstd files are only
+opened where zstd is available).
 """
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:                                   # optional codec — zlib fallback below
+    import zstandard as zstd
+except ImportError:                    # pragma: no cover - env-dependent
+    zstd = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(payload)
+    return zlib.compress(payload, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but 'zstandard' is not "
+                "installed; re-save it with the zlib codec or install zstd")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _path_str(path) -> str:
@@ -45,13 +72,13 @@ def save_pytree(tree: Any, path: str) -> None:
                              "treedef": str(treedef)})
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(path, "wb") as f:
-        f.write(zstd.ZstdCompressor(level=3).compress(payload))
+        f.write(_compress(payload))
 
 
 def load_pytree(template: Any, path: str) -> Any:
     """Restore into the structure of ``template`` (shapes must match)."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(zstd.ZstdDecompressor().decompress(f.read()))
+        payload = msgpack.unpackb(_decompress(f.read()))
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     by_path = {m["path"]: (m, b) for m, b in
                zip(payload["manifest"], payload["blobs"])}

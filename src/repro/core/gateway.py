@@ -1,21 +1,33 @@
-"""API Gateway — the real (non-simulated) Pick-and-Spin path.
+"""API Gateways — the real (non-simulated) Pick-and-Spin paths.
 
-Wires Router -> Registry -> Policy (Alg. 2) -> Orchestrator lifecycle ->
-real ``InferenceEngine`` instances executing reduced models on this host.
-Model "spin-up" here is genuinely expensive (param init/load + XLA compile),
-so cold starts, warm pools and scale-to-zero are measured, not modeled —
-this is the calibration source for the simulator's constants on small
-archs, and the end-to-end serving example.
+Two planes over the same Pick machinery (Router -> Registry -> Policy):
+
+  ``Gateway``      the serial baseline: one blocking request at a time,
+                   each served to completion via ``eng.run([req])``.
+  ``AsyncGateway`` the concurrent serve plane: ``submit()``/``poll()``
+                   feed bounded per-service queues (RequestScheduler),
+                   requests from many callers overlap inside replica
+                   pools of real engines (iteration-level continuous
+                   batching across the pool), and Algorithm 1
+                   (``Orchestrator.tick``) runs inline against LIVE
+                   telemetry — scale-up under load, scale-to-zero when
+                   idle, warm-pool re-spins — on those real engines.
+
+Model "spin-up" here is genuinely expensive (param init/load + XLA
+compile), so cold starts, warm pools and scale-to-zero are measured, not
+modeled — this is the calibration source for the simulator's constants
+on small archs, and the end-to-end serving substrate.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.orchestrator import Orchestrator, SpinConfig
 from repro.core.policies import MultiObjectivePolicy, SelectionPolicy
 from repro.core.registry import ServiceRegistry
 from repro.core.router import KeywordRouter, RouteDecision
@@ -23,8 +35,8 @@ from repro.core.scoring import PROFILES, OperatorProfile
 from repro.core.telemetry import Telemetry
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import init_model
-from repro.serving import (BACKENDS, InferenceEngine, Request,
-                           SamplingParams)
+from repro.serving import (BACKENDS, InferenceEngine, ReplicaPool, Request,
+                           RequestScheduler, SamplingParams, SchedulerConfig)
 
 import jax
 
@@ -40,6 +52,7 @@ class GatewayResult:
     latency_s: float
     cold_start_s: float
     completed: bool
+    uid: int = -1
 
 
 class Gateway:
@@ -130,4 +143,200 @@ class Gateway:
             text_prompt=text, model=model, backend=backend,
             tier=sel.entry.tier, new_tokens=res.new_tokens,
             ttft_s=res.ttft, latency_s=res.latency, cold_start_s=cold,
-            completed=res.completed)
+            completed=res.completed, uid=req.uid)
+
+
+# ---------------------------------------------------------------------------
+# concurrent serve plane
+
+
+@dataclass
+class OrchEvent:
+    """An Algorithm-1 decision applied to live engines."""
+    t: float
+    model: str
+    before: int          # replicas before the tick
+    target: int          # replica target the orchestrator issued
+
+    @property
+    def kind(self) -> str:
+        if self.target == 0:
+            return "scale-to-zero"
+        if self.target > self.before:
+            return "scale-up"
+        return "hold" if self.target == self.before else "scale-down"
+
+    def __str__(self) -> str:
+        return (f"[tick] {self.kind:>13s} {self.model} "
+                f"{self.before}->{self.target}")
+
+
+class AsyncGateway:
+    """Concurrent serve plane: submit()/poll() + a step-driven serve loop.
+
+    Request path: Router -> Algorithm-2 policy -> bounded admission queue
+    (``RequestScheduler``) -> ``ReplicaPool`` of real engines. Each
+    ``step()`` runs one decode iteration across EVERY engine with work
+    (so in-flight requests genuinely overlap) and, every ``tick_s``, one
+    pass of the Algorithm-1 control loop whose ``scale_cb`` spins real
+    replicas up and down.
+    """
+
+    def __init__(self, models: Dict[str, ModelConfig], router=None,
+                 policy_cls=MultiObjectivePolicy,
+                 profile: OperatorProfile = PROFILES["balanced"],
+                 backends: Tuple[str, ...] = ("trt",),
+                 max_seq: int = 256, seed: int = 0,
+                 cost_configs: Dict[str, ModelConfig] = None,
+                 spin: Optional[SpinConfig] = None,
+                 sched: Optional[SchedulerConfig] = None):
+        from repro.configs.registry import ARCHS as _FULL
+        self.models = models
+        self.router = router or KeywordRouter()
+        cost_cfgs = cost_configs or {
+            name: _FULL.get(name.replace("-smoke", ""), cfg)
+            for name, cfg in models.items()}
+        self.registry = ServiceRegistry(cost_cfgs, backends)
+        self.policy: SelectionPolicy = policy_cls(self.registry, seed,
+                                                  require_capacity=False)
+        self.profile = profile
+        self.telemetry = Telemetry()
+        self.tok = ByteTokenizer()
+        self.max_seq = max_seq
+        self.spin = spin or SpinConfig()
+        self.pool = ReplicaPool(models, self.registry, max_seq=max_seq,
+                                seed=seed)
+        self.scheduler = RequestScheduler(self.pool, self.registry,
+                                          self.telemetry, sched)
+        self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
+                                 scale_cb=self.pool.scale)
+        self.orch_events: List[OrchEvent] = []
+        self._next_tick = 0.0
+        self._uid = 0
+        self._meta: Dict[int, Tuple[str, str, str, str]] = {}
+        self._results: Dict[int, GatewayResult] = {}
+        self.shed_uids: List[int] = []
+
+    @property
+    def cold_starts(self) -> List[Tuple[str, float]]:
+        return self.pool.cold_starts
+
+    # -- request path ("Pick" -> enqueue) ------------------------------------
+    def submit(self, text: str, max_new_tokens: int = 16,
+               deadline_s: Optional[float] = None,
+               sampling: Optional[SamplingParams] = None) -> Optional[int]:
+        """Route + select + enqueue. Returns the request uid, or None if
+        the selected service's queue is full (request shed)."""
+        now = time.perf_counter()
+        decision = self.router.route(text)
+        tokens = self.tok.encode(text)
+        sel = self.policy.select(decision, len(tokens), max_new_tokens,
+                                 self.profile)
+        model, backend = sel.entry.model, sel.entry.backend
+        self.telemetry.record_request(model, now)
+        cfg = self.models[model]
+        uid = self._uid
+        self._uid += 1
+        req = Request(uid=uid, arrival_t=now,
+                      tokens=[t % cfg.vocab_size for t in tokens],
+                      sampling=sampling or
+                      SamplingParams(max_new_tokens=max_new_tokens),
+                      deadline_s=deadline_s)
+        if not self.scheduler.enqueue(model, backend, req, now):
+            self.shed_uids.append(uid)
+            return None
+        self._meta[uid] = (text, model, backend, sel.entry.tier)
+        return uid
+
+    # -- serve loop -----------------------------------------------------
+    def step(self) -> List[GatewayResult]:
+        """One serve-loop iteration: Algorithm-1 tick when due, then one
+        scheduling + decode pass over the pool. Returns newly finished."""
+        now = time.perf_counter()
+        if now >= self._next_tick:
+            before = {m: self.registry.model_replicas(m)
+                      for m in self.registry.models}
+            for m, target in self.orch.tick(now).items():
+                self.orch_events.append(OrchEvent(now, m, before[m], target))
+            self._next_tick = now + self.spin.tick_s
+        out: List[GatewayResult] = []
+        for (model, backend), res in self.scheduler.step(now):
+            meta = self._meta.pop(res.uid, None)
+            if meta is None:                      # warm-up probe etc.
+                continue
+            text, m, b, tier = meta
+            gr = GatewayResult(
+                text_prompt=text, model=m, backend=b, tier=tier,
+                new_tokens=res.new_tokens, ttft_s=res.ttft,
+                latency_s=res.latency, cold_start_s=0.0,
+                completed=res.completed, uid=res.uid)
+            self._results[res.uid] = gr
+            out.append(gr)
+        return out
+
+    def poll(self, uid: int) -> Optional[GatewayResult]:
+        """Fetch-and-remove the finished result for ``uid`` (None if
+        unknown or still in flight) — results don't accumulate forever
+        on a long-running serve plane."""
+        return self._results.pop(uid, None)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def serve_all(self, max_steps: int = 1_000_000) -> List[GatewayResult]:
+        """Synchronous driver: run the serve loop until all queues drain."""
+        out: List[GatewayResult] = []
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        return out
+
+    def settle(self, timeout_s: float = 5.0, poll_s: float = 0.02) -> bool:
+        """Idle the serve loop so Spin's idle branch can fire (scale-to-
+        zero / warm floors). True once no replicas above the configured
+        warm floors remain live."""
+        floor = self._floor_replicas()
+        t_end = time.perf_counter() + timeout_s
+        while time.perf_counter() < t_end:
+            self.step()
+            if self.pool.total_replicas() <= floor:
+                return True
+            time.sleep(poll_s)
+        return self.pool.total_replicas() <= floor
+
+    def _floor_replicas(self) -> int:
+        """Total replicas Spin's idle branch would leave running."""
+        total = 0
+        for m in self.registry.models:
+            tier = next(e.tier for e in self.registry.entries()
+                        if e.model == m)
+            floor = self.spin.warm_pool.get(tier, 0)
+            if not self.spin.scale_to_zero:
+                floor = max(1, floor)
+            total += floor
+        return total
+
+
+def serve_open_loop(gw: AsyncGateway,
+                    jobs: Sequence[Tuple[str, dict]],
+                    arrivals: Sequence[float]
+                    ) -> Tuple[List[Optional[int]], float]:
+    """Open-loop driver: submit ``jobs[i]`` at offset ``arrivals[i]``
+    (seconds, sorted) regardless of completions — arrivals do not wait
+    for the system, so overload shows up as queueing/shedding, not as a
+    slower workload. Drives the serve loop continuously in between.
+    Returns (uids, wall_s); ``uids[i]`` is None if job i was shed."""
+    t0 = time.perf_counter()
+    uids: List[Optional[int]] = []
+    i, n = 0, len(jobs)
+    while i < n or gw.has_work():
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            text, kw = jobs[i]
+            uids.append(gw.submit(text, **kw))
+            i += 1
+        gw.step()
+        if not gw.has_work() and i < n:
+            time.sleep(max(0.0, min(0.005, arrivals[i] - now)))
+    return uids, time.perf_counter() - t0

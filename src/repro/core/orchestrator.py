@@ -44,11 +44,13 @@ class SpinConfig:
 
 class Orchestrator:
     def __init__(self, registry: ServiceRegistry, telemetry: Telemetry,
-                 cfg: SpinConfig = SpinConfig(),
+                 cfg: Optional[SpinConfig] = None,
                  scale_cb: Optional[Callable] = None):
         self.reg = registry
         self.tel = telemetry
-        self.cfg = cfg
+        # cfg=None -> a fresh SpinConfig per orchestrator: a shared default
+        # instance would alias its mutable warm_pool dict across instances
+        self.cfg = cfg if cfg is not None else SpinConfig()
         self.scale_cb = scale_cb          # (model, backend, new_replicas, now)
         self._last_scale_t: Dict[str, float] = {}
 
@@ -72,18 +74,24 @@ class Orchestrator:
             current = self.reg.model_replicas(model)              # line 5
             min_warm = self.cfg.warm_pool.get(
                 self._tier(model), 0)                             # line 6
-            if target > current and self._cooldown_expired(model, now):  # 7
-                new = min(max(target, min_warm), self.cfg.max_replicas)
-                self._scale(model, new, now)                      # line 8
-                decisions[model] = new
-            elif (self.tel.idle_time(model, now) > self.cfg.idle_tau_s
-                  and self.reg.model_active(model) == 0):         # line 9
-                # IdleTime alone (arrivals) would flap a model that is
-                # still DRAINING queued work — require no in-flight too
+            # idle wins over the Little's-law target: once arrivals have
+            # stopped for tau (and nothing is in flight or queued), the
+            # window-averaged rate/latency are stale demand — acting on
+            # them would flap scale-up/scale-to-zero every tick until the
+            # telemetry window empties
+            idle = (self.tel.idle_time(model, now) > self.cfg.idle_tau_s
+                    and self.reg.model_active(model) == 0
+                    and queued == 0)                              # line 9
+            if idle:
                 floor = min_warm if self.cfg.scale_to_zero else max(1, min_warm)
                 new = max(0, floor)                               # line 10
                 if new != current:
                     self._scale(model, new, now)
+                    decisions[model] = new
+            elif target > current and self._cooldown_expired(model, now):  # 7
+                new = min(max(target, min_warm), self.cfg.max_replicas)
+                if new != current:           # capped at max_replicas: no-op
+                    self._scale(model, new, now)                  # line 8
                     decisions[model] = new
         return decisions
 

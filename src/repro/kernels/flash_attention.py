@@ -38,9 +38,12 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     n_kv = seq_kv // block_k
 
     def body(kj, _):
-        k_blk = pl.load(k_ref, (0, 0, pl.ds(kj * block_k, block_k),
+        # leading indices as scalar arrays: plain python ints in a pl.load
+        # indexer are rejected by newer pallas interpreters
+        zero = jnp.int32(0)
+        k_blk = pl.load(k_ref, (zero, zero, pl.ds(kj * block_k, block_k),
                                 slice(None))).astype(jnp.float32)
-        v_blk = pl.load(v_ref, (0, 0, pl.ds(kj * block_k, block_k),
+        v_blk = pl.load(v_ref, (zero, zero, pl.ds(kj * block_k, block_k),
                                 slice(None))).astype(jnp.float32)
         s = q @ k_blk.T                                     # (bq, bk)
         k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)

@@ -4,9 +4,22 @@ Spins a model pool (reduced variants on CPU; the same code drives TPU
 deployments with full configs), routes a synthetic request stream, and
 prints per-model serving stats + lifecycle events.
 
+Two serve planes:
+  * default      — serial Gateway: one blocking request at a time
+                   (baseline; each request served to completion).
+  * --concurrent — AsyncGateway serve plane: open-loop Poisson arrivals
+                   (--rate rps) into bounded per-service queues, many
+                   requests in flight across replica pools of real
+                   engines, with the Algorithm-1 Spin loop ticking live
+                   (scale-up under load, scale-to-zero when idle).
+
 Usage:
+  # serial baseline
   PYTHONPATH=src python -m repro.launch.serve --pool smollm-360m,glm4-9b \
       --requests 32 --profile balanced --router hybrid
+  # concurrent serve plane
+  PYTHONPATH=src python -m repro.launch.serve --concurrent --rate 8 \
+      --pool smollm-360m,glm4-9b --requests 32
 """
 from __future__ import annotations
 
@@ -17,9 +30,11 @@ import time
 import numpy as np
 
 from repro.configs.registry import ARCHS
-from repro.core.gateway import Gateway
+from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
+from repro.serving import SchedulerConfig
 from repro.data.benchmarks import generate_corpus
 
 DEFAULT_POOL = "smollm-360m,phi3-medium-14b,command-r-plus-104b"
@@ -46,6 +61,68 @@ def build_router(kind: str):
         return KeywordRouter()
 
 
+def _print_results(results, wall, args, mode):
+    print(f"\nserved {len(results)} requests in {wall:.1f}s "
+          f"({mode}, router={args.router}, profile={args.profile}, "
+          f"tput={len(results) / max(wall, 1e-9):.2f} rps)")
+    by_model = {}
+    for r in results:
+        by_model.setdefault((r.model, r.backend), []).append(r)
+    print(f"{'service':30s} {'n':>4s} {'mean_ttft(s)':>12s} "
+          f"{'mean_lat(s)':>11s} {'ok':>6s}")
+    for (m, b), rs in sorted(by_model.items()):
+        print(f"{m + '/' + b:30s} {len(rs):4d} "
+              f"{np.mean([r.ttft_s for r in rs]):12.3f} "
+              f"{np.mean([r.latency_s for r in rs]):11.3f} "
+              f"{sum(r.completed for r in rs):3d}/{len(rs)}")
+
+
+def run_serial(pool, args) -> None:
+    gw = Gateway(pool, router=build_router(args.router),
+                 profile=PROFILES[args.profile], max_seq=96)
+    prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
+
+    t0 = time.perf_counter()
+    results = [gw.handle(p.text, max_new_tokens=args.max_new_tokens,
+                         deadline_s=args.deadline_s) for p in prompts]
+    wall = time.perf_counter() - t0
+
+    _print_results(results, wall, args, "serial")
+    print("\nlifecycle events (cold/warm starts):")
+    for name, secs in gw.cold_starts:
+        print(f"  {name:40s} {secs:6.2f}s")
+
+
+def run_concurrent(pool, args) -> None:
+    spin = SpinConfig(window_s=60.0, cooldown_s=0.5, idle_tau_s=2.0,
+                      tick_s=0.2, max_replicas=4)
+    gw = AsyncGateway(pool, router=build_router(args.router),
+                      profile=PROFILES[args.profile], max_seq=96, spin=spin,
+                      sched=SchedulerConfig(
+                          max_queue_depth=args.max_queue_depth))
+    prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
+    rng = np.random.RandomState(3)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=len(prompts)))
+    jobs = [(p.text, dict(max_new_tokens=args.max_new_tokens,
+                          deadline_s=args.deadline_s)) for p in prompts]
+
+    uids, wall = serve_open_loop(gw, jobs, arrivals)
+    gw.settle(timeout_s=spin.idle_tau_s + 1.0)
+    results = [gw.poll(u) for u in uids if u is not None]
+    results = [r for r in results if r is not None]
+
+    _print_results(results, wall, args, f"concurrent @ {args.rate:.1f} rps")
+    if gw.shed_uids:
+        print(f"shed at admission (queue depth {args.max_queue_depth}): "
+              f"{len(gw.shed_uids)}")
+    print("\nlifecycle events (pool, measured on live engines):")
+    for e in gw.pool.events:
+        print(f"  {e}")
+    print("orchestrator decisions (Algorithm 1, live):")
+    for e in gw.orch_events:
+        print(f"  {e}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", default=DEFAULT_POOL)
@@ -55,6 +132,13 @@ def main() -> None:
     ap.add_argument("--router", default="keyword",
                     choices=("keyword", "distilbert", "hybrid"))
     ap.add_argument("--deadline-s", type=float, default=120.0)
+    ap.add_argument("--concurrent", action="store_true",
+                    help="use the AsyncGateway serve plane (replica pools, "
+                         "bounded queues, live Spin control loop)")
+    ap.add_argument("--rate", type=float, default=6.0,
+                    help="open-loop Poisson arrival rate, rps (--concurrent)")
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="per-service admission bound (--concurrent)")
     args = ap.parse_args()
 
     pool = {}
@@ -66,30 +150,12 @@ def main() -> None:
         pool[name] = dataclasses.replace(ARCHS[name].reduced(),
                                          dtype="float32")
 
-    gw = Gateway(pool, router=build_router(args.router),
-                 profile=PROFILES[args.profile], max_seq=96)
-    prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
-
-    t0 = time.perf_counter()
-    results = [gw.handle(p.text, max_new_tokens=args.max_new_tokens,
-                         deadline_s=args.deadline_s) for p in prompts]
-    wall = time.perf_counter() - t0
-
-    print(f"\nserved {len(results)} requests in {wall:.1f}s "
-          f"(router={args.router}, profile={args.profile})")
-    by_model = {}
-    for r in results:
-        by_model.setdefault((r.model, r.backend), []).append(r)
-    print(f"{'service':30s} {'n':>4s} {'mean_ttft(s)':>12s} "
-          f"{'mean_lat(s)':>11s} {'ok':>6s}")
-    for (m, b), rs in sorted(by_model.items()):
-        print(f"{m + '/' + b:30s} {len(rs):4d} "
-              f"{np.mean([r.ttft_s for r in rs]):12.3f} "
-              f"{np.mean([r.latency_s for r in rs]):11.3f} "
-              f"{sum(r.completed for r in rs):3d}/{len(rs)}")
-    print("\nlifecycle events (cold/warm starts):")
-    for name, secs in gw.cold_starts:
-        print(f"  {name:40s} {secs:6.2f}s")
+    if args.concurrent:
+        if args.rate <= 0:
+            ap.error("--rate must be > 0 (open-loop arrivals per second)")
+        run_concurrent(pool, args)
+    else:
+        run_serial(pool, args)
 
 
 if __name__ == "__main__":

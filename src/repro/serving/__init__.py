@@ -1,3 +1,7 @@
 from repro.serving.backend import BACKENDS, BackendProfile, get_backend  # noqa: F401
-from repro.serving.engine import GenResult, InferenceEngine, Request  # noqa: F401
 from repro.serving.sampling import SamplingParams, sample  # noqa: F401
+from repro.serving.engine import (CompiledFns, GenResult, InferenceEngine,  # noqa: F401
+                                  Request, compile_fns)
+from repro.serving.replica_pool import ReplicaPool, ScaleEvent  # noqa: F401
+from repro.serving.scheduler import (RequestScheduler, SchedStats,  # noqa: F401
+                                     SchedulerConfig)

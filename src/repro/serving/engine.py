@@ -57,11 +57,48 @@ class _Slot:
     done: bool = True
 
 
+def _insert_impl(cache, rcache, slot):
+    def put(path, g, r):
+        axis = 0 if any(getattr(k, "key", None) == "prefix" for k in path) else 1
+        return jax.lax.dynamic_update_slice_in_dim(g, r.astype(g.dtype),
+                                                   slot, axis=axis)
+    return jax.tree_util.tree_map_with_path(put, cache, rcache)
+
+
+@dataclass(frozen=True)
+class CompiledFns:
+    """Jitted step functions for one (config, backend, max_seq) service.
+
+    Shareable across replicas: a second replica of a live service reuses
+    the first replica's XLA executables, so only the first spin-up of a
+    service ever pays compile — the dominant real cold-start cost. The
+    replica pool caches these across scale-to-zero (its "code cache").
+    """
+    prefill: object
+    decode: object
+    insert: object
+
+
+def compile_fns(cfg: ModelConfig, backend: BackendProfile,
+                max_seq: int) -> CompiledFns:
+    qc = backend.q_chunk
+
+    def _prefill(params, batch):
+        return model_prefill(params, cfg, batch, max_seq, q_chunk=qc)
+
+    def _decode(params, token, cache, pos):
+        return model_decode(params, cfg, token, cache, pos)
+
+    return CompiledFns(prefill=jax.jit(_prefill), decode=jax.jit(_decode),
+                       insert=jax.jit(_insert_impl))
+
+
 class InferenceEngine:
     """Continuous-batching engine for one (model x backend) instance."""
 
     def __init__(self, cfg: ModelConfig, params, backend: BackendProfile,
-                 max_seq: int = 512, seed: int = 0):
+                 max_seq: int = 512, seed: int = 0,
+                 fns: Optional[CompiledFns] = None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
@@ -73,26 +110,10 @@ class InferenceEngine:
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
         self.cache = init_cache(cfg, self.max_batch, max_seq, self._kv_dtype)
         self._finished: List[GenResult] = []
-
-        qc = backend.q_chunk
-
-        def _prefill(params, batch):
-            return model_prefill(params, cfg, batch, max_seq, q_chunk=qc)
-
-        def _decode(params, token, cache, pos):
-            return model_decode(params, cfg, token, cache, pos)
-
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode)
-        self._insert = jax.jit(self._insert_impl)
-
-    # -- cache slot insertion ------------------------------------------------
-    def _insert_impl(self, cache, rcache, slot):
-        def put(path, g, r):
-            axis = 0 if any(getattr(k, "key", None) == "prefix" for k in path) else 1
-            return jax.lax.dynamic_update_slice_in_dim(g, r.astype(g.dtype),
-                                                       slot, axis=axis)
-        return jax.tree_util.tree_map_with_path(put, cache, rcache)
+        self.fns = fns or compile_fns(cfg, backend, max_seq)
+        self._prefill = self.fns.prefill
+        self._decode = self.fns.decode
+        self._insert = self.fns.insert
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -101,6 +122,10 @@ class InferenceEngine:
 
     def has_work(self) -> bool:
         return bool(self._queue) or any(not s.done for s in self._slots)
+
+    def free_slots(self) -> int:
+        """Slots a scheduler may still fill (free minus already queued)."""
+        return sum(1 for s in self._slots if s.done) - len(self._queue)
 
     def step(self) -> List[GenResult]:
         """Admit waiting requests, run one batched decode, reap finished."""
@@ -122,10 +147,21 @@ class InferenceEngine:
                             else s.req.tokens[-1])
                     tokens[i, 0] = last
                     pos[i] = s.pos
-            self.key, sk = jax.random.split(self.key)
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos))
-            nxt = np.asarray(sample(logits, self._slots[active[0]].req.sampling, sk))
+            # sample per request: group active slots by their SamplingParams
+            # so mixed batches honor each request's temperature/top-k/top-p
+            # (a single sample() over the batch would silently apply the
+            # first active slot's params to everyone)
+            nxt = np.zeros((self.max_batch,), np.int32)
+            groups: Dict[SamplingParams, List[int]] = {}
+            for i in active:
+                groups.setdefault(self._slots[i].req.sampling, []).append(i)
+            for sp, idxs in groups.items():
+                self.key, sk = jax.random.split(self.key)
+                toks = np.asarray(sample(logits[np.asarray(idxs)], sp, sk))
+                for j, i in enumerate(idxs):
+                    nxt[i] = toks[j]
             t = time.perf_counter()
             for i in active:
                 s = self._slots[i]
@@ -190,6 +226,21 @@ class InferenceEngine:
         self.key, sk = jax.random.split(self.key)
         first = int(np.asarray(sample(logits, req.sampling, sk))[0])
         res.new_tokens.append(first)
+        # the first token is subject to the same termination rules as
+        # decoded ones: max_new_tokens=1 must return exactly one token,
+        # and an EOS straight out of prefill must stop generation
+        sp = req.sampling
+        t = time.perf_counter()
+        hit_eos = sp.eos_id is not None and first == sp.eos_id
+        full = len(res.new_tokens) >= sp.max_new_tokens
+        timed_out = (req.deadline_s is not None and
+                     t - req.arrival_t > req.deadline_s)
+        if hit_eos or full or timed_out:
+            res.latency = t - req.arrival_t
+            res.completed = (hit_eos or full) and not timed_out
+            res.timed_out = timed_out
+            self._finished.append(res)
+            return                       # never occupies a decode slot
         slot = self._slots[slot_id]
         slot.req = req
         slot.res = res

@@ -1,0 +1,160 @@
+"""Replica pools: real engine lifecycle for the concurrent serve plane.
+
+One ``ReplicaPool`` owns every live ``InferenceEngine`` replica in the
+process, keyed by (model, backend) service. Spin-up is genuinely
+expensive (param init/load + XLA compile) and measured; two warm layers
+cut it down:
+
+  * param cache — model weights stay resident after scale-to-zero (the
+    paper's "warm pool"), so a re-spin skips ``init_model``;
+  * code cache  — the jitted prefill/decode executables for a service
+    are shared across its replicas and survive scale-to-zero, so only
+    the FIRST replica of a service ever pays XLA compile (replica fork,
+    analogous to reusing a baked engine image).
+
+``scale()`` has exactly the ``scale_cb`` signature ``Orchestrator``
+(Algorithm 1) calls with, so the same Spin control loop that drives the
+discrete-event simulator drives these real engines. Every lifecycle
+action is recorded as a ``ScaleEvent`` — the measured cold/warm start
+log that calibrates the simulator's constants.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Tuple
+
+import jax
+
+from repro.models import init_model
+from repro.serving.backend import BACKENDS
+from repro.serving.engine import (CompiledFns, InferenceEngine, Request,
+                                  compile_fns)
+from repro.serving.sampling import SamplingParams
+
+_Key = Tuple[str, str]
+
+
+@dataclass
+class ScaleEvent:
+    t: float                 # wall time (perf_counter) the action started
+    model: str
+    backend: str
+    before: int              # replicas before
+    after: int               # replicas after
+    kind: str                # spin-cold | spin-warm | down | zero
+    duration_s: float        # blocking cost of the action
+
+    def __str__(self) -> str:
+        return (f"[{self.kind:>9s}] {self.model}/{self.backend} "
+                f"{self.before}->{self.after} ({self.duration_s:.3f}s)")
+
+
+class ReplicaPool:
+    """All live engine replicas, plus the warm param/code caches."""
+
+    def __init__(self, models: Dict[str, object], registry,
+                 max_seq: int = 256, seed: int = 0):
+        self.models = models
+        self.reg = registry
+        self.max_seq = max_seq
+        self.seed = seed
+        self._replicas: Dict[_Key, List[InferenceEngine]] = {
+            (m, b): [] for m in models for b in registry.backends}
+        self._params: Dict[str, object] = {}       # warm weights per model
+        self._code: Dict[_Key, CompiledFns] = {}   # compiled fns per service
+        self.events: List[ScaleEvent] = []
+        # (label, seconds) — same contract as Gateway.cold_starts
+        self.cold_starts: List[Tuple[str, float]] = []
+
+    # -- inspection ----------------------------------------------------------
+    def replicas(self, model: str, backend: str) -> List[InferenceEngine]:
+        return self._replicas[(model, backend)]
+
+    def engines(self) -> Iterator[Tuple[_Key, InferenceEngine]]:
+        for key, reps in self._replicas.items():
+            for eng in reps:
+                yield key, eng
+
+    def free_slots(self, model: str, backend: str) -> int:
+        return sum(e.free_slots() for e in self._replicas[(model, backend)])
+
+    def total_replicas(self) -> int:
+        return sum(len(r) for r in self._replicas.values())
+
+    def has_params(self, model: str) -> bool:
+        return model in self._params
+
+    # -- lifecycle (Orchestrator scale_cb target) -----------------------------
+    def scale(self, model: str, backend: str, replicas: int,
+              now: float = None) -> int:
+        """Bring the service to ``replicas`` live engines (blocking; real
+        spin-up cost is paid inline and measured). Returns the achieved
+        replica count — scale-down skips replicas with in-flight work."""
+        now = time.perf_counter() if now is None else now
+        entry = self.reg.entry(model, backend)
+        entry.accrue(now)
+        replicas = max(0, replicas)
+        while len(self._replicas[(model, backend)]) < replicas:
+            self._spin_up(model, backend, now)
+        if len(self._replicas[(model, backend)]) > replicas:
+            self._spin_down(model, backend, replicas, now)
+        return len(self._replicas[(model, backend)])
+
+    def evict(self, model: str) -> None:
+        """Drop the warm param + code caches — next spin is a true cold."""
+        self._params.pop(model, None)
+        for key in [k for k in self._code if k[0] == model]:
+            del self._code[key]
+        for (m, _), e in self.reg.matrix.items():
+            if m == model:
+                e.warm = 0
+
+    # -- internals -------------------------------------------------------
+    def _spin_up(self, model: str, backend: str, now: float) -> None:
+        key = (model, backend)
+        reps = self._replicas[key]
+        t0 = time.perf_counter()
+        cfg = self.models[model]
+        warm = model in self._params and key in self._code
+        if model not in self._params:
+            self._params[model] = init_model(cfg, jax.random.PRNGKey(self.seed))
+        if key not in self._code:
+            self._code[key] = compile_fns(cfg, BACKENDS[backend], self.max_seq)
+        eng = InferenceEngine(cfg, self._params[model], BACKENDS[backend],
+                              max_seq=self.max_seq,
+                              seed=self.seed + 101 * (len(reps) + 1),
+                              fns=self._code[key])
+        # trigger compile/execute of the step functions before the replica
+        # counts as live (the dominant real cold-start cost when cold)
+        eng.run([Request(uid=-1, tokens=[1, 2, 3],
+                         sampling=SamplingParams(max_new_tokens=2))])
+        dur = time.perf_counter() - t0
+        reps.append(eng)
+        entry = self.reg.entry(model, backend)
+        entry.replicas = len(reps)
+        entry.warm = 0
+        kind = "spin-warm" if warm else "spin-cold"
+        self.events.append(ScaleEvent(now, model, backend, len(reps) - 1,
+                                      len(reps), kind, dur))
+        self.cold_starts.append(
+            (f"{model}/{backend}/{'warm' if warm else 'cold'}", dur))
+
+    def _spin_down(self, model: str, backend: str, target: int,
+                   now: float) -> None:
+        key = (model, backend)
+        reps = self._replicas[key]
+        before = len(reps)
+        # retire idle replicas only — never kill in-flight work (the
+        # orchestrator's idle branch already requires model_active == 0,
+        # this guards the demand path and direct callers too)
+        idle = [e for e in reps if not e.has_work()]
+        for eng in idle[:max(0, before - target)]:
+            reps.remove(eng)
+        entry = self.reg.entry(model, backend)
+        entry.replicas = len(reps)
+        entry.warm = 1 if (not reps and model in self._params) else 0
+        if len(reps) != before:
+            kind = "zero" if not reps else "down"
+            self.events.append(ScaleEvent(now, model, backend, before,
+                                          len(reps), kind, 0.0))

@@ -1,0 +1,160 @@
+"""Request scheduler: bounded admission queues + the step-driven serve loop.
+
+Sits between the Pick layer (router + Algorithm-2 policy, which choose a
+(model, backend) service per request) and the ``ReplicaPool`` of real
+engines. Responsibilities:
+
+  * per-service FIFO admission queues with a bounded depth — beyond it
+    requests are SHED at submit time (backpressure instead of unbounded
+    latency collapse);
+  * deadline-aware dispatch: queued requests already past their deadline
+    are dropped before ever touching an engine slot;
+  * scale-from-zero on demand: work queued on a service with no live
+    replicas spins one up (the Orchestrator adds capacity beyond that);
+  * the serve loop: ``step()`` admits queued work into free slots (least
+    loaded replica first) and runs ONE decode iteration on every engine
+    with work — iteration-level continuous batching across the whole
+    pool, so many requests genuinely overlap.
+
+The scheduler also keeps the registry's ``queued``/``active_requests``
+live and reports finish latencies to telemetry, which is exactly what
+Algorithm 1 reads on each tick.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.serving.engine import GenResult, Request
+from repro.serving.replica_pool import ReplicaPool
+
+_Key = Tuple[str, str]
+
+
+@dataclass
+class SchedulerConfig:
+    max_queue_depth: int = 64     # per-service bound; beyond this we shed
+    shed_expired: bool = True     # drop queued requests already past deadline
+    spin_on_demand: bool = True   # scale 0->1 when work queues on a dead svc
+
+
+@dataclass
+class SchedStats:
+    submitted: int = 0
+    shed: int = 0                 # rejected at admission (queue full)
+    expired: int = 0              # dropped from queue past deadline
+    dispatched: int = 0
+    completed: int = 0
+    steps: int = 0
+
+
+class RequestScheduler:
+    def __init__(self, pool: ReplicaPool, registry, telemetry,
+                 cfg: Optional[SchedulerConfig] = None):
+        self.pool = pool
+        self.reg = registry
+        self.tel = telemetry
+        self.cfg = cfg or SchedulerConfig()
+        self._queues: Dict[_Key, Deque[Request]] = {
+            key: deque() for key in pool._replicas}
+        self._expired: List[Tuple[_Key, GenResult]] = []
+        self.stats = SchedStats()
+
+    # -- admission ----------------------------------------------------------
+    def enqueue(self, model: str, backend: str, req: Request,
+                now: float = None) -> bool:
+        """Admit a routed request. Returns False if shed (queue full)."""
+        key = (model, backend)
+        q = self._queues[key]
+        self.stats.submitted += 1
+        # fast path: nothing waiting and a free slot -> straight in
+        if not q and self.pool.free_slots(model, backend) > 0:
+            self._to_engine(key, req)
+            self.stats.dispatched += 1
+            return True
+        if len(q) >= self.cfg.max_queue_depth:
+            self.stats.shed += 1
+            return False
+        q.append(req)
+        self.reg.entry(model, backend).queued += 1
+        return True
+
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def has_work(self) -> bool:
+        return (any(self._queues.values()) or bool(self._expired)
+                or any(eng.has_work() for _, eng in self.pool.engines()))
+
+    # -- serve loop -----------------------------------------------------
+    def dispatch(self, now: float) -> int:
+        """Move queued requests into free engine slots (deadline-aware
+        FIFO). Spins a replica from zero when demand requires it."""
+        moved = 0
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            model, backend = key
+            entry = self.reg.entry(model, backend)
+            # sweep expired requests FIRST: a queue of only-dead work
+            # must not pay a spin-up it will never use
+            if self.cfg.shed_expired:
+                live = [r for r in q if not self._expire(key, r, now)]
+                if len(live) != len(q):
+                    q.clear()
+                    q.extend(live)
+                    entry.queued = len(q)
+            if not q:
+                continue
+            if self.cfg.spin_on_demand and not self.pool.replicas(*key):
+                self.pool.scale(model, backend, 1, now)
+            while q and self.pool.free_slots(model, backend) > 0:
+                req = q.popleft()
+                entry.queued = max(0, entry.queued - 1)
+                self._to_engine(key, req)
+                self.stats.dispatched += 1
+                moved += 1
+        return moved
+
+    def _expire(self, key: _Key, req: Request, now: float) -> bool:
+        if req.deadline_s is None or now - req.arrival_t <= req.deadline_s:
+            return False
+        res = GenResult(uid=req.uid, prompt_len=len(req.tokens),
+                        timed_out=True)
+        res.latency = now - req.arrival_t
+        self._expired.append((key, res))
+        self.stats.expired += 1
+        return True
+
+    def step(self, now: float = None) -> List[Tuple[_Key, GenResult]]:
+        """One serve-loop iteration over the whole pool: admit queued work,
+        run ONE batched decode on every engine with work, reap finished."""
+        now = time.perf_counter() if now is None else now
+        self.stats.steps += 1
+        self.dispatch(now)
+        out: List[Tuple[_Key, GenResult]]
+        out, self._expired = self._expired, []
+        for key, eng in self.pool.engines():
+            if not eng.has_work():
+                continue
+            entry = self.reg.entry(*key)
+            for res in eng.step():
+                entry.active_requests = max(0, entry.active_requests - 1)
+                self.tel.record_latency(key[0], time.perf_counter(),
+                                        res.latency)
+                self.stats.completed += 1
+                out.append((key, res))
+        return out
+
+    # -- internals -------------------------------------------------------
+    def _to_engine(self, key: _Key, req: Request) -> None:
+        # pack-first placement: fill the busiest replica that still has a
+        # free slot. Densest batches extract the most from iteration-level
+        # batching (a decode step costs ~the same at batch 1 and batch N),
+        # and replicas the pool may retire stay drained.
+        cands = [g for g in self.pool.replicas(*key) if g.free_slots() > 0]
+        eng = min(cands, key=lambda g: g.free_slots())
+        eng.submit(req)
+        self.reg.entry(*key).active_requests += 1

@@ -1,0 +1,141 @@
+"""Concurrent serve plane: scheduler, replica pool, live Spin control loop.
+
+All tests run against REAL engines (reduced smollm on CPU) through the
+full AsyncGateway path: Router -> Algorithm-2 policy -> bounded queues ->
+replica pool, with Algorithm-1 scaling applied to live engines.
+"""
+import time
+
+import pytest
+
+from conftest import reduced_f32
+from repro.core.gateway import AsyncGateway
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+
+SMOL = "smollm-360m"
+KEY = (SMOL, "trt")
+
+
+@pytest.fixture(scope="module")
+def agw():
+    # tick_s huge: tests drive Orchestrator.tick explicitly, so the serve
+    # loop's inline ticks can't interfere with queue/slot assertions
+    spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=0.5,
+                      tick_s=3600.0, max_replicas=2,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    return AsyncGateway({SMOL: reduced_f32(SMOL)},
+                        profile=PROFILES["balanced"], max_seq=96, spin=spin)
+
+
+def test_concurrent_requests_interleave(agw):
+    a = agw.submit("add the numbers now please", max_new_tokens=24)
+    b = agw.submit("count the items quickly", max_new_tokens=4)
+    agw.serve_all()
+    ra, rb = agw.poll(a), agw.poll(b)
+    assert ra.completed and len(ra.new_tokens) == 24
+    assert rb.completed and len(rb.new_tokens) == 4
+    # B entered the batch while A was still decoding: its first token
+    # landed (and it finished) before A's total latency elapsed — a
+    # serial plane would give B ttft >= A's full latency
+    assert rb.ttft_s < ra.latency_s
+    assert rb.latency_s < ra.latency_s
+
+
+def test_bounded_queue_sheds_when_saturated(agw):
+    agw.serve_all()
+    depth0 = agw.scheduler.cfg.max_queue_depth
+    agw.scheduler.cfg.max_queue_depth = 2
+    try:
+        # 1 replica x 4 trt slots + depth 2 => 12 submissions can't all fit
+        uids = [agw.submit(f"sum the numbers {i}", max_new_tokens=4)
+                for i in range(12)]
+        shed = sum(u is None for u in uids)
+        assert shed >= 1
+        assert agw.scheduler.stats.shed >= shed
+        assert len(agw.scheduler._queues[KEY]) <= 2
+        assert agw.registry.entry(*KEY).queued <= 2
+        agw.serve_all()
+        done = [agw.poll(u) for u in uids if u is not None]
+        assert all(r is not None and r.completed for r in done)
+    finally:
+        agw.scheduler.cfg.max_queue_depth = depth0
+
+
+def test_scale_to_zero_then_warm_respin(agw):
+    agw.serve_all()
+    pool = agw.pool
+    assert len(pool.replicas(*KEY)) >= 1
+    cold_durs = [e.duration_s for e in pool.events if e.kind == "spin-cold"]
+    assert cold_durs
+    pool.scale(*KEY, 0)
+    assert agw.registry.entry(*KEY).replicas == 0
+    assert agw.registry.entry(*KEY).warm == 1       # params stayed resident
+    assert pool.has_params(SMOL)
+    assert pool.events[-1].kind == "zero"
+    pool.scale(*KEY, 1)
+    ev = pool.events[-1]
+    assert ev.kind == "spin-warm"
+    # warm re-spin reuses cached params + compiled step functions
+    assert ev.duration_s < min(cold_durs)
+    u = agw.submit("sum the list", max_new_tokens=2)
+    agw.serve_all()
+    assert agw.poll(u).completed
+
+
+def test_orchestrator_adds_replica_under_load(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)
+    now = time.perf_counter()
+    # hot telemetry: 40 rps x 2 s latency >> one replica's 4 slots, so
+    # Little's law wants more capacity than one engine provides
+    for i in range(200):
+        t = now - 5.0 + i * 0.025
+        agw.telemetry.record_request(SMOL, t)
+        agw.telemetry.record_latency(SMOL, t, 2.0)
+    before = len(agw.pool.replicas(*KEY))
+    decisions = agw.orch.tick(time.perf_counter())
+    assert decisions.get(SMOL, 0) >= 2              # Alg. 1 asked for more
+    assert len(agw.pool.replicas(*KEY)) == agw.spin.max_replicas > before
+    # the added replicas are LIVE: a burst larger than one engine's slot
+    # count is absorbed without queue residue
+    uids = [agw.submit(f"count items {i}", max_new_tokens=2)
+            for i in range(6)]
+    agw.serve_all()
+    assert all(agw.poll(u).completed for u in uids)
+
+
+def test_orchestrator_scales_to_zero_when_idle(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)
+    # age out any hot request/latency telemetry a prior test injected —
+    # a live window would keep Alg. 1 in its scale-up branch
+    agw.telemetry._requests[SMOL].clear()
+    agw.telemetry._latency[SMOL].clear()
+    time.sleep(agw.spin.idle_tau_s + 0.2)           # no arrivals -> idle
+    decisions = agw.orch.tick(time.perf_counter())
+    assert decisions.get(SMOL) == 0
+    assert len(agw.pool.replicas(*KEY)) == 0
+    assert agw.pool.has_params(SMOL)                # warm pool survives
+    # next request re-spins from the warm caches and completes
+    u = agw.submit("sum the numbers", max_new_tokens=2)
+    agw.serve_all()
+    assert agw.poll(u).completed
+    assert agw.pool.events[-1].kind == "spin-warm"
+
+
+def test_expired_queued_requests_are_dropped(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)                         # exactly 4 trt slots
+    # saturate the engine slots, then queue one request with a deadline
+    # that expires while it waits: it must be reaped as timed_out without
+    # ever occupying a slot
+    blockers = [agw.submit(f"sum the items {i}", max_new_tokens=24)
+                for i in range(4)]
+    doomed = agw.submit("count this", max_new_tokens=4, deadline_s=1e-6)
+    assert doomed is not None
+    agw.serve_all()
+    r = agw.poll(doomed)
+    assert r is not None and not r.completed
+    assert agw.scheduler.stats.expired >= 1
+    assert all(agw.poll(u).completed for u in blockers)

@@ -56,6 +56,69 @@ def test_greedy_deterministic(engine):
     assert r1.new_tokens == r2.new_tokens
 
 
+def test_per_slot_sampling_in_mixed_batches(engine):
+    # regression: batched decode used to sample EVERY active slot with the
+    # first active slot's SamplingParams, so a greedy request sharing a
+    # batch with a high-temperature one got random tokens
+    cfg, eng = engine
+    rng = np.random.RandomState(9)
+    prompt_a = list(rng.randint(0, cfg.vocab_size, 12))
+    prompt_b = list(rng.randint(0, cfg.vocab_size, 12))
+    greedy = SamplingParams(max_new_tokens=8)
+    hot = SamplingParams(temperature=10.0, max_new_tokens=8)
+
+    def run(sampling_a):
+        res = eng.run([Request(uid=0, tokens=prompt_a, sampling=sampling_a),
+                       Request(uid=1, tokens=prompt_b, sampling=greedy)])
+        return {r.uid: r for r in res}
+
+    # B is greedy in both runs; slot 0's params must not leak onto it
+    r_hot, r_greedy = run(hot), run(greedy)
+    assert r_hot[1].new_tokens == r_greedy[1].new_tokens
+    assert all(r.completed for r in (*r_hot.values(), *r_greedy.values()))
+
+
+def test_per_slot_eos_in_mixed_batches(engine):
+    # each request's eos_id is honored individually inside a shared batch
+    cfg, eng = engine
+    ref = eng.run([Request(uid=0, tokens=[5, 6, 7],
+                           sampling=SamplingParams(max_new_tokens=6))])[0]
+    eos = ref.new_tokens[2]           # greedy token #3 becomes req-1's EOS
+    res = {r.uid: r for r in eng.run([
+        Request(uid=0, tokens=[5, 6, 7],
+                sampling=SamplingParams(max_new_tokens=6)),
+        Request(uid=1, tokens=[5, 6, 7],
+                sampling=SamplingParams(max_new_tokens=6, eos_id=eos))])}
+    assert len(res[0].new_tokens) == 6                 # no eos -> runs full
+    assert res[1].new_tokens[-1] == eos                # stopped at ITS eos
+    assert len(res[1].new_tokens) < 6
+    assert res[1].completed
+
+
+def test_first_token_respects_limits(engine):
+    # the token sampled from prefill logits counts against the limits:
+    # max_new_tokens=1 returns exactly one token, and a first token that
+    # IS the eos stops generation immediately
+    cfg, eng = engine
+    one = eng.run([Request(uid=0, tokens=[9, 10, 11],
+                           sampling=SamplingParams(max_new_tokens=1))])[0]
+    assert one.completed and len(one.new_tokens) == 1
+    eos_first = eng.run([Request(
+        uid=1, tokens=[9, 10, 11],
+        sampling=SamplingParams(max_new_tokens=6,
+                                eos_id=one.new_tokens[0]))])[0]
+    assert eos_first.completed and eos_first.new_tokens == one.new_tokens
+
+
+def test_engine_free_slots(engine):
+    cfg, eng = engine
+    assert eng.free_slots() == eng.max_batch
+    eng.submit(_reqs(cfg, 1)[0])
+    assert eng.free_slots() == eng.max_batch - 1       # queued counts
+    eng.run([])                                        # drain
+    assert eng.free_slots() == eng.max_batch
+
+
 def test_backend_profiles_are_distinct():
     names = set()
     for b in BACKENDS.values():

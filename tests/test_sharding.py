@@ -7,8 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AbstractMesh, PartitionSpec as P
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import AbstractMesh, PartitionSpec as P  # noqa: E402
 
 from repro.configs.registry import ARCHS, get_config_for_shape
 from repro.distributed.sharding import (PARAM_RULES, prune_spec,
