@@ -95,6 +95,16 @@ def save_result(name: str, payload: dict) -> None:
         json.dump(payload, f, indent=1, default=float)
 
 
+def save_bench(name: str, payload: dict) -> str:
+    """Machine-readable perf artifact: BENCH_<name>.json at the repo root
+    (CI uploads BENCH_*.json, so the perf trajectory is tracked per PR)."""
+    path = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", f"BENCH_{name}.json"))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float, sort_keys=True)
+    return path
+
+
 class BenchTimer:
     """Produces the ``name,us_per_call,derived`` CSV contract."""
     def __init__(self):

@@ -20,7 +20,7 @@ import time
 
 import numpy as np
 
-from common import save_result
+from common import save_bench, save_result
 from repro.configs.registry import ARCHS
 from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
 from repro.core.orchestrator import SpinConfig
@@ -37,6 +37,7 @@ def _models():
 
 def _stats(ttfts, lats):
     return {"mean_ttft_s": float(np.mean(ttfts)),
+            "p50_ttft_s": float(np.percentile(ttfts, 50)),
             "p95_ttft_s": float(np.percentile(ttfts, 95)),
             "mean_latency_s": float(np.mean(lats)),
             "p95_latency_s": float(np.percentile(lats, 95))}
@@ -70,6 +71,12 @@ def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
     jobs = [(p.text, dict(max_new_tokens=max_new, deadline_s=120.0))
             for p in prompts]
     uids, wall = serve_open_loop(gw, jobs, arrivals)
+    # snapshot paged KV-cache stats before settle retires the engines.
+    # This plane runs the trt latency profile (dense cache), so the
+    # hit-rate is null unless paged (vllm/tgi) replicas served traffic —
+    # prefix_bench.py is the paged plane's dedicated measurement.
+    hit_tok = sum(e.hit_tokens for _, e in gw.pool.engines() if e.paged)
+    seen_tok = sum(e.prompt_tokens for _, e in gw.pool.engines() if e.paged)
     # let the Spin idle branch fire: real scale-to-zero on live engines
     gw.settle(timeout_s=4.0)
     done = [gw.poll(u) for u in uids if u is not None]
@@ -78,6 +85,7 @@ def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
                  [r.latency_s for r in done] or [0.0])
     out.update(n=len(done), wall_s=wall, throughput_rps=len(done) / wall,
                completed=sum(r.completed for r in done),
+               prefix_hit_rate=(hit_tok / seen_tok if seen_tok else None),
                shed=len(gw.shed_uids), offered_rate_rps=rate,
                peak_replicas=max((e.after for e in gw.pool.events),
                                  default=0),
@@ -135,10 +143,13 @@ def main():
           f"scale-to-zero: {len(zeros)} "
           f"({'PASS' if zeros else 'MISSING'})")
 
-    save_result("serve_bench", {
+    payload = {
         "serial": serial, "concurrent": conc, "throughput_ratio": ratio,
         "orch_scale_ups": len(ups), "orch_scale_to_zeros": len(zeros),
-        "requests": len(prompts), "max_new_tokens": args.max_new_tokens})
+        "requests": len(prompts), "max_new_tokens": args.max_new_tokens}
+    save_result("serve_bench", payload)
+    path = save_bench("serve", payload)
+    print(f"bench artifact: {path}")
     return ratio
 
 

@@ -189,7 +189,8 @@ class AsyncGateway:
                  max_seq: int = 256, seed: int = 0,
                  cost_configs: Dict[str, ModelConfig] = None,
                  spin: Optional[SpinConfig] = None,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 paged="auto"):
         from repro.configs.registry import ARCHS as _FULL
         self.models = models
         self.router = router or KeywordRouter()
@@ -205,7 +206,7 @@ class AsyncGateway:
         self.max_seq = max_seq
         self.spin = spin or SpinConfig()
         self.pool = ReplicaPool(models, self.registry, max_seq=max_seq,
-                                seed=seed)
+                                seed=seed, paged=paged)
         self.scheduler = RequestScheduler(self.pool, self.registry,
                                           self.telemetry, sched)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,

@@ -40,6 +40,10 @@ class SpinConfig:
     tick_s: float = 5.0            # control-loop period
     scale_to_zero: bool = True     # PS(auto); False reproduces PS(base)
     warm_pool: Dict[str, int] = field(default_factory=lambda: dict(WARM_POOL))
+    # paged serve plane: a service whose every replica is out of
+    # allocatable KV blocks (kv_pressure gauge above this) is treated as
+    # loaded even when Little's law alone wouldn't add capacity
+    kv_pressure_high: float = 0.92
 
 
 class Orchestrator:
@@ -72,6 +76,12 @@ class Orchestrator:
             if queued:
                 target = max(target, math.ceil(queued / conc))
             current = self.reg.model_replicas(model)              # line 5
+            # KV-block pressure (paged engines report it via the
+            # scheduler): all replicas block-starved -> memory, not
+            # compute, is the bottleneck; one more replica adds a pool
+            if current and self.tel.gauge(model, "kv_pressure", now) \
+                    >= self.cfg.kv_pressure_high:
+                target = max(target, current + 1)
             min_warm = self.cfg.warm_pool.get(
                 self._tier(model), 0)                             # line 6
             # idle wins over the Little's-law target: once arrivals have

@@ -19,6 +19,7 @@ class Telemetry:
         self._requests: Dict[str, Deque[float]] = defaultdict(deque)
         self._latency: Dict[str, Deque[Tuple[float, float]]] = defaultdict(deque)
         self._last_seen: Dict[str, float] = {}
+        self._gauges: Dict[Tuple[str, str], Tuple[float, float]] = {}
 
     # -- recording ---------------------------------------------------------
     def record_request(self, model: str, t: float) -> None:
@@ -29,6 +30,24 @@ class Telemetry:
     def record_latency(self, model: str, t: float, latency_s: float) -> None:
         self._latency[model].append((t, latency_s))
         self._gc(model, t)
+
+    def record_gauge(self, model: str, name: str, t: float,
+                     value: float) -> None:
+        """Point-in-time service gauge (e.g. ``kv_pressure``,
+        ``kv_hit_rate`` from the paged serve plane). Last write wins."""
+        self._gauges[(model, name)] = (t, value)
+
+    def gauge(self, model: str, name: str, now: float = None,
+              default: float = 0.0) -> float:
+        """Latest gauge value; stale readings (older than the telemetry
+        window) fall back to ``default`` when ``now`` is given."""
+        rec = self._gauges.get((model, name))
+        if rec is None:
+            return default
+        t, value = rec
+        if now is not None and now - t > self.window_s:
+            return default
+        return value
 
     def _gc(self, model: str, now: float) -> None:
         cut = now - self.window_s

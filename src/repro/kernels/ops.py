@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _paged
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -39,6 +40,14 @@ def decode_attention(q, k_cache, v_cache, valid_len, *, ring: bool = False,
     interpret = _default_interpret() if interpret is None else interpret
     return _dec.decode_attention(q, k_cache, v_cache, valid_len, ring=ring,
                                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, valid_len, *,
+                           interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged.paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         valid_len, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

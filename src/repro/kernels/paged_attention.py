@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a PAGED cache.
+
+Same online-softmax structure as ``decode_attention.py``, but KV lives in
+a global block pool shaped (num_blocks, block_size, Hkv, D) shared by
+every sequence, and each sequence names its blocks through a block table.
+The grid walks (batch, kv-head, block-slot); the per-sequence block table
+is a scalar-prefetch operand, so each KV block's index map dereferences
+``table[b, j]`` and the DMA engine streams exactly the blocks the
+sequence owns — attention never touches another request's memory, and a
+shared prefix block is read in place by every sequence that leases it
+(no gather materialization, no copies).
+
+Scratch accumulators (m, l, acc) persist across the sequential block-slot
+grid dimension; the output tile is flushed once on the last slot. Blocks
+past ``valid_len`` are skipped entirely (their DMA still points at a
+real block, masked out of the softmax). Validated against
+``ref.ref_paged_decode_attention`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, valid_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, block_size: int,
+                  blocks_per_seq: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = valid_ref[b]                                    # written tokens
+    start = j * block_size
+
+    @pl.when(start < valid)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (G, D)
+        k_blk = k_ref[0, :, 0, :].astype(jnp.float32)       # (bs, D)
+        v_blk = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = q @ k_blk.T                                     # (G, bs)
+        slot = start + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where((slot < valid)[None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + p @ v_blk
+        m_scr[...] = m_new
+
+    @pl.when(j == blocks_per_seq - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,             # (B, Hq, D) — one token per sequence
+    k_pool: jnp.ndarray,        # (NB, BS, Hkv, D) global block pool
+    v_pool: jnp.ndarray,        # (NB, BS, Hkv, Dv)
+    block_tables: jnp.ndarray,  # (B, NBseq) int32 pool block ids
+    valid_len: jnp.ndarray,     # (B,) int32 — written tokens per sequence
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    NB, BS, Hkv, Dv = v_pool.shape
+    NBseq = block_tables.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, D)
+    kernel = functools.partial(_paged_kernel, scale=scale, block_size=BS,
+                               blocks_per_seq=NBseq)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # block tables + valid lens
+        grid=(B, Hkv, NBseq),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, vl: (b, h, 0, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda b, h, j, bt, vl: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, BS, 1, Dv),
+                         lambda b, h, j, bt, vl: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv),
+                               lambda b, h, j, bt, vl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dv), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), valid_len.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, Hq, Dv)

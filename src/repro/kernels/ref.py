@@ -52,6 +52,25 @@ def ref_decode_attention(q, k_cache, v_cache, valid_len, *, ring=False,
     return jnp.einsum("bhk,bhkd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, valid_len,
+                               *, scale: Optional[float] = None):
+    """Paged decode oracle: gather KV through the block table, then run the
+    dense decode reference.
+
+    q: (B, Hq, D); pools: (NB, BS, Hkv, D); block_tables: (B, NBseq) int32
+    ids into the pool's leading axis; valid_len: (B,) written tokens."""
+    B = q.shape[0]
+    NB, BS, Hkv, D = k_pool.shape
+    # (B, NBseq, BS, Hkv, D) -> (B, Hkv, NBseq*BS, D)
+    def gather(pool):
+        g = jnp.take(pool, block_tables, axis=0)
+        g = g.reshape(B, -1, Hkv, pool.shape[-1])
+        return jnp.moveaxis(g, 1, 2)
+
+    return ref_decode_attention(q, gather(k_pool), gather(v_pool), valid_len,
+                                ring=False, scale=scale)
+
+
 def ref_ssd(x, dt, A, Bm, Cm):
     """Naive O(L) recurrence. x: (B,L,H,P); dt: (B,L,H); A: (H,);
     Bm/Cm: (B,L,H,N). Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""

@@ -298,6 +298,156 @@ def gqa_decode(params: Params, cfg: ModelConfig, x, cos, sin,
 
 
 # ---------------------------------------------------------------------------
+# paged GQA (block-pool KV cache; serving/kvpool.py owns the block ids)
+#
+# The cache is a GLOBAL pool of KV blocks shaped (num_blocks, block_size,
+# Hkv, D) shared by every sequence on the engine; a sequence's KV for
+# token position p lives at pool[table[p // bs], p % bs]. These jnp paths
+# define the semantics the Pallas kernel (kernels/paged_attention.py)
+# implements for the TPU hot path: they gather the leased blocks into
+# token order and reuse the dense attention math, so a paged engine is
+# arithmetically identical to the dense one.
+
+
+def _paged_parts(pool: Params):
+    k = pool["k"]
+    nb, bs = k.shape[0], k.shape[1]
+    flat = {name: arr.reshape((nb * bs,) + arr.shape[2:])
+            for name, arr in pool.items()}
+    return flat, nb, bs
+
+
+def _paged_write(pool: Params, k: jnp.ndarray, v: jnp.ndarray,
+                 flat_idx: jnp.ndarray) -> Params:
+    """Scatter new tokens into the pool. ``k``/``v``: (N, Hkv, D) with
+    leading dim matching ``flat_idx`` (token-flat pool indices; entries
+    >= num_blocks*block_size are dropped — padded/inactive writes)."""
+    flat, nb, bs = _paged_parts(pool)
+    if "k_scale" in pool:
+        from repro.serving.kvquant import quantize
+        kq, ks = quantize(k)
+        vq, vs = quantize(v)
+        new = {"k": kq, "k_scale": ks, "v": vq, "v_scale": vs}
+    else:
+        new = {"k": k, "v": v}
+    out = {}
+    for name, arr in flat.items():
+        upd = new[name].astype(arr.dtype)
+        arr = arr.at[flat_idx].set(upd, mode="drop")
+        out[name] = arr.reshape(pool[name].shape)
+    return out
+
+
+def _paged_gather(cfg: ModelConfig, pool: Params, flat_idx: jnp.ndarray):
+    """Read tokens back out of the pool in sequence order.
+    ``flat_idx``: (..., S) token-flat indices -> (kc, vc) (..., S, Hkv, D)."""
+    flat, _, _ = _paged_parts(pool)
+    gathered = {name: arr[flat_idx] for name, arr in flat.items()}
+    return _unpack_kv(cfg, gathered)
+
+
+def paged_gather_ctx(cache: Params, table_ctx: jnp.ndarray) -> Params:
+    """Lease-read the context blocks of one sequence out of the pool:
+    every leaf (..., NB, BS, H, D) -> (..., ctx*BS, H, D) in token order.
+    A pure read — the pool buffer is never rewritten (that is the whole
+    reason prefill splits into gather / compute / scatter)."""
+    def take(leaf):
+        g = jnp.take(leaf, table_ctx, axis=leaf.ndim - 4)
+        shp = g.shape
+        merged = shp[:leaf.ndim - 4] + (shp[leaf.ndim - 4] * shp[leaf.ndim - 3],)
+        return g.reshape(merged + shp[leaf.ndim - 2:])
+
+    return jax.tree_util.tree_map(take, cache)
+
+
+def paged_scatter(cache: Params, new_kv: Params, block_table: jnp.ndarray,
+                  start, s_real) -> Params:
+    """Write a request's freshly-computed suffix KV into its pool blocks
+    (positions ``start .. start+s_real-1`` through ``block_table``).
+    Compiled with the pool donated: the update aliases in place, costing
+    O(suffix), not O(pool). Leaves pair as (..., NB, BS, H, D) with
+    (..., Sb, H, D)."""
+    k0 = new_kv["stack"]["k"] if "stack" in new_kv else new_kv["k"]
+    Sb = k0.shape[-3]
+    nb = (cache["stack"]["k"] if "stack" in cache else cache["k"]).shape[-4]
+    bs = (cache["stack"]["k"] if "stack" in cache else cache["k"]).shape[-3]
+    pos = start + jnp.arange(Sb)
+    blk = block_table[jnp.clip(pos // bs, 0, block_table.shape[0] - 1)]
+    blk = jnp.where(jnp.arange(Sb) < s_real, blk, nb)          # drop pads
+    off = pos % bs
+
+    def put(leaf, upd):
+        upd = upd.astype(leaf.dtype)
+        if leaf.ndim == 5:                        # stacked layers leading
+            return leaf.at[:, blk, off].set(upd, mode="drop")
+        return leaf.at[blk, off].set(upd, mode="drop")
+
+    return jax.tree_util.tree_map(put, cache, new_kv)
+
+
+def gqa_paged_prefill(params: Params, cfg: ModelConfig, x, cos, sin,
+                      ctx_kv: Params, start, s_real
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """Suffix prefill of one layer against gathered context KV.
+
+    ``x``: (1, Sb, d) — the UNCACHED tail of the prompt, right-padded to
+    a bucket; ``ctx_kv``: this layer's pool blocks gathered in token
+    order (``paged_gather_ctx``), entries >= ``start`` masked out;
+    ``s_real`` <= Sb is the count of live (non-pad) suffix tokens.
+    Queries run at global offset ``start`` so causality and RoPE line up
+    with the cached prefix. Returns (out, packed suffix KV for
+    ``paged_scatter``) — the pool itself is untouched here."""
+    B, Sb, _ = x.shape
+    q, k, v = _proj_qkv(params, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    kc, vc = _unpack_kv(cfg, ctx_kv)              # (CtxT, Hkv, D)
+    CtxT = kc.shape[0]
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qg = q.reshape(B, Sb, Hkv, G, cfg.head_dim).astype(jnp.float32)
+    kfull = jnp.concatenate([kc[None].astype(jnp.float32),
+                             k.astype(jnp.float32)], axis=1)   # (1, K, H, D)
+    vfull = jnp.concatenate([vc[None].astype(jnp.float32),
+                             v.astype(jnp.float32)], axis=1)
+    logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kfull) * scale
+    i = jnp.arange(Sb)
+    live_ctx = jnp.broadcast_to((jnp.arange(CtxT) < start)[None, :],
+                                (Sb, CtxT))
+    live_new = (i[None, :] <= i[:, None]) & (i[None, :] < s_real)
+    mask = jnp.concatenate([live_ctx, live_new], axis=1)       # (Sb, K)
+    logits = jnp.where(mask[None, :, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", w, vfull)
+    o = o.reshape(B, Sb, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    return _out_proj(params, cfg, o), _pack_kv(cfg, k[0], v[0])
+
+
+def gqa_paged_decode(params: Params, cfg: ModelConfig, x, cos, sin,
+                     pool: Params, block_tables: jnp.ndarray, pos
+                     ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode against a paged cache. ``block_tables``:
+    (B, NBseq) pool block ids; ``pos``: (B,) global index of the new
+    token, or -1 for inactive batch slots (their write is dropped and
+    their output is garbage the engine ignores)."""
+    B = x.shape[0]
+    q, k, v = _proj_qkv(params, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    _, nb, bs = _paged_parts(pool)
+    pos = jnp.asarray(pos, jnp.int32)
+    safe = jnp.maximum(pos, 0)
+    blk = jnp.take_along_axis(block_tables, (safe // bs)[:, None], axis=1)[:, 0]
+    flat = jnp.where(pos >= 0, blk * bs + safe % bs, nb * bs)
+    pool = _paged_write(pool, k[:, 0], v[:, 0], flat)
+    t = jnp.arange(block_tables.shape[1] * bs)
+    gflat = jnp.take(block_tables, t // bs, axis=1) * bs + t % bs  # (B, Smax)
+    kc, vc = _paged_gather(cfg, pool, gflat)
+    o = decode_attention_jnp(q, kc, vc, pos + 1)
+    return _out_proj(params, cfg, o), pool
+
+
+# ---------------------------------------------------------------------------
 # cross attention (encoder-decoder)
 
 

@@ -255,6 +255,160 @@ def lm_decode(
 
 
 # ---------------------------------------------------------------------------
+# paged prefill / decode (block-pool KV cache; see serving/kvpool.py)
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged caching covers the GQA transformer trunk (dense + MoE).
+    MLA/SSM/hybrid/enc-dec state and ring-buffer windows keep their dense
+    layouts; sequences there fall back to the dense engine."""
+    return (cfg.family in ("dense", "moe") and cfg.attention_type == "gqa"
+            and cfg.sliding_window is None)
+
+
+def lm_paged_prefill(
+    params: Params, cfg: ModelConfig, tokens: jnp.ndarray, ctx_kv: Params,
+    start, s_real, *, moe_cf=1.25,
+) -> Tuple[jnp.ndarray, Params]:
+    """Compute pass of a paged suffix prefill (no pool access).
+
+    Prefill is split in three so the pool is never re-materialized:
+    ``attn.paged_gather_ctx`` reads the cached context blocks (small),
+    this function runs the model over the uncached suffix against that
+    gathered context, and ``attn.paged_scatter`` writes the returned
+    suffix KV into the request's blocks in place (donated buffer).
+
+    tokens: (1, Sb) suffix right-padded to a bucket; ctx_kv: gathered
+    context KV (same pytree shape as the pool, block axes merged);
+    start: tokens already cached (prefix hit); s_real: live suffix
+    tokens. Returns (logits of the last live token (1, V), suffix KV)."""
+    h = embed_tokens(params, cfg, tokens)
+    _, Sb, _ = h.shape
+    positions = (start + jnp.arange(Sb))[None, :]
+    cos, sin = _cos_sin(cfg, positions)
+
+    def block(lp, h, c):
+        x = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        o, kv = attn.gqa_paged_prefill(lp["attn"], cfg, x, cos, sin, c,
+                                       start, s_real)
+        h = h + o
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        if cfg.has_moe and "router" in lp["ffn"]:
+            y, _ = moe_ffn(lp["ffn"], cfg, x, capacity_factor=moe_cf)
+        else:
+            y = ffn(lp["ffn"], cfg, x)
+        return h + y, kv
+
+    new_prefix = []
+    for lp, c in zip(params.get("prefix_layers", []), ctx_kv.get("prefix", [])):
+        h, kv = block(lp, h, c)
+        new_prefix.append(kv)
+
+    def scan_body(h, xs):
+        lp, c = xs
+        h, kv = block(lp, h, c)
+        return h, kv
+
+    h, new_stack = jax.lax.scan(scan_body, h,
+                                (params["layers"], ctx_kv["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    h_last = jax.lax.dynamic_slice_in_dim(h, jnp.maximum(s_real - 1, 0), 1,
+                                          axis=1)[:, 0]
+    new_kv = {"stack": new_stack}
+    if new_prefix:
+        new_kv["prefix"] = new_prefix
+    return unembed(params, cfg, h_last), new_kv
+
+
+def lm_paged_decode(
+    params: Params, cfg: ModelConfig, token: jnp.ndarray, cache: Params,
+    block_tables: jnp.ndarray, pos, *, moe_cf=None,
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token step against the block pool. token: (B, 1) int32;
+    block_tables: (B, NBseq); pos: (B,) global token index, -1 for
+    inactive slots. Returns (logits (B, V), updated pool)."""
+    h = params["embed"][token].astype(_adtype(cfg))
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos, 0)[:, None]
+    cos, sin = _cos_sin(cfg, positions)
+
+    def block(lp, h, c):
+        x = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        o, c = attn.gqa_paged_decode(lp["attn"], cfg, x, cos, sin, c,
+                                     block_tables, pos)
+        h = h + o
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        if cfg.has_moe and "router" in lp["ffn"]:
+            y, _ = moe_ffn(lp["ffn"], cfg, x, capacity_factor=moe_cf)
+        else:
+            y = ffn(lp["ffn"], cfg, x)
+        return h + y, c
+
+    new_prefix = []
+    for lp, c in zip(params.get("prefix_layers", []), cache.get("prefix", [])):
+        h, c = block(lp, h, c)
+        new_prefix.append(c)
+
+    def scan_body(h, xs):
+        lp, c = xs
+        h, c = block(lp, h, c)
+        return h, c
+
+    h, new_stack = jax.lax.scan(scan_body, h, (params["layers"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params, cfg, h[:, -1])
+    new_cache = {"stack": new_stack}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return logits, new_cache
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=None) -> Params:
+    """Global KV block pool: every leaf is (num_blocks, block_size, ...)
+    — one population of blocks shared by all sequences on the engine,
+    leased out through serving/kvpool.py block tables."""
+    assert supports_paged(cfg), f"{cfg.name}: no paged cache for this family"
+    dtype = dtype or _adtype(cfg)
+    n_prefix = cfg.first_dense_layers if cfg.has_moe else 0
+    n_stack = cfg.num_layers - n_prefix
+
+    if cfg.kv_cache_dtype == "int8":
+        def one(lead=()):
+            kv_shape = lead + (num_blocks, block_size, cfg.num_kv_heads,
+                               cfg.head_dim)
+            sc_shape = lead + (num_blocks, block_size, cfg.num_kv_heads, 1)
+            return {
+                "k": jnp.zeros(kv_shape, jnp.int8),
+                "k_scale": jnp.zeros(sc_shape, jnp.float32),
+                "v": jnp.zeros(kv_shape, jnp.int8),
+                "v_scale": jnp.zeros(sc_shape, jnp.float32),
+            }
+    else:
+        def one(lead=()):
+            shape = lead + (num_blocks, block_size, cfg.num_kv_heads,
+                            cfg.head_dim)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    cache: Params = {"stack": one(lead=(n_stack,))}
+    if n_prefix:
+        cache["prefix"] = [one() for _ in range(n_prefix)]
+    return cache
+
+
+def copy_paged_block(cache: Params, src, dst) -> Params:
+    """Copy-on-write helper: duplicate block ``src`` into ``dst`` across
+    every layer and leaf of the pool (a shared prefix block a request
+    must append into is copied first; see kvpool.RadixPrefixCache)."""
+    def cp(arr):
+        axis = arr.ndim - 4          # block axis: (..., NB, BS, H, D/1)
+        blk = jax.lax.dynamic_index_in_dim(arr, src, axis=axis)
+        return jax.lax.dynamic_update_index_in_dim(arr, blk, dst, axis=axis)
+
+    return jax.tree_util.tree_map(cp, cache)
+
+
+# ---------------------------------------------------------------------------
 # cache construction (also used by the dry-run via jax.eval_shape)
 
 

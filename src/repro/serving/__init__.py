@@ -1,7 +1,10 @@
 from repro.serving.backend import BACKENDS, BackendProfile, get_backend  # noqa: F401
 from repro.serving.sampling import SamplingParams, sample  # noqa: F401
 from repro.serving.engine import (CompiledFns, GenResult, InferenceEngine,  # noqa: F401
-                                  Request, compile_fns)
+                                  PagedCompiledFns, PagedInferenceEngine,
+                                  Request, compile_fns, compile_paged_fns)
+from repro.serving.kvpool import (BlockPool, PoolExhausted,  # noqa: F401
+                                  PrefixStats, RadixPrefixCache)
 from repro.serving.replica_pool import ReplicaPool, ScaleEvent  # noqa: F401
 from repro.serving.scheduler import (RequestScheduler, SchedStats,  # noqa: F401
                                      SchedulerConfig)

@@ -33,21 +33,26 @@ class BackendProfile:
     ttft_mult: float
     tps_mult: float           # decode tokens/s multiplier (batch efficiency)
     mem_mult: float           # HBM footprint multiplier per replica
+    # paged KV cache (block pool + radix prefix reuse). The profile split
+    # mirrors the real engines: vLLM's PagedAttention and TGI's paging
+    # are their signature memory features; TensorRT-LLM's latency profile
+    # keeps the statically-planned dense cache (lowest per-step overhead)
+    paged: bool = False
 
 
 BACKENDS: Dict[str, BackendProfile] = {
     "vllm": BackendProfile(
         name="vllm", kind="throughput", max_batch=16, q_chunk=512,
         batch_wait_s=0.010, kv_dtype="bfloat16",
-        ttft_mult=1.25, tps_mult=1.60, mem_mult=1.15),
+        ttft_mult=1.25, tps_mult=1.60, mem_mult=1.15, paged=True),
     "trt": BackendProfile(
         name="trt", kind="latency", max_batch=4, q_chunk=256,
         batch_wait_s=0.0, kv_dtype="bfloat16",
-        ttft_mult=1.00, tps_mult=1.00, mem_mult=1.25),
+        ttft_mult=1.00, tps_mult=1.00, mem_mult=1.25, paged=False),
     "tgi": BackendProfile(
         name="tgi", kind="memory", max_batch=8, q_chunk=512,
         batch_wait_s=0.004, kv_dtype="bfloat16",
-        ttft_mult=1.35, tps_mult=1.20, mem_mult=0.85),
+        ttft_mult=1.35, tps_mult=1.20, mem_mult=0.85, paged=True),
 }
 
 

@@ -11,9 +11,18 @@ vLLM/TGI use.
 
 The engine reports per-request TTFT / latency / completion, which is
 exactly the telemetry the Pick-and-Spin control loop consumes.
+
+Two cache disciplines share the same slot/step machinery:
+``InferenceEngine`` keeps the dense per-slot (max_batch, max_seq) cache
+(the latency profile's statically-planned layout), while
+``PagedInferenceEngine`` leases fixed-size KV blocks from a global
+``kvpool.BlockPool`` with radix prefix reuse and copy-on-write sharing —
+admission gated on free blocks, blocks freed the step a request
+finishes, prefix hits skipping the shared part of prefill.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -24,7 +33,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_cache, model_decode, model_prefill
+from repro.models.attention import paged_gather_ctx, paged_scatter
+from repro.models.transformer import (copy_paged_block, init_paged_cache,
+                                      lm_paged_decode, lm_paged_prefill,
+                                      supports_paged)
 from repro.serving.backend import BackendProfile
+from repro.serving.kvpool import BlockPool, RadixPrefixCache
 from repro.serving.sampling import SamplingParams, sample
 
 
@@ -55,6 +69,13 @@ class _Slot:
     res: Optional[GenResult] = None
     pos: int = 0                                  # next write position
     done: bool = True
+
+
+@dataclass
+class _PagedSlot(_Slot):
+    prompt: List[int] = field(default_factory=list)
+    table: Optional[np.ndarray] = None            # (blocks_per_seq,) int32
+    blocks: List[int] = field(default_factory=list)   # ids this req refs
 
 
 def _insert_impl(cache, rcache, slot):
@@ -93,27 +114,86 @@ def compile_fns(cfg: ModelConfig, backend: BackendProfile,
                        insert=jax.jit(_insert_impl))
 
 
+@dataclass(frozen=True)
+class PagedCompiledFns:
+    """Jitted step functions of a paged-cache service (same sharing story
+    as ``CompiledFns``: one compile per service, reused across replicas
+    and across scale-to-zero).
+
+    Prefill is three functions, and that split is the perf point of the
+    paged plane: ``gather`` READS the request's context blocks out of
+    the pool (output is O(context)), ``prefill`` runs the model over the
+    uncached suffix only, and ``scatter`` writes the new KV into the
+    request's blocks with the pool buffer DONATED — an in-place O(suffix)
+    update. The dense engine's admission rewrites its whole
+    (max_batch, max_seq) cache per insert; here the pool is never
+    re-materialized."""
+    gather: object           # (cache, table_ctx) -> ctx_kv
+    prefill: object          # (params, tokens, ctx_kv, start, s_real)
+    scatter: object          # (cache, new_kv, table, start, s_real)
+    decode: object           # (params, token, cache, tables, pos)
+    copy: object             # (cache, src_block, dst_block) — COW
+
+
+def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
+                      max_seq: int, block_size: int) -> PagedCompiledFns:
+    def _prefill(params, tokens, ctx_kv, start, s_real):
+        return lm_paged_prefill(params, cfg, tokens, ctx_kv, start, s_real)
+
+    def _decode(params, token, cache, tables, pos):
+        return lm_paged_decode(params, cfg, token, cache, tables, pos)
+
+    return PagedCompiledFns(
+        gather=jax.jit(paged_gather_ctx),
+        prefill=jax.jit(_prefill),
+        scatter=jax.jit(paged_scatter, donate_argnums=(0,)),
+        decode=jax.jit(_decode, donate_argnums=(2,)),
+        copy=jax.jit(copy_paged_block, donate_argnums=(0,)))
+
+
 class InferenceEngine:
     """Continuous-batching engine for one (model x backend) instance."""
 
+    paged = False
+
     def __init__(self, cfg: ModelConfig, params, backend: BackendProfile,
-                 max_seq: int = 512, seed: int = 0,
-                 fns: Optional[CompiledFns] = None):
+                 max_seq: int = 512, seed: int = 0, fns=None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
         self.max_seq = max_seq
         self.max_batch = backend.max_batch
         self.key = jax.random.PRNGKey(seed)
-        self._slots = [_Slot() for _ in range(self.max_batch)]
+        self._slots = [self._make_slot() for _ in range(self.max_batch)]
         self._queue: List[Request] = []
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
-        self.cache = init_cache(cfg, self.max_batch, max_seq, self._kv_dtype)
+        self.cache = self._init_cache()
         self._finished: List[GenResult] = []
-        self.fns = fns or compile_fns(cfg, backend, max_seq)
+        self.fns = fns or self._compile()
+        self._bind_fns()
+
+    # hooks a paged subclass overrides ------------------------------------
+    def _make_slot(self) -> "_Slot":
+        return _Slot()
+
+    def _init_cache(self):
+        return init_cache(self.cfg, self.max_batch, self.max_seq,
+                          self._kv_dtype)
+
+    def _compile(self):
+        return compile_fns(self.cfg, self.backend, self.max_seq)
+
+    def _bind_fns(self) -> None:
         self._prefill = self.fns.prefill
         self._decode = self.fns.decode
         self._insert = self.fns.insert
+
+    def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
+        return self._decode(self.params, jnp.asarray(tokens), self.cache,
+                            jnp.asarray(pos))
+
+    def _release(self, slot: "_Slot") -> None:
+        """Reap hook: free per-request cache resources (no-op dense)."""
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -123,32 +203,40 @@ class InferenceEngine:
     def has_work(self) -> bool:
         return bool(self._queue) or any(not s.done for s in self._slots)
 
+    def idle_slots(self) -> int:
+        """Raw free decode slots (no queue/capacity accounting)."""
+        return sum(1 for s in self._slots if s.done)
+
     def free_slots(self) -> int:
-        """Slots a scheduler may still fill (free minus already queued)."""
-        return sum(1 for s in self._slots if s.done) - len(self._queue)
+        """Slots a scheduler may still fill (free minus already queued),
+        clamped at 0: the internal queue can exceed the free slots, and a
+        negative count would corrupt scheduler admission math."""
+        return max(0, self.idle_slots() - len(self._queue))
 
     def step(self) -> List[GenResult]:
         """Admit waiting requests, run one batched decode, reap finished."""
         now = time.perf_counter()
-        # 1) admit
+        # 1) admit (a paged engine may refuse — out of KV blocks — in
+        #    which case the request stays queued for a later step)
         for slot_id, slot in enumerate(self._slots):
             if not self._queue:
                 break
             if slot.done:
-                self._admit(slot_id, self._queue.pop(0))
+                if not self._admit(slot_id, self._queue[0]):
+                    break
+                self._queue.pop(0)
         # 2) decode one token for all active slots
         active = [i for i, s in enumerate(self._slots) if not s.done]
         if active:
             tokens = np.zeros((self.max_batch, 1), np.int32)
-            pos = np.zeros((self.max_batch,), np.int32)
+            pos = np.full((self.max_batch,), -1, np.int32)   # -1: idle slot
             for i, s in enumerate(self._slots):
                 if not s.done:
                     last = (s.res.new_tokens[-1] if s.res.new_tokens
                             else s.req.tokens[-1])
                     tokens[i, 0] = last
                     pos[i] = s.pos
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(tokens), self.cache, jnp.asarray(pos))
+            logits, self.cache = self._run_decode(tokens, pos)
             # sample per request: group active slots by their SamplingParams
             # so mixed batches honor each request's temperature/top-k/top-p
             # (a single sample() over the batch would silently apply the
@@ -178,6 +266,7 @@ class InferenceEngine:
                     s.res.completed = (hit_eos or full) and not timed_out
                     s.res.timed_out = timed_out
                     self._finished.append(s.res)
+                    self._release(s)
                     s.done = True
                     s.req = None
         return self.drain_finished()
@@ -210,7 +299,7 @@ class InferenceEngine:
             b *= 2
         return b
 
-    def _admit(self, slot_id: int, req: Request) -> None:
+    def _admit(self, slot_id: int, req: Request) -> bool:
         prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
         prompt = prompt[-self._bucket(len(prompt)):]
         batch = {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None])}
@@ -240,9 +329,252 @@ class InferenceEngine:
             res.completed = (hit_eos or full) and not timed_out
             res.timed_out = timed_out
             self._finished.append(res)
-            return                       # never occupies a decode slot
+            return True                  # never occupies a decode slot
         slot = self._slots[slot_id]
         slot.req = req
         slot.res = res
         slot.pos = len(prompt)
         slot.done = False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# paged engine
+
+
+DEFAULT_BLOCK_SIZE = 16
+
+
+class PagedInferenceEngine(InferenceEngine):
+    """Continuous-batching engine over a paged (block-pool) KV cache.
+
+    Differences from the dense engine:
+      * one global pool of ``num_blocks`` KV blocks instead of a dense
+        (max_batch, max_seq) cache — admission is gated on free blocks,
+        blocks are freed the step a request finishes;
+      * a radix prefix cache: the cached prefix of a prompt (multi-turn
+        history, shared system prompt) is leased by refcount and only the
+        uncached suffix is prefilled — this is where the TTFT win on
+        shared-prefix traffic comes from;
+      * prompts are NOT bucket-truncated (truncation would shift token
+        positions and break prefix identity); instead the uncached
+        suffix is right-padded to a power-of-2 bucket and masked, which
+        bounds compile specializations the same way.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: ModelConfig, params, backend: BackendProfile,
+                 max_seq: int = 512, seed: int = 0, fns=None,
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 num_blocks: Optional[int] = None,
+                 prefix_cache: bool = True):
+        if not supports_paged(cfg):
+            raise ValueError(f"{cfg.name}: family/attention has no paged path")
+        if max_seq % block_size:
+            raise ValueError(f"max_seq {max_seq} % block_size {block_size}")
+        self.block_size = block_size
+        self.blocks_per_seq = max_seq // block_size
+        self.num_blocks = num_blocks or backend.max_batch * self.blocks_per_seq
+        if self.num_blocks < self.blocks_per_seq:
+            raise ValueError("pool smaller than one full sequence")
+        self.pool = BlockPool(self.num_blocks, block_size)
+        self.prefix: Optional[RadixPrefixCache] = (
+            RadixPrefixCache(self.pool) if prefix_cache else None)
+        self.hit_tokens = 0                       # prefix tokens NOT prefilled
+        self.prompt_tokens = 0
+        super().__init__(cfg, params, backend, max_seq, seed, fns)
+
+    # -- hooks ----------------------------------------------------------
+    def _make_slot(self) -> _PagedSlot:
+        return _PagedSlot()
+
+    def _init_cache(self):
+        return init_paged_cache(self.cfg, self.num_blocks, self.block_size,
+                                self._kv_dtype)
+
+    def _compile(self) -> PagedCompiledFns:
+        return compile_paged_fns(self.cfg, self.backend, self.max_seq,
+                                 self.block_size)
+
+    def _bind_fns(self) -> None:
+        self._gather = self.fns.gather
+        self._prefill = self.fns.prefill
+        self._scatter = self.fns.scatter
+        self._decode = self.fns.decode
+        self._copy = self.fns.copy
+
+    def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
+        tables = np.zeros((self.max_batch, self.blocks_per_seq), np.int32)
+        for i, s in enumerate(self._slots):
+            if not s.done and s.table is not None:
+                tables[i] = s.table
+        return self._decode(self.params, jnp.asarray(tokens), self.cache,
+                            jnp.asarray(tables), jnp.asarray(pos))
+
+    # -- capacity -------------------------------------------------------
+    def kv_free_frac(self) -> float:
+        """Allocatable fraction of the pool — evictable prefix-cache
+        blocks count as free (they are reclaimed on demand)."""
+        free = self.pool.num_free
+        if self.prefix:
+            free += self.prefix.evictable_blocks()
+        return free / self.num_blocks
+
+    def kv_used_frac(self) -> float:
+        return self.pool.used_frac
+
+    def prefix_hit_rate(self) -> float:
+        return self.hit_tokens / self.prompt_tokens if self.prompt_tokens else 0.0
+
+    def prefix_peek(self, req: Request) -> int:
+        """Cached-prefix tokens this request would reuse if admitted now
+        (same prompt capping as admission). 0 without a prefix cache."""
+        if not self.prefix:
+            return 0
+        prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
+        return min(self.prefix.peek(prompt), max(len(prompt) - 1, 0))
+
+    def block_capacity(self) -> int:
+        """Worst-case admissions the pool can still back (a request may
+        need blocks_per_seq fresh blocks; evictable cache blocks count)."""
+        blocks_free = self.pool.num_free
+        if self.prefix:
+            blocks_free += self.prefix.evictable_blocks()
+        return blocks_free // self.blocks_per_seq
+
+    def free_slots(self) -> int:
+        """Admission capacity: free decode slots AND block headroom."""
+        cap = min(self.idle_slots(), self.block_capacity())
+        return max(0, cap - len(self._queue))
+
+    # -- admission ------------------------------------------------------
+    @staticmethod
+    def _bucket_up(n: int) -> int:
+        """Power-of-2 ceiling bucket (min 8) for the prefill SUFFIX —
+        padding instead of the dense engine's truncation, so prompt
+        tokens keep their absolute positions (prefix identity)."""
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def _admit(self, slot_id: int, req: Request) -> bool:
+        bs = self.block_size
+        prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
+        plen = len(prompt)
+
+        # 1) prefix match: lease every cached full block of this prompt
+        matched: List[int] = []
+        keep = 0
+        cow_src = None
+        if self.prefix is not None:
+            matched, m = self.prefix.match(prompt)
+            # always recompute >= 1 token (the last token's logits seed
+            # generation), so a fully-cached prompt keeps plen-1 tokens
+            keep = min(m, plen - 1)
+            n_keep = keep // bs
+            if keep < m:                      # match overshoots the kept run
+                if keep % bs:
+                    cow_src = matched[n_keep]      # partial block -> COW
+                    drop = matched[n_keep + 1:]
+                else:
+                    drop = matched[n_keep:]
+                for b in drop:
+                    self.pool.decref(b)
+                matched = matched[:n_keep]
+
+        # 2) allocate the rest of the sequence up front (no mid-flight OOM)
+        total = min(plen + req.sampling.max_new_tokens, self.max_seq)
+        n_new = math.ceil(total / bs) - len(matched)
+        short = n_new - self.pool.num_free
+        if short > 0 and self.prefix is not None:
+            self.prefix.evict(short)
+        if n_new > self.pool.num_free:
+            for b in matched:                 # out of blocks: stay queued
+                self.pool.decref(b)
+            if cow_src is not None:
+                self.pool.decref(cow_src)
+            return False
+        fresh = self.pool.alloc_many(n_new)
+        if cow_src is not None:               # copy-on-write the shared tail
+            self.cache = self._copy(self.cache, jnp.int32(cow_src),
+                                    jnp.int32(fresh[0]))
+            self.pool.decref(cow_src)
+        owned = matched + fresh
+        table = np.zeros((self.blocks_per_seq,), np.int32)
+        table[:len(owned)] = owned
+        self.hit_tokens += keep
+        self.prompt_tokens += plen
+
+        # 3) prefill ONLY the uncached suffix, padded to a pow2 bucket
+        suffix = prompt[keep:]
+        sb = self._bucket_up(len(suffix))
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :len(suffix)] = suffix
+        # pow2 bound on the table entries holding CACHED context (the
+        # suffix attends itself inside the compute core), so the gather
+        # reads ~the reused prefix, not the full max_seq span
+        ctx = 1
+        while ctx * bs < keep:
+            ctx *= 2
+        ctx = min(ctx, self.blocks_per_seq)
+        start, live = jnp.int32(keep), jnp.int32(len(suffix))
+        ctx_kv = self._gather(self.cache, jnp.asarray(table[:ctx]))
+        logits, new_kv = self._prefill(self.params, jnp.asarray(padded),
+                                       ctx_kv, start, live)
+        # first token is determined here (same dispatch-time TTFT
+        # convention as the dense engine); the scatter below is cache
+        # bookkeeping for future steps and blocks on the donated buffer
+        res = GenResult(uid=req.uid, prompt_len=plen)
+        res.ttft = time.perf_counter() - req.arrival_t
+        self.cache = self._scatter(self.cache, new_kv, jnp.asarray(table),
+                                   start, live)
+
+        # 4) register the prompt's full blocks right away, so requests
+        #    admitted later in this same step already share them
+        if self.prefix is not None and plen >= bs:
+            self.prefix.insert(prompt, table[: plen // bs].tolist())
+        self.key, sk = jax.random.split(self.key)
+        first = int(np.asarray(sample(logits, req.sampling, sk))[0])
+        res.new_tokens.append(first)
+        sp = req.sampling
+        t = time.perf_counter()
+        hit_eos = sp.eos_id is not None and first == sp.eos_id
+        full = len(res.new_tokens) >= sp.max_new_tokens
+        timed_out = (req.deadline_s is not None and
+                     t - req.arrival_t > req.deadline_s)
+        if hit_eos or full or timed_out:
+            res.latency = t - req.arrival_t
+            res.completed = (hit_eos or full) and not timed_out
+            res.timed_out = timed_out
+            self._finished.append(res)
+            for b in owned:                   # cache refs (if any) survive
+                self.pool.decref(b)
+            return True
+        slot = self._slots[slot_id]
+        slot.req = req
+        slot.res = res
+        slot.pos = plen
+        slot.done = False
+        slot.prompt = prompt
+        slot.table = table
+        slot.blocks = owned
+        return True
+
+    # -- reap -----------------------------------------------------------
+    def _release(self, slot: _PagedSlot) -> None:
+        if slot.table is None:
+            return
+        if self.prefix is not None and slot.res is not None:
+            # everything written (prompt + generated-but-last) is valid
+            # KV; register its full blocks for future prefix hits
+            seq = (slot.prompt + slot.res.new_tokens)[: slot.pos]
+            n_full = len(seq) // self.block_size
+            if n_full:
+                self.prefix.insert(seq, slot.table[:n_full].tolist())
+        for b in slot.blocks:
+            self.pool.decref(b)
+        slot.prompt = []
+        slot.table = None
+        slot.blocks = []

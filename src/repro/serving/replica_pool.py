@@ -22,14 +22,16 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 
 from repro.models import init_model
+from repro.models.transformer import supports_paged
 from repro.serving.backend import BACKENDS
-from repro.serving.engine import (CompiledFns, InferenceEngine, Request,
-                                  compile_fns)
+from repro.serving.engine import (DEFAULT_BLOCK_SIZE, InferenceEngine,
+                                  PagedInferenceEngine, Request, compile_fns,
+                                  compile_paged_fns)
 from repro.serving.sampling import SamplingParams
 
 _Key = Tuple[str, str]
@@ -54,18 +56,37 @@ class ReplicaPool:
     """All live engine replicas, plus the warm param/code caches."""
 
     def __init__(self, models: Dict[str, object], registry,
-                 max_seq: int = 256, seed: int = 0):
+                 max_seq: int = 256, seed: int = 0, paged="auto",
+                 block_size: int = DEFAULT_BLOCK_SIZE):
         self.models = models
         self.reg = registry
         self.max_seq = max_seq
         self.seed = seed
+        # paged KV-cache plane: "auto" pages every model family that
+        # supports it (GQA transformer trunk), False forces dense engines
+        self.paged = paged
+        self.block_size = block_size
         self._replicas: Dict[_Key, List[InferenceEngine]] = {
             (m, b): [] for m in models for b in registry.backends}
         self._params: Dict[str, object] = {}       # warm weights per model
-        self._code: Dict[_Key, CompiledFns] = {}   # compiled fns per service
+        self._code: Dict[_Key, object] = {}        # compiled fns per service
         self.events: List[ScaleEvent] = []
         # (label, seconds) — same contract as Gateway.cold_starts
         self.cold_starts: List[Tuple[str, float]] = []
+
+    def _use_paged(self, model: str, backend: str) -> bool:
+        """paged="auto": follow the backend profile (vllm/tgi page, trt
+        keeps the dense static cache) for models whose family supports
+        it; True forces paging everywhere; False forces dense."""
+        if self.paged is False:
+            return False
+        ok = supports_paged(self.models[model]) and \
+            self.max_seq % self.block_size == 0
+        if self.paged == "auto":
+            return ok and BACKENDS[backend].paged
+        if not ok:
+            raise ValueError(f"{model}: paged engines unsupported")
+        return True
 
     # -- inspection ----------------------------------------------------------
     def replicas(self, model: str, backend: str) -> List[InferenceEngine]:
@@ -84,6 +105,56 @@ class ReplicaPool:
 
     def has_params(self, model: str) -> bool:
         return model in self._params
+
+    # -- paged KV-cache plane inspection ---------------------------------
+    def paged_replicas(self, model: str, backend: str
+                       ) -> List[PagedInferenceEngine]:
+        return [e for e in self._replicas[(model, backend)] if e.paged]
+
+    def kv_free_frac(self, model: str, backend: str) -> float:
+        """Best allocatable block headroom across the service's paged
+        replicas (1.0 for dense services / no live replicas — nothing to
+        shed on)."""
+        reps = self.paged_replicas(model, backend)
+        if not reps:
+            return 1.0
+        return max(e.kv_free_frac() for e in reps)
+
+    def kv_bound(self, model: str, backend: str) -> bool:
+        """True when KV blocks — not decode slots — are the binding
+        admission resource: compute sits idle while the pool can't back
+        another sequence. A fully-leased pool with fully-busy slots is
+        ordinary queueing, not block starvation."""
+        reps = self.paged_replicas(model, backend)
+        if not reps:
+            return False
+        slot_cap = sum(e.idle_slots() for e in reps)
+        block_cap = sum(e.block_capacity() for e in reps)
+        return block_cap < slot_cap
+
+    def kv_stats(self, model: str) -> Optional[Dict[str, float]]:
+        """Pool occupancy / prefix-cache telemetry aggregated over every
+        live paged replica of ``model`` (all backend columns); None when
+        the model has no live paged replicas."""
+        reps = [e for b in self.reg.backends
+                for e in self.paged_replicas(model, b)]
+        if not reps:
+            return None
+        hit = sum(e.hit_tokens for e in reps)
+        seen = sum(e.prompt_tokens for e in reps)
+        return {
+            # pressure: headroom of the LEAST-squeezed replica — high
+            # only when every replica is out of allocatable blocks
+            "kv_pressure": min(1.0 - e.kv_free_frac() for e in reps),
+            "kv_occupancy": max(e.kv_used_frac() for e in reps),
+            "kv_hit_rate": hit / seen if seen else 0.0,
+            "kv_free_blocks": float(sum(e.pool.num_free for e in reps)),
+        }
+
+    def prefix_peek(self, model: str, backend: str, req: Request) -> int:
+        """Best cached-prefix reuse (tokens) any replica offers ``req``."""
+        reps = self.paged_replicas(model, backend)
+        return max((e.prefix_peek(req) for e in reps), default=0)
 
     # -- lifecycle (Orchestrator scale_cb target) -----------------------------
     def scale(self, model: str, backend: str, replicas: int,
@@ -117,14 +188,24 @@ class ReplicaPool:
         t0 = time.perf_counter()
         cfg = self.models[model]
         warm = model in self._params and key in self._code
+        use_paged = self._use_paged(model, backend)
         if model not in self._params:
             self._params[model] = init_model(cfg, jax.random.PRNGKey(self.seed))
         if key not in self._code:
-            self._code[key] = compile_fns(cfg, BACKENDS[backend], self.max_seq)
-        eng = InferenceEngine(cfg, self._params[model], BACKENDS[backend],
-                              max_seq=self.max_seq,
-                              seed=self.seed + 101 * (len(reps) + 1),
-                              fns=self._code[key])
+            self._code[key] = (
+                compile_paged_fns(cfg, BACKENDS[backend], self.max_seq,
+                                  self.block_size) if use_paged
+                else compile_fns(cfg, BACKENDS[backend], self.max_seq))
+        kw = dict(max_seq=self.max_seq,
+                  seed=self.seed + 101 * (len(reps) + 1),
+                  fns=self._code[key])
+        if use_paged:
+            eng = PagedInferenceEngine(cfg, self._params[model],
+                                       BACKENDS[backend],
+                                       block_size=self.block_size, **kw)
+        else:
+            eng = InferenceEngine(cfg, self._params[model], BACKENDS[backend],
+                                  **kw)
         # trigger compile/execute of the step functions before the replica
         # counts as live (the dominant real cold-start cost when cold)
         eng.run([Request(uid=-1, tokens=[1, 2, 3],

@@ -14,11 +14,18 @@ engines. Responsibilities:
   * the serve loop: ``step()`` admits queued work into free slots (least
     loaded replica first) and runs ONE decode iteration on every engine
     with work — iteration-level continuous batching across the whole
-    pool, so many requests genuinely overlap.
+    pool, so many requests genuinely overlap;
+  * KV-cache awareness (paged services): queued requests with the
+    largest cached-prefix reuse are dispatched first (they prefill the
+    least and free their slot soonest), placement prefers the replica
+    whose radix cache holds the request's prefix, and a block-watermark
+    shed policy tightens the admission queue when the pool runs dry —
+    backpressure arrives BEFORE the engines thrash on eviction.
 
 The scheduler also keeps the registry's ``queued``/``active_requests``
-live and reports finish latencies to telemetry, which is exactly what
-Algorithm 1 reads on each tick.
+live and reports finish latencies plus KV pool occupancy / prefix
+hit-rate gauges to telemetry, which is exactly what Algorithm 1 reads on
+each tick.
 """
 from __future__ import annotations
 
@@ -38,12 +45,16 @@ class SchedulerConfig:
     max_queue_depth: int = 64     # per-service bound; beyond this we shed
     shed_expired: bool = True     # drop queued requests already past deadline
     spin_on_demand: bool = True   # scale 0->1 when work queues on a dead svc
+    prefix_aware: bool = True     # dispatch best-cached-prefix first
+    block_watermark: float = 0.05  # free-block frac below which we shed early
+    watermark_depth_div: int = 8  # queue depth divisor under block pressure
 
 
 @dataclass
 class SchedStats:
     submitted: int = 0
     shed: int = 0                 # rejected at admission (queue full)
+    shed_blocks: int = 0          # ...of which under KV block pressure
     expired: int = 0              # dropped from queue past deadline
     dispatched: int = 0
     completed: int = 0
@@ -74,12 +85,30 @@ class RequestScheduler:
             self._to_engine(key, req)
             self.stats.dispatched += 1
             return True
-        if len(q) >= self.cfg.max_queue_depth:
+        if len(q) >= self._depth_limit(model, backend):
             self.stats.shed += 1
+            # block-pressure shed = the TIGHTENED bound did it (an
+            # ordinary queue-full shed at max depth is not the pool's)
+            if len(q) < self.cfg.max_queue_depth:
+                self.stats.shed_blocks += 1
             return False
         q.append(req)
         self.reg.entry(model, backend).queued += 1
         return True
+
+    def _depth_limit(self, model: str, backend: str) -> int:
+        """Block-watermark shed policy: when a paged service's pool is
+        below the free-block watermark AND blocks (not slots) are the
+        binding resource — compute idle, pool dry — queued work would
+        only sit behind block-starved admission. Tighten the queue bound
+        so callers see backpressure now instead of latency collapse
+        later. A busy-slots busy-pool burst is ordinary queueing and
+        keeps the full depth."""
+        depth = self.cfg.max_queue_depth
+        if (self.pool.kv_free_frac(model, backend) < self.cfg.block_watermark
+                and self.pool.kv_bound(model, backend)):
+            depth = max(1, depth // self.cfg.watermark_depth_div)
+        return depth
 
     def queued(self) -> int:
         return sum(len(q) for q in self._queues.values())
@@ -110,6 +139,18 @@ class RequestScheduler:
                 continue
             if self.cfg.spin_on_demand and not self.pool.replicas(*key):
                 self.pool.scale(model, backend, 1, now)
+            # cache-aware admission order: requests with the biggest
+            # cached-prefix reuse go first — they skip most of their
+            # prefill, holding their slot for the least time (stable
+            # sort keeps FIFO fairness between equal hits). Only worth
+            # the radix walks when something can actually dispatch.
+            if self.cfg.prefix_aware and len(q) > 1 \
+                    and self.pool.free_slots(model, backend) > 0 \
+                    and self.pool.paged_replicas(*key):
+                ordered = sorted(q, key=lambda r: -self.pool.prefix_peek(
+                    model, backend, r))
+                q.clear()
+                q.extend(ordered)
             while q and self.pool.free_slots(model, backend) > 0:
                 req = q.popleft()
                 entry.queued = max(0, entry.queued - 1)
@@ -146,15 +187,26 @@ class RequestScheduler:
                                         res.latency)
                 self.stats.completed += 1
                 out.append((key, res))
+        # paged-plane gauges: pool pressure / occupancy / prefix hit-rate
+        # land in the same telemetry the Orchestrator ticks on, so Spin
+        # can treat a block-starved service as a loaded one
+        for model in {m for m, _ in self._queues}:
+            stats = self.pool.kv_stats(model)
+            if stats:
+                for name, value in stats.items():
+                    self.tel.record_gauge(model, name, now, value)
         return out
 
     # -- internals -------------------------------------------------------
     def _to_engine(self, key: _Key, req: Request) -> None:
-        # pack-first placement: fill the busiest replica that still has a
-        # free slot. Densest batches extract the most from iteration-level
-        # batching (a decode step costs ~the same at batch 1 and batch N),
-        # and replicas the pool may retire stay drained.
+        # cache-affine, pack-first placement: prefer the replica whose
+        # radix cache already holds this request's prefix (its prefill
+        # mostly vanishes), then fill the busiest replica with a free
+        # slot. Densest batches extract the most from iteration-level
+        # batching (a decode step costs ~the same at batch 1 and batch
+        # N), and replicas the pool may retire stay drained.
         cands = [g for g in self.pool.replicas(*key) if g.free_slots() > 0]
-        eng = min(cands, key=lambda g: g.free_slots())
+        eng = min(cands, key=lambda g: (
+            -(g.prefix_peek(req) if g.paged else 0), g.free_slots()))
         eng.submit(req)
         self.reg.entry(*key).active_requests += 1

@@ -1,0 +1,337 @@
+"""Paged KV-cache plane: block pool, radix prefix cache, paged engine.
+
+The acceptance bar: a paged engine is token-for-token equivalent to the
+dense engine under greedy sampling, prefix hits genuinely skip prefill,
+and the serve plane's cache-aware policies act on pool state.
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.core.gateway import AsyncGateway
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+from repro.models import init_model
+from repro.serving import (BlockPool, InferenceEngine, PagedInferenceEngine,
+                           PoolExhausted, RadixPrefixCache, Request,
+                           SamplingParams, get_backend)
+from repro.serving.kvquant import dequantize, quantize
+
+SMOL = "smollm-360m"
+KEY = (SMOL, "trt")
+
+
+# ---------------------------------------------------------------------------
+# allocator
+
+
+def test_block_pool_alloc_free_refcount():
+    pool = BlockPool(num_blocks=4, block_size=16)
+    a, b = pool.alloc(), pool.alloc()
+    assert pool.num_free == 2 and pool.refcount(a) == 1
+    pool.incref(a)                      # shared lease
+    assert not pool.decref(a)           # still referenced
+    assert pool.decref(a)               # now free
+    assert pool.num_free == 3
+    c, d, e = pool.alloc(), pool.alloc(), pool.alloc()
+    assert pool.num_free == 0
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc_many(1)
+    assert len({b, c, d, e}) == 4       # live blocks never double-handed
+
+
+def test_radix_match_insert_evict():
+    pool = BlockPool(num_blocks=8, block_size=4)
+    cache = RadixPrefixCache(pool)
+    seq = list(range(12))               # 3 full blocks
+    blocks = pool.alloc_many(3)
+    assert cache.insert(seq, blocks) == 3
+    # cache holds one ref on top of ours
+    assert all(pool.refcount(b) == 2 for b in blocks)
+
+    got, n = cache.match(seq + [99])    # longer lookup still matches 3
+    assert got == blocks and n == 12
+    assert all(pool.refcount(b) == 3 for b in blocks)
+    for b in got:
+        pool.decref(b)
+
+    got, n = cache.match([0, 1, 2, 3, 7, 7, 7, 7])   # diverges after blk 0
+    assert got == blocks[:1] and n == 4
+    pool.decref(got[0])
+    assert cache.peek(seq) == 12
+
+    # release our allocation refs -> blocks are cache-only and evictable
+    for b in blocks:
+        pool.decref(b)
+    assert cache.evictable_blocks() == 3
+    assert cache.evict(2) == 2          # LRU leaves cascade up
+    assert cache.peek(seq) == 4         # only the root block remains
+    assert pool.num_free == 7
+
+
+def test_radix_live_lease_blocks_eviction():
+    pool = BlockPool(num_blocks=4, block_size=4)
+    cache = RadixPrefixCache(pool)
+    blocks = pool.alloc_many(2)
+    cache.insert(list(range(8)), blocks)
+    pool.decref(blocks[0])              # blk0 cache-only, blk1 still leased
+    assert cache.evictable_blocks() == 0     # leaf pinned -> parent pinned
+    assert cache.evict(2) == 0
+    pool.decref(blocks[1])
+    assert cache.evictable_blocks() == 2
+    assert cache.evict(5) == 2 and pool.num_free == 4
+
+
+def test_kvquant_round_trip_absmax():
+    rng = np.random.RandomState(0)
+    x = np.asarray(rng.randn(4, 6, 2, 32) * 3.0, np.float32)
+    q, s = quantize(x)
+    assert q.dtype == np.int8 and s.shape == x.shape[:-1] + (1,)
+    back = np.asarray(dequantize(q, s, dtype=np.float32))
+    # absmax int8: error bounded by half a quantization step per entry
+    step = np.asarray(s)
+    assert np.all(np.abs(back - x) <= step * 0.51 + 1e-7)
+    # exact at the extremes: each row's absmax element maps to +-127
+    flat_err = np.abs(np.asarray(q)).max(axis=-1)
+    assert np.all(flat_err == 127)
+
+
+def test_kvquant_round_trip_property():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="optional dep: property tests need hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(vals=st.lists(st.floats(-1e4, 1e4, allow_nan=False,
+                                   allow_infinity=False, width=32),
+                         min_size=1, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def check(vals):
+        x = np.asarray(vals, np.float32)[None, :]
+        q, s = quantize(x)
+        back = np.asarray(dequantize(q, s, dtype=np.float32))
+        assert np.all(np.abs(back - x) <= np.asarray(s) * 0.51 + 1e-6)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# paged engine vs dense engine
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = reduced_f32(SMOL)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    bk = get_backend("trt")
+    dense = InferenceEngine(cfg, params, bk, max_seq=96)
+    paged = PagedInferenceEngine(cfg, params, bk, max_seq=96, block_size=16)
+    return cfg, params, dense, paged
+
+
+def _mixed_reqs(cfg, lengths, max_new=6, seed=3):
+    # power-of-2-safe lengths: the dense engine's floor-pow2 bucketing
+    # does not truncate them, so both engines see identical prompts
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i, tokens=list(rng.randint(0, cfg.vocab_size, L)),
+                    sampling=SamplingParams(max_new_tokens=max_new))
+            for i, L in enumerate(lengths)]
+
+
+def test_paged_matches_dense_greedy(engines):
+    cfg, _, dense, paged = engines
+    lengths = [5, 8, 16, 32, 64, 7, 16]
+    rd = {r.uid: r for r in dense.run(_mixed_reqs(cfg, lengths))}
+    rp = {r.uid: r for r in paged.run(_mixed_reqs(cfg, lengths))}
+    assert rd.keys() == rp.keys()
+    for u in rd:
+        assert rd[u].new_tokens == rp[u].new_tokens
+        assert rp[u].completed
+    # every request's blocks were freed on reap
+    assert paged.pool.num_free + len(paged.prefix) == paged.num_blocks
+
+
+def test_paged_matches_dense_greedy_int8(engines):
+    cfg, _, _, _ = engines
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = init_model(cfg8, jax.random.PRNGKey(0))
+    bk = get_backend("trt")
+    dense = InferenceEngine(cfg8, params, bk, max_seq=96)
+    paged = PagedInferenceEngine(cfg8, params, bk, max_seq=96)
+    lengths = [8, 16, 32]
+    rd = {r.uid: r.new_tokens for r in dense.run(_mixed_reqs(cfg8, lengths))}
+    rp = {r.uid: r.new_tokens for r in paged.run(_mixed_reqs(cfg8, lengths))}
+    assert rd == rp
+
+
+def test_prefix_hit_skips_prefill_and_keeps_tokens(engines):
+    cfg, _, _, paged = engines
+    rng = np.random.RandomState(11)
+    prompt = list(rng.randint(0, cfg.vocab_size, 40))
+    sp = SamplingParams(max_new_tokens=4)
+    r1 = paged.run([Request(uid=900, tokens=prompt, sampling=sp)])[0]
+    h0, p0 = paged.hit_tokens, paged.prompt_tokens
+    r2 = paged.run([Request(uid=901, tokens=prompt, sampling=sp)])[0]
+    # the repeat reused every full block of the prompt (2 x 16 of 40)
+    assert paged.hit_tokens - h0 == 32
+    assert paged.prefix_hit_rate() > 0
+    assert r1.new_tokens == r2.new_tokens       # reuse changes nothing
+
+
+def test_copy_on_write_on_fully_cached_prompt(engines):
+    # a prompt that is a block-UNALIGNED prefix of a cached sequence must
+    # recompute its last token: the shared block is COW'd, the cached
+    # sequence keeps its data, and greedy output still matches dense
+    cfg, params, dense, paged = engines
+    rng = np.random.RandomState(13)
+    base = list(rng.randint(0, cfg.vocab_size, 40))
+    sp = SamplingParams(max_new_tokens=4)
+    paged.run([Request(uid=910, tokens=base, sampling=sp)])
+    sub = base[:16]                     # plen 16: keep=15 inside block 0
+    rp = paged.run([Request(uid=911, tokens=sub, sampling=sp)])[0]
+    rd = dense.run([Request(uid=911, tokens=sub, sampling=sp)])[0]
+    assert rp.new_tokens == rd.new_tokens
+    # and the longer cached prefix is still intact for future hits
+    assert paged.prefix.peek(base) >= 32
+
+
+def test_admission_gated_on_free_blocks(engines):
+    # a pool far smaller than slots x max_seq still serves everything:
+    # admission waits for blocks, blocks are freed on reap
+    cfg, params, _, _ = engines
+    eng = PagedInferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                               block_size=16, num_blocks=12)
+    res = eng.run(_mixed_reqs(cfg, [16, 32, 16, 8, 32, 16, 8, 16], seed=5))
+    assert len(res) == 8 and all(r.completed for r in res)
+    assert eng.pool.num_free + len(eng.prefix) == eng.num_blocks
+
+
+def test_dense_free_slots_clamped_at_zero(engines):
+    # regression: queue deeper than free slots made free_slots() negative
+    cfg, _, dense, paged = engines
+    for eng in (dense, paged):
+        for r in _mixed_reqs(cfg, [8] * (eng.max_batch + 3), seed=7):
+            eng.submit(r)
+        assert eng.free_slots() == 0
+        eng.run([])                                  # drain
+        assert eng.free_slots() == eng.max_batch
+
+
+def test_paged_free_slots_counts_blocks(engines):
+    cfg, params, _, _ = engines
+    eng = PagedInferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                               block_size=16, num_blocks=6, prefix_cache=False)
+    # 6 blocks = one full sequence: capacity is 1 admission despite 4 slots
+    assert eng.free_slots() == 1
+    leases = eng.pool.alloc_many(3)
+    assert eng.free_slots() == 0
+    for b in leases:
+        eng.pool.decref(b)
+
+
+# ---------------------------------------------------------------------------
+# cache-aware serve plane
+
+
+@pytest.fixture(scope="module")
+def agw():
+    spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=0.5,
+                      tick_s=3600.0, max_replicas=2,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    # paged=True: force paged engines on the trt column so the
+    # cache-aware serve-plane policies are exercised end to end
+    return AsyncGateway({SMOL: reduced_f32(SMOL)},
+                        profile=PROFILES["balanced"], max_seq=96, spin=spin,
+                        paged=True)
+
+
+def test_pool_spins_paged_engines_and_reports_gauges(agw):
+    u = agw.submit("sum the numbers please", max_new_tokens=4)
+    agw.serve_all()
+    assert agw.poll(u).completed
+    eng = agw.pool.replicas(*KEY)[0]
+    assert eng.paged
+    stats = agw.pool.kv_stats(SMOL)
+    assert stats and 0.0 <= stats["kv_pressure"] <= 1.0
+    # scheduler pushed the gauges into the telemetry Spin ticks on
+    assert agw.telemetry.gauge(SMOL, "kv_pressure") == stats["kv_pressure"]
+    assert agw.telemetry.gauge(SMOL, "kv_hit_rate") >= 0.0
+
+
+def test_scheduler_dispatches_best_prefix_first(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)
+    eng = agw.pool.replicas(*KEY)[0]
+    cfg = agw.models[SMOL]
+    rng = np.random.RandomState(21)
+    warm = list(rng.randint(0, cfg.vocab_size, 48))
+    sp = SamplingParams(max_new_tokens=2)
+    eng.run([Request(uid=800, tokens=warm, sampling=sp)])   # seed the radix
+
+    # occupy all but one slot so exactly one dispatch can happen
+    blockers = [Request(uid=801 + i,
+                        tokens=list(rng.randint(0, cfg.vocab_size, 8)),
+                        sampling=SamplingParams(max_new_tokens=16))
+                for i in range(eng.max_batch - 1)]
+    for b in blockers:
+        eng.submit(b)
+    eng.step()
+    assert eng.free_slots() == 1
+
+    cold = Request(uid=880, tokens=list(rng.randint(0, cfg.vocab_size, 48)),
+                   sampling=SamplingParams(max_new_tokens=16),
+                   arrival_t=time.perf_counter())
+    hot = Request(uid=881, tokens=warm + [1, 2, 3],
+                  sampling=SamplingParams(max_new_tokens=16),
+                  arrival_t=time.perf_counter())
+    q = agw.scheduler._queues[KEY]
+    q.extend([cold, hot])               # FIFO order favors the cold one
+    agw.registry.entry(*KEY).queued += 2
+    agw.scheduler.dispatch(time.perf_counter())
+    # the prefix hit jumped the FIFO: it went to the engine, cold stayed
+    assert [r.uid for r in eng._queue] == [881]
+    assert [r.uid for r in q] == [880]
+    eng.step()
+    assert 881 in {s.req.uid for s in eng._slots if not s.done}
+    q.clear()
+    agw.registry.entry(*KEY).queued = 0
+    agw.serve_all()                     # drain the blockers + hot request
+
+
+def test_block_watermark_sheds_early(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)
+    eng = agw.pool.replicas(*KEY)[0]
+    eng.prefix.clear()
+    hold = eng.pool.alloc_many(eng.pool.num_free)   # starve the pool
+    try:
+        assert agw.pool.kv_free_frac(*KEY) < agw.scheduler.cfg.block_watermark
+        depth = agw.scheduler._depth_limit(*KEY)
+        assert depth == max(1, agw.scheduler.cfg.max_queue_depth //
+                            agw.scheduler.cfg.watermark_depth_div)
+        shed0 = agw.scheduler.stats.shed_blocks
+        uids = [agw.submit(f"add numbers {i}", max_new_tokens=2)
+                for i in range(depth + 6)]
+        assert sum(u is None for u in uids) >= 2    # early backpressure
+        assert agw.scheduler.stats.shed_blocks > shed0
+    finally:
+        for b in hold:
+            eng.pool.decref(b)
+        agw.serve_all()
+
+
+def test_orchestrator_scales_up_on_kv_pressure(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 1)
+    now = time.perf_counter()
+    agw.telemetry.record_request(SMOL, now)         # not idle
+    agw.telemetry.record_gauge(SMOL, "kv_pressure", now, 0.99)
+    decisions = agw.orch.tick(time.perf_counter())
+    assert decisions.get(SMOL, 0) >= 2              # memory-bound scale-up
+    agw.telemetry.record_gauge(SMOL, "kv_pressure", time.perf_counter(), 0.0)
+    agw.settle(timeout_s=3.0)
