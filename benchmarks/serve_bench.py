@@ -1,6 +1,7 @@
 """Serve-plane benchmark: serial ``Gateway.handle`` loop vs the concurrent
-``AsyncGateway`` (replica pools + bounded-queue scheduler + live Spin
-control loop), on the SAME mixed-tier workload of reduced models on CPU.
+``ServeFrontend`` (replica pools + priority-ordered bounded-queue
+scheduler + live Spin control loop), on the SAME mixed-tier workload of
+reduced models on CPU. Both planes speak serving API v2.
 
 The serial plane serves one blocking request at a time; the concurrent
 plane overlaps requests via iteration-level continuous batching across
@@ -21,8 +22,9 @@ import time
 import numpy as np
 
 from common import save_bench, save_result
+from repro.api import CompletionRequest
 from repro.configs.registry import ARCHS
-from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.scoring import PROFILES
 from repro.data.benchmarks import generate_corpus
@@ -46,7 +48,7 @@ def _stats(ttfts, lats):
 def run_serial(prompts, max_new: int):
     gw = Gateway(_models(), profile=PROFILES["balanced"], max_seq=96)
     for m in POOL:                      # pre-warm: measure serving, not compile
-        gw._spin_up(m, "trt")
+        gw.pool.scale(m, "trt", 1)
     t0 = time.perf_counter()
     results = [gw.handle(p.text, max_new_tokens=max_new, deadline_s=120.0)
                for p in prompts]
@@ -62,15 +64,15 @@ def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
     spin = SpinConfig(window_s=30.0, cooldown_s=0.3, idle_tau_s=1.5,
                       tick_s=0.1, max_replicas=3,
                       warm_pool={"small": 0, "medium": 0, "large": 0})
-    gw = AsyncGateway(_models(), profile=PROFILES["balanced"], max_seq=96,
-                      spin=spin)
+    gw = ServeFrontend(_models(), profile=PROFILES["balanced"], max_seq=96,
+                       spin=spin)
     for m in POOL:                      # same pre-warm as the serial plane
         gw.pool.scale(m, "trt", 1)
     rng = np.random.RandomState(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(prompts)))
-    jobs = [(p.text, dict(max_new_tokens=max_new, deadline_s=120.0))
-            for p in prompts]
-    uids, wall = serve_open_loop(gw, jobs, arrivals)
+    reqs = [CompletionRequest(prompt=p.text, max_new_tokens=max_new,
+                              deadline_s=120.0) for p in prompts]
+    handles, wall = gw.serve_open_loop(reqs, arrivals)
     # snapshot paged KV-cache stats before settle retires the engines.
     # This plane runs the trt latency profile (dense cache), so the
     # hit-rate is null unless paged (vllm/tgi) replicas served traffic —
@@ -79,14 +81,15 @@ def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
     seen_tok = sum(e.prompt_tokens for _, e in gw.pool.engines() if e.paged)
     # let the Spin idle branch fire: real scale-to-zero on live engines
     gw.settle(timeout_s=4.0)
-    done = [gw.poll(u) for u in uids if u is not None]
-    done = [r for r in done if r is not None]
+    done = [h.response for h in handles if not h.shed]
     out = _stats([r.ttft_s for r in done] or [0.0],
                  [r.latency_s for r in done] or [0.0])
     out.update(n=len(done), wall_s=wall, throughput_rps=len(done) / wall,
                completed=sum(r.completed for r in done),
+               cold_start_s_attributed=float(sum(r.cold_start_s
+                                                 for r in done)),
                prefix_hit_rate=(hit_tok / seen_tok if seen_tok else None),
-               shed=len(gw.shed_uids), offered_rate_rps=rate,
+               shed=sum(h.shed for h in handles), offered_rate_rps=rate,
                peak_replicas=max((e.after for e in gw.pool.events),
                                  default=0),
                orch_events=[str(e) for e in gw.orch_events],
@@ -117,7 +120,7 @@ def main():
           f"completed={serial['completed']}/{serial['n']}")
 
     rate = args.rate or 3.0 * serial["throughput_rps"]
-    print(f"\n-- concurrent plane (AsyncGateway, open-loop Poisson "
+    print(f"\n-- concurrent plane (ServeFrontend, open-loop Poisson "
           f"@ {rate:.1f} rps) --")
     conc, gw = run_concurrent(prompts, args.max_new_tokens, rate, args.seed)
     print(f"wall={conc['wall_s']:.1f}s  tput={conc['throughput_rps']:.2f} "

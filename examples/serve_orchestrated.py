@@ -1,16 +1,19 @@
 """End-to-end serving driver: batched requests through the full
 Pick-and-Spin stack with the REAL engine (continuous batching, ragged
-decode) — the paper's Figure-1 loop on live models.
+decode) — the paper's Figure-1 loop on live models, spoken entirely in
+serving API v2 (``repro.api``).
 
 Trains nothing, simulates nothing: routing -> Algorithm-2 selection ->
 engine spin-up -> iteration-level batched decode, with telemetry flowing
 back into the registry normalizers. With ``--concurrent``, requests
-arrive open-loop (Poisson) into the AsyncGateway serve plane — replica
-pools, bounded admission queues, and the live Algorithm-1 Spin loop —
-instead of being served one at a time.
+arrive open-loop (Poisson) into the ``ServeFrontend`` — replica pools,
+priority-ordered bounded admission queues, and the live Algorithm-1 Spin
+loop — instead of being served one at a time.
 
 Run: PYTHONPATH=src python examples/serve_orchestrated.py [--requests 24]
      PYTHONPATH=src python examples/serve_orchestrated.py --concurrent --rate 8
+     PYTHONPATH=src python examples/serve_orchestrated.py --shared-prefix
+     PYTHONPATH=src python examples/serve_orchestrated.py --smoke   # CI gate
 """
 import argparse
 import dataclasses
@@ -22,56 +25,113 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro.api import CompletionRequest, Priority
 from repro.configs.registry import ARCHS
-from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
 from repro.data.benchmarks import generate_corpus
 
 
-def shared_prefix_demo(args):
-    """Multi-turn conversations through the AsyncGateway: the paged
-    engines underneath lease cached system-prompt/history blocks instead
-    of re-prefilling them, and the pool's hit-rate shows it."""
-    system = ("you are a terse assistant for arithmetic and list "
-              "questions; answer with the number only. ")
-    pool = {"smollm-360m":
+def _smol_pool():
+    return {"smollm-360m":
             dataclasses.replace(ARCHS["smollm-360m"].reduced(),
                                 dtype="float32")}
-    gw = AsyncGateway(pool, router=KeywordRouter(),
-                      profile=PROFILES[args.profile], max_seq=256,
-                      spin=SpinConfig(tick_s=3600.0, max_replicas=1),
-                      paged=True)
+
+
+def shared_prefix_demo(args):
+    """Multi-turn conversations as API-v2 SESSIONS: each conversation
+    submits only its new turn with a ``session_id``; the frontend chains
+    the token history, and the paged engines underneath lease cached
+    system-prompt/history blocks instead of re-prefilling them —
+    ``usage.cached_tokens`` shows it per response."""
+    system = ("you are a terse assistant for arithmetic and list "
+              "questions; answer with the number only. ")
+    fe = ServeFrontend(_smol_pool(), router=KeywordRouter(),
+                       profile=PROFILES[args.profile], max_seq=256,
+                       spin=SpinConfig(tick_s=3600.0, max_replicas=1),
+                       paged=True)
     turns = ["sum the numbers 3 5 8", "now add 11", "now subtract 4",
              "count the items apple pear plum"]
     convs = max(2, args.requests // len(turns))
     print(f"{convs} conversations x {len(turns)} turns, shared system "
           f"prompt ({len(system)} chars)\n")
-    history = {c: system + f"user {c}: " for c in range(convs)}
     for t, turn in enumerate(turns):
-        uids = {}
-        for c in range(convs):
-            history[c] += turn + " "
-            uids[c] = gw.submit(history[c], max_new_tokens=6)
-        gw.serve_all()
-        served = 0
-        for c, u in uids.items():
-            r = gw.poll(u) if u is not None else None   # u None => shed
-            if r is None:
-                continue
-            served += 1
-            history[c] += "".join(chr(max(32, tok % 95 + 32))
-                                  for tok in r.new_tokens) + " "
-        stats = gw.pool.kv_stats("smollm-360m") or {}
-        print(f"turn {t}: served {served}/{len(uids)}  "
+        handles = [fe.submit(CompletionRequest(
+            prompt=(system if t == 0 else "") + f"user {c}: {turn} ",
+            max_new_tokens=6, session_id=f"conv-{c}"))
+            for c in range(convs)]
+        fe.serve_all()
+        served = [h.response for h in handles if not h.shed]
+        cached = sum(r.usage.cached_tokens for r in served)
+        prompt = sum(r.usage.prompt_tokens for r in served)
+        stats = fe.pool.kv_stats("smollm-360m") or {}
+        print(f"turn {t}: served {len(served)}/{len(handles)}  "
+              f"cached {cached}/{prompt} prompt tokens  "
               f"kv hit-rate={stats.get('kv_hit_rate', 0.0):.1%}  "
               f"pool occupancy={stats.get('kv_occupancy', 0.0):.1%}")
-    eng = gw.pool.replicas("smollm-360m", "trt")[0]
+    eng = fe.pool.replicas("smollm-360m", "trt")[0]
     print(f"\nprefix cache: {eng.hit_tokens}/{eng.prompt_tokens} prompt "
           f"tokens served from cached KV blocks "
-          f"({eng.prefix_hit_rate():.1%}) — the shared system prompt was "
-          f"prefilled once, then leased by refcount")
+          f"({eng.prefix_hit_rate():.1%}) — the shared history was "
+          f"prefilled once per turn, then leased by refcount")
+
+
+def smoke(args):
+    """CI gate over the public API surface: one pass each through
+    streaming, sessions, priorities, cancellation and the sync facade.
+    Exits non-zero if any contract breaks."""
+    fe = ServeFrontend(_smol_pool(), router=KeywordRouter(), max_seq=96,
+                       spin=SpinConfig(tick_s=3600.0, max_replicas=1),
+                       paged=True)
+    # streaming: token events reproduce the final sequence exactly
+    h = fe.submit("sum the numbers 3 5 8", max_new_tokens=6)
+    streamed = [ev.token for ev in h.tokens() if ev.kind == "token"]
+    assert streamed == h.response.new_tokens, (streamed, h.response)
+    print(f"stream      ok: {len(streamed)} token events == new_tokens")
+    # session: turn 2 rides the radix prefix cache
+    r1 = fe.submit(CompletionRequest(prompt="count the items apple pear "
+                                     "plum fig date", max_new_tokens=4,
+                                     session_id="s")).result()
+    r2 = fe.submit(CompletionRequest(prompt=" now add two more",
+                                     max_new_tokens=4,
+                                     session_id="s")).result()
+    assert r2.usage.cached_tokens > 0, r2
+    print(f"session     ok: turn-2 reused {r2.usage.cached_tokens} cached "
+          f"prompt tokens (turn-1 model={r1.model})")
+    # cancellation: slot + KV blocks come back
+    hc = fe.submit("list everything at length", max_new_tokens=64)
+    fe.step(), fe.step()
+    assert hc.cancel() and hc.response.finish_reason == "cancelled"
+    fe.serve_all()
+    eng = fe.pool.replicas("smollm-360m", "trt")[0]
+    assert eng.idle_slots() == eng.max_batch
+    assert eng.kv_free_frac() == 1.0
+    print(f"cancel      ok: slot + {eng.num_blocks} blocks back "
+          f"({len(hc.response.new_tokens)} tokens were decoded)")
+    # priority: a full queue sheds the queued BATCH request to admit the
+    # INTERACTIVE arrival (low before high, structured shed result)
+    fe.scheduler.cfg.max_queue_depth = 1
+    blockers = [fe.submit(f"block {i}", max_new_tokens=16)
+                for i in range(eng.max_batch)]        # fill every slot
+    low = fe.submit("low priority work", max_new_tokens=2,
+                    priority=Priority.BATCH)          # fills the queue
+    hi = fe.submit("now please", max_new_tokens=2,
+                   priority=Priority.INTERACTIVE)     # evicts `low`
+    assert not hi.done()                              # admitted, in queue
+    fe.serve_all()
+    assert low.response.finish_reason == "shed"
+    assert hi.response.ok
+    assert all(b.response is not None for b in blockers)
+    print("priority    ok: queued BATCH shed, INTERACTIVE served")
+    # sync facade returns the same typed responses
+    gw = Gateway(_smol_pool(), router=KeywordRouter(), max_seq=96)
+    r = gw.handle("sum the numbers 3 5 8", max_new_tokens=6)
+    assert r.completed and len(r.new_tokens) == 6 and r.cold_start_s > 0
+    print(f"facade      ok: completed via {r.model}/{r.backend} "
+          f"(cold_start={r.cold_start_s:.2f}s)")
+    print("\nAPI v2 smoke: all surfaces pass")
 
 
 def main():
@@ -80,16 +140,21 @@ def main():
     ap.add_argument("--profile", default="quality",
                     choices=sorted(PROFILES))
     ap.add_argument("--concurrent", action="store_true",
-                    help="serve via the concurrent AsyncGateway plane")
+                    help="serve via the concurrent ServeFrontend plane")
     ap.add_argument("--rate", type=float, default=6.0,
                     help="open-loop arrival rate, rps (--concurrent)")
     ap.add_argument("--shared-prefix", action="store_true",
-                    help="multi-turn demo: every request shares a system "
-                         "prompt, so the paged engines' radix prefix "
-                         "cache skips most of each prefill (watch the "
-                         "kv-cache log lines)")
+                    help="multi-turn session demo: conversations chain "
+                         "via session_id, so the paged engines' radix "
+                         "prefix cache skips most of each prefill")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate over the public API surface "
+                         "(streaming, sessions, priorities, cancel, "
+                         "sync facade)")
     args = ap.parse_args()
 
+    if args.smoke:
+        return smoke(args)
     if args.shared_prefix:
         return shared_prefix_demo(args)
 
@@ -103,18 +168,18 @@ def main():
             ap.error("--rate must be > 0 (open-loop arrivals per second)")
         spin = SpinConfig(window_s=60.0, cooldown_s=0.5, idle_tau_s=2.0,
                           tick_s=0.2, max_replicas=4)
-        gw = AsyncGateway(pool, router=KeywordRouter(),
-                          profile=PROFILES[args.profile], max_seq=96,
-                          spin=spin)
+        fe = ServeFrontend(pool, router=KeywordRouter(),
+                           profile=PROFILES[args.profile], max_seq=96,
+                           spin=spin)
         rng = np.random.RandomState(5)
         arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
                                              size=len(prompts)))
-        jobs = [(p.text, dict(max_new_tokens=8, deadline_s=120.0))
-                for p in prompts]
-        uids, wall = serve_open_loop(gw, jobs, arrivals)
-        gw.settle(timeout_s=spin.idle_tau_s + 1.0)
-        results = [r for r in (gw.poll(u) for u in uids if u is not None)
-                   if r is not None]
+        reqs = [CompletionRequest(prompt=p.text, max_new_tokens=8,
+                                  deadline_s=120.0) for p in prompts]
+        handles, wall = fe.serve_open_loop(reqs, arrivals)
+        fe.settle(timeout_s=spin.idle_tau_s + 1.0)
+        results = [h.response for h in handles if not h.shed]
+        gw = fe
     else:
         gw = Gateway(pool, router=KeywordRouter(),
                      profile=PROFILES[args.profile], max_seq=96)

@@ -1,0 +1,8 @@
+"""Serving API v2: the typed completion protocol + futures-style handles.
+
+The single public vocabulary of the Pick-and-Spin serve plane — see
+``repro.core.gateway.ServeFrontend`` for the gateway that speaks it.
+"""
+from repro.api.protocol import (CompletionRequest, CompletionResponse,  # noqa: F401
+                                FinishReason, Priority, StreamEvent, Usage)
+from repro.api.handle import CompletionHandle  # noqa: F401

@@ -1,0 +1,101 @@
+"""Futures-style handles over the serve plane.
+
+``ServeFrontend.submit`` returns a ``CompletionHandle`` immediately —
+including for shed requests, whose handle is already resolved with a
+structured ``finish_reason == "shed"`` response. The handle is the one
+object a caller needs:
+
+  * ``result()``  — drive the serve loop until this request finishes and
+                    return its ``CompletionResponse``;
+  * ``tokens()``  — incremental streaming iterator: yields one
+                    ``StreamEvent`` per generated token as decode
+                    iterations land, then a terminal ``done`` event;
+  * ``cancel()``  — abort the request wherever it is (admission queue or
+                    mid-decode); the engine frees its slot and returns
+                    its KV blocks to the pool the same call;
+  * ``done()``    — non-blocking completion check.
+
+Handles are single-threaded like the serve plane itself: ``result()``
+and ``tokens()`` advance the shared loop via ``frontend.step()``, so
+many handles can be interleaved by one driver.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+from repro.api.protocol import (CompletionRequest, CompletionResponse,
+                                StreamEvent)
+
+
+class CompletionHandle:
+    def __init__(self, frontend, uid: int, request: CompletionRequest,
+                 model: str, backend: str, tier: str):
+        self._fe = frontend
+        self.uid = uid
+        self.request = request
+        self.model = model
+        self.backend = backend
+        self.tier = tier
+        self._events: List[StreamEvent] = []
+        self.response: Optional[CompletionResponse] = None
+
+    # -- wiring (called by the frontend) ---------------------------------
+    def _push_token(self, token: int) -> None:
+        self._events.append(StreamEvent(
+            kind="token", uid=self.uid, index=len(self._events), token=token))
+
+    def _resolve(self, response: CompletionResponse) -> None:
+        self.response = response
+        self._events.append(StreamEvent(
+            kind="done", uid=self.uid, index=len(self._events),
+            finish_reason=response.finish_reason))
+
+    # -- caller surface --------------------------------------------------
+    def done(self) -> bool:
+        return self.response is not None
+
+    @property
+    def shed(self) -> bool:
+        return self.response is not None and self.response.shed
+
+    def result(self, max_steps: int = 1_000_000) -> CompletionResponse:
+        """Drive the serve loop until this request resolves."""
+        steps = 0
+        while self.response is None and steps < max_steps:
+            if not self._fe.has_work():
+                raise RuntimeError(
+                    f"request {self.uid} is unresolved but the serve plane "
+                    f"is idle — it was never submitted to this frontend")
+            self._fe.step()
+            steps += 1
+        if self.response is None:
+            raise RuntimeError(f"request {self.uid} did not finish within "
+                               f"{max_steps} serve steps")
+        return self.response
+
+    def tokens(self) -> Iterator[StreamEvent]:
+        """Incremental stream: yields buffered events, then advances the
+        serve loop one decode iteration at a time for more. The token
+        events, in order, are exactly the response's ``new_tokens``."""
+        i = 0
+        while True:
+            while i < len(self._events):
+                ev = self._events[i]
+                i += 1
+                yield ev
+                if ev.kind == "done":
+                    return
+            if self.response is None and not self._fe.has_work():
+                raise RuntimeError(
+                    f"request {self.uid} is unresolved but the serve plane "
+                    f"is idle — it was never submitted to this frontend")
+            self._fe.step()
+
+    def cancel(self) -> bool:
+        """Cancel queued or in-flight work. True if this call cancelled
+        the request (its handle resolves with ``finish_reason ==
+        "cancelled"`` and the engine's slot + KV blocks are freed);
+        False if it had already finished."""
+        if self.response is not None:
+            return False
+        return self._fe.cancel(self.uid)

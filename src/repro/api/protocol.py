@@ -1,0 +1,106 @@
+"""Serving API v2 — the typed completion protocol.
+
+One request/response vocabulary for every way of talking to the serve
+plane: the synchronous ``Gateway`` facade, the concurrent
+``ServeFrontend``, launchers, examples and benchmarks all speak
+``CompletionRequest`` in and ``CompletionResponse`` out. Shedding,
+cancellation and deadline expiry are STRUCTURED results (a response with
+a ``finish_reason``), never ``None`` — a caller can always tell what
+happened to a request it submitted.
+
+``StreamEvent`` is the unit of streaming: one event per generated token
+(emitted per decode iteration of the engine underneath) plus a terminal
+``done`` event carrying the finish reason.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import List, Optional
+
+from repro.serving.sampling import SamplingParams
+
+
+class Priority(IntEnum):
+    """Request priority class. Under admission pressure the scheduler
+    sheds strictly low-before-high: a queued BATCH request is evicted to
+    admit an INTERACTIVE one, never the other way round."""
+    BATCH = 0
+    NORMAL = 1
+    INTERACTIVE = 2
+
+
+class FinishReason:
+    """Why a request left the serve plane (string constants, not an enum,
+    so responses serialize naturally)."""
+    STOP = "stop"              # hit eos_id
+    LENGTH = "length"          # max_new_tokens (or ran out of sequence room)
+    TIMEOUT = "timeout"        # deadline expired (queued or mid-decode)
+    CANCELLED = "cancelled"    # caller cancelled via CompletionHandle.cancel()
+    SHED = "shed"              # rejected/evicted at admission (backpressure)
+
+
+@dataclass(frozen=True)
+class CompletionRequest:
+    """What a caller asks for. ``session_id`` chains multi-turn requests:
+    the frontend prepends the session's token history (prior prompts +
+    completions), which is exactly the prefix the paged engines' radix
+    cache already holds — turn N+1 prefills only its new suffix."""
+    prompt: str
+    max_new_tokens: int = 16
+    deadline_s: Optional[float] = None
+    priority: Priority = Priority.NORMAL
+    session_id: Optional[str] = None
+    sampling: Optional[SamplingParams] = None
+
+
+@dataclass
+class Usage:
+    """Per-request accounting, including the real measured cold-start
+    time this request waited on (a replica spun up for it) and the prompt
+    tokens served from the radix prefix cache instead of prefill."""
+    prompt_tokens: int = 0
+    cached_tokens: int = 0
+    completion_tokens: int = 0
+    cold_start_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One streaming increment: ``kind == "token"`` carries a generated
+    token id; the terminal ``kind == "done"`` carries the finish reason."""
+    kind: str                          # "token" | "done"
+    uid: int
+    index: int                         # 0-based position in new_tokens
+    token: Optional[int] = None
+    finish_reason: Optional[str] = None
+
+
+@dataclass
+class CompletionResponse:
+    uid: int
+    prompt: str
+    model: str
+    backend: str
+    tier: str
+    new_tokens: List[int] = field(default_factory=list)
+    finish_reason: str = FinishReason.LENGTH
+    completed: bool = False            # finished within limits (stop/length)
+    ttft_s: float = 0.0
+    latency_s: float = 0.0
+    usage: Usage = field(default_factory=Usage)
+    session_id: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.finish_reason in (FinishReason.STOP, FinishReason.LENGTH)
+
+    @property
+    def shed(self) -> bool:
+        return self.finish_reason == FinishReason.SHED
+
+    @property
+    def cold_start_s(self) -> float:
+        """Measured spin-up time attributed to this request (0.0 when it
+        was served by an already-live replica)."""
+        return self.usage.cold_start_s

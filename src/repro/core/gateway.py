@@ -1,153 +1,81 @@
-"""API Gateways — the real (non-simulated) Pick-and-Spin paths.
+"""The Pick-and-Spin gateway — one serving API over the real serve plane.
 
-Two planes over the same Pick machinery (Router -> Registry -> Policy):
+``ServeFrontend`` is the single entry point (serving API v2): every
+request — from the synchronous ``Gateway`` facade, the open-loop driver,
+launchers, examples and benchmarks — takes the SAME path:
 
-  ``Gateway``      the serial baseline: one blocking request at a time,
-                   each served to completion via ``eng.run([req])``.
-  ``AsyncGateway`` the concurrent serve plane: ``submit()``/``poll()``
-                   feed bounded per-service queues (RequestScheduler),
-                   requests from many callers overlap inside replica
-                   pools of real engines (iteration-level continuous
-                   batching across the pool), and Algorithm 1
-                   (``Orchestrator.tick``) runs inline against LIVE
-                   telemetry — scale-up under load, scale-to-zero when
-                   idle, warm-pool re-spins — on those real engines.
+    CompletionRequest -> Router -> Algorithm-2 policy -> priority-ordered
+    bounded admission queue (RequestScheduler) -> ReplicaPool of real
+    engines, with Algorithm 1 (``Orchestrator.tick``) running inline
+    against LIVE telemetry.
+
+``submit()`` returns a ``CompletionHandle`` immediately: ``.result()``
+drives the serve loop to completion, ``.tokens()`` streams one event per
+decode iteration, ``.cancel()`` aborts queued or mid-decode work (slot +
+KV blocks freed the same call). Shed requests resolve with a structured
+``finish_reason == "shed"`` — never ``None``. Requests carrying a
+``session_id`` chain multi-turn: the frontend prepends the session's
+token history, which is exactly the prefix the paged engines' radix
+cache holds, so turn N+1 prefills only its new suffix.
 
 Model "spin-up" here is genuinely expensive (param init/load + XLA
 compile), so cold starts, warm pools and scale-to-zero are measured, not
-modeled — this is the calibration source for the simulator's constants
-on small archs, and the end-to-end serving substrate.
+modeled — each response's ``usage.cold_start_s`` carries the spin time
+the request actually waited on. This is the calibration source for the
+simulator's constants on small archs, and the end-to-end serving
+substrate.
 """
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import numpy as np
-
+from repro.api import (CompletionHandle, CompletionRequest,
+                       CompletionResponse, FinishReason, Priority, Usage)
 from repro.configs.base import ModelConfig
 from repro.core.orchestrator import Orchestrator, SpinConfig
 from repro.core.policies import MultiObjectivePolicy, SelectionPolicy
 from repro.core.registry import ServiceRegistry
-from repro.core.router import KeywordRouter, RouteDecision
+from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES, OperatorProfile
 from repro.core.telemetry import Telemetry
 from repro.data.tokenizer import ByteTokenizer
-from repro.models import init_model
-from repro.serving import (BACKENDS, InferenceEngine, ReplicaPool, Request,
-                           RequestScheduler, SamplingParams, SchedulerConfig)
-
-import jax
+from repro.serving import (GenResult, ReplicaPool, Request, RequestScheduler,
+                           SamplingParams, SchedulerConfig)
 
 
 @dataclass
-class GatewayResult:
-    text_prompt: str
-    model: str
-    backend: str
-    tier: str
-    new_tokens: List[int]
-    ttft_s: float
-    latency_s: float
-    cold_start_s: float
-    completed: bool
-    uid: int = -1
+class GatewayConfig:
+    """The ONE construction recipe for a serve plane. Both ``Gateway``
+    and ``ServeFrontend`` build from it, so there is a single
+    registry/policy/router setup path.
 
+    ``models`` are what EXECUTES (reduced on CPU); ``cost_configs``
+    (default: the full assigned configs with the same names) drive the
+    registry's production cost model, so tier economics — the reason
+    Pick exists — stay realistic even when stand-in models serve."""
+    models: Dict[str, ModelConfig]
+    router: object = None                      # default: KeywordRouter()
+    policy_cls: type = MultiObjectivePolicy
+    profile: OperatorProfile = PROFILES["balanced"]
+    backends: Tuple[str, ...] = ("trt",)
+    max_seq: int = 256
+    seed: int = 0
+    cost_configs: Optional[Dict[str, ModelConfig]] = None
+    spin: Optional[SpinConfig] = None
+    sched: Optional[SchedulerConfig] = None
+    paged: object = "auto"
+    autoscale: bool = True                     # run Algorithm 1 inline
+    result_retention: int = 256                # bounded finished-result buffer
+    session_retention: int = 1024              # LRU bound on live sessions
 
-class Gateway:
-    def __init__(self, models: Dict[str, ModelConfig], router=None,
-                 policy_cls=MultiObjectivePolicy,
-                 profile: OperatorProfile = PROFILES["balanced"],
-                 backends: Tuple[str, ...] = ("trt",),
-                 max_seq: int = 256, seed: int = 0,
-                 cost_configs: Dict[str, ModelConfig] = None):
-        """``models`` are what EXECUTES (reduced on CPU); ``cost_configs``
-        (default: the full assigned configs with the same names) drive the
-        registry's production cost model, so tier economics — the reason
-        Pick exists — stay realistic even when stand-in models serve."""
+    def resolved_cost_configs(self) -> Dict[str, ModelConfig]:
         from repro.configs.registry import ARCHS as _FULL
-        self.models = models
-        self.router = router or KeywordRouter()
-        cost_cfgs = cost_configs or {
+        return self.cost_configs or {
             name: _FULL.get(name.replace("-smoke", ""), cfg)
-            for name, cfg in models.items()}
-        self.registry = ServiceRegistry(cost_cfgs, backends)
-        # scale-from-zero on route: cold start priced into the prediction
-        self.policy: SelectionPolicy = policy_cls(self.registry, seed,
-                                                  require_capacity=False)
-        self.profile = profile
-        self.telemetry = Telemetry()
-        self.max_seq = max_seq
-        self.tok = ByteTokenizer()
-        self._engines: Dict[Tuple[str, str], InferenceEngine] = {}
-        self._params_cache: Dict[str, dict] = {}      # "warm" weights
-        self.cold_starts: List[Tuple[str, float]] = []
-        self._uid = 0
-
-    # -- lifecycle ("Spin") ------------------------------------------------
-    def _spin_up(self, model: str, backend: str) -> InferenceEngine:
-        key = (model, backend)
-        if key in self._engines:
-            return self._engines[key]
-        t0 = time.perf_counter()
-        cfg = self.models[model]
-        warm = model in self._params_cache
-        if not warm:
-            self._params_cache[model] = init_model(cfg, jax.random.PRNGKey(0))
-        eng = InferenceEngine(cfg, self._params_cache[model],
-                              BACKENDS[backend], max_seq=self.max_seq)
-        # trigger compile (the dominant real cold-start cost)
-        eng.run([Request(uid=-1, tokens=[1, 2, 3],
-                         sampling=SamplingParams(max_new_tokens=2))])
-        cold = time.perf_counter() - t0
-        self.cold_starts.append((f"{model}/{backend}/"
-                                 f"{'warm' if warm else 'cold'}", cold))
-        self._engines[key] = eng
-        self.registry.entry(model, backend).replicas = 1
-        return eng
-
-    def scale_to_zero(self, model: str, backend: str, keep_warm: bool = True
-                      ) -> None:
-        key = (model, backend)
-        if key in self._engines:
-            del self._engines[key]
-            self.registry.entry(model, backend).replicas = 0
-            if not keep_warm:
-                self._params_cache.pop(model, None)
-
-    # -- request path ("Pick" -> serve) -------------------------------------
-    def handle(self, text: str, max_new_tokens: int = 16,
-               deadline_s: Optional[float] = None) -> GatewayResult:
-        t_arrive = time.perf_counter()
-        decision = self.router.route(text)
-        tokens = self.tok.encode(text)
-        sel = self.policy.select(decision, len(tokens), max_new_tokens,
-                                 self.profile)
-        model, backend = sel.entry.model, sel.entry.backend
-        self.telemetry.record_request(model, t_arrive)
-
-        had_engine = (model, backend) in self._engines
-        eng = self._spin_up(model, backend)
-        cold = 0.0 if had_engine else self.cold_starts[-1][1]
-
-        cfg = self.models[model]
-        req = Request(uid=self._uid, arrival_t=t_arrive,
-                      tokens=[t % cfg.vocab_size for t in tokens],
-                      sampling=SamplingParams(max_new_tokens=max_new_tokens),
-                      deadline_s=deadline_s)
-        self._uid += 1
-        res = eng.run([req])[0]
-        self.telemetry.record_latency(model, time.perf_counter(), res.latency)
-        return GatewayResult(
-            text_prompt=text, model=model, backend=backend,
-            tier=sel.entry.tier, new_tokens=res.new_tokens,
-            ttft_s=res.ttft, latency_s=res.latency, cold_start_s=cold,
-            completed=res.completed, uid=req.uid)
-
-
-# ---------------------------------------------------------------------------
-# concurrent serve plane
+            for name, cfg in self.models.items()}
 
 
 @dataclass
@@ -171,127 +99,219 @@ class OrchEvent:
                 f"{self.before}->{self.target}")
 
 
-class AsyncGateway:
-    """Concurrent serve plane: submit()/poll() + a step-driven serve loop.
+@dataclass
+class _Session:
+    """Multi-turn chain: service pinned on the first turn (history
+    tokens only mean something to one model), token history grown on
+    each completed turn. Turn N+1's prompt = history + new text, which
+    is the prefix the radix cache registered when turn N finished.
 
-    Request path: Router -> Algorithm-2 policy -> bounded admission queue
-    (``RequestScheduler``) -> ``ReplicaPool`` of real engines. Each
-    ``step()`` runs one decode iteration across EVERY engine with work
-    (so in-flight requests genuinely overlap) and, every ``tick_s``, one
-    pass of the Algorithm-1 control loop whose ``scale_cb`` spins real
-    replicas up and down.
-    """
+    Turns are sequential by contract (submit turn N+1 after turn N
+    resolves). An overlapping turn is still served, but it neither sees
+    nor overwrites history it wasn't built on — the ``turns`` counter
+    guards the chain against clobbering."""
+    model: str
+    backend: str
+    tier: str
+    tokens: List[int] = field(default_factory=list)
+    turns: int = 0
 
-    def __init__(self, models: Dict[str, ModelConfig], router=None,
-                 policy_cls=MultiObjectivePolicy,
-                 profile: OperatorProfile = PROFILES["balanced"],
-                 backends: Tuple[str, ...] = ("trt",),
-                 max_seq: int = 256, seed: int = 0,
-                 cost_configs: Dict[str, ModelConfig] = None,
-                 spin: Optional[SpinConfig] = None,
-                 sched: Optional[SchedulerConfig] = None,
-                 paged="auto"):
-        from repro.configs.registry import ARCHS as _FULL
-        self.models = models
-        self.router = router or KeywordRouter()
-        cost_cfgs = cost_configs or {
-            name: _FULL.get(name.replace("-smoke", ""), cfg)
-            for name, cfg in models.items()}
-        self.registry = ServiceRegistry(cost_cfgs, backends)
-        self.policy: SelectionPolicy = policy_cls(self.registry, seed,
-                                                  require_capacity=False)
-        self.profile = profile
+
+@dataclass
+class _Inflight:
+    request: CompletionRequest
+    ereq: Request
+    model: str
+    backend: str
+    tier: str
+    cold_mark: int       # len(pool.cold_starts) at submit, for attribution
+    turn: int = -1       # session turn counter at submit (-1: no session)
+
+
+class ServeFrontend:
+    """Serving API v2 frontend: typed submit -> handle, step-driven serve
+    loop, streaming deltas, cancellation, sessions, priorities."""
+
+    def __init__(self, models_or_config: Union[GatewayConfig,
+                                               Dict[str, ModelConfig]],
+                 **kw):
+        cfg = (models_or_config if isinstance(models_or_config, GatewayConfig)
+               else GatewayConfig(models=models_or_config, **kw))
+        self.config = cfg
+        self.models = cfg.models
+        self.router = cfg.router or KeywordRouter()
+        self.registry = ServiceRegistry(cfg.resolved_cost_configs(),
+                                        cfg.backends)
+        # scale-from-zero on route: cold start priced into the prediction
+        self.policy: SelectionPolicy = cfg.policy_cls(
+            self.registry, cfg.seed, require_capacity=False)
+        self.profile = cfg.profile
         self.telemetry = Telemetry()
         self.tok = ByteTokenizer()
-        self.max_seq = max_seq
-        self.spin = spin or SpinConfig()
-        self.pool = ReplicaPool(models, self.registry, max_seq=max_seq,
-                                seed=seed, paged=paged)
+        self.max_seq = cfg.max_seq
+        self.spin = cfg.spin or SpinConfig()
+        self.pool = ReplicaPool(cfg.models, self.registry, max_seq=cfg.max_seq,
+                                seed=cfg.seed, paged=cfg.paged)
         self.scheduler = RequestScheduler(self.pool, self.registry,
-                                          self.telemetry, sched)
+                                          self.telemetry, cfg.sched)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
                                  scale_cb=self.pool.scale)
         self.orch_events: List[OrchEvent] = []
         self._next_tick = 0.0
         self._uid = 0
-        self._meta: Dict[int, Tuple[str, str, str, str]] = {}
-        self._results: Dict[int, GatewayResult] = {}
-        self.shed_uids: List[int] = []
+        self._inflight: Dict[int, _Inflight] = {}
+        self._handles: Dict[int, CompletionHandle] = {}
+        # bounded retention of finished responses (a serve plane driven
+        # via serve_all()/step() without claiming handles must not grow
+        # without bound) — drain() hands them over explicitly
+        self._recent: "OrderedDict[int, CompletionResponse]" = OrderedDict()
+        # LRU-bounded: one-shot conversations with unique ids must not
+        # accumulate forever on a long-running plane (end_session() is
+        # the explicit path; the bound is the backstop)
+        self._sessions: "OrderedDict[str, _Session]" = OrderedDict()
 
     @property
     def cold_starts(self) -> List[Tuple[str, float]]:
         return self.pool.cold_starts
 
     # -- request path ("Pick" -> enqueue) ------------------------------------
-    def submit(self, text: str, max_new_tokens: int = 16,
-               deadline_s: Optional[float] = None,
-               sampling: Optional[SamplingParams] = None) -> Optional[int]:
-        """Route + select + enqueue. Returns the request uid, or None if
-        the selected service's queue is full (request shed)."""
+    def submit(self, request: Union[CompletionRequest, str], *,
+               max_new_tokens: int = 16, deadline_s: Optional[float] = None,
+               priority: Priority = Priority.NORMAL,
+               session_id: Optional[str] = None,
+               sampling: Optional[SamplingParams] = None) -> CompletionHandle:
+        """Route + select + enqueue. ALWAYS returns a handle: a shed
+        request's handle is already resolved with ``finish_reason ==
+        "shed"`` (structured backpressure, not ``None``)."""
+        if not isinstance(request, CompletionRequest):
+            request = CompletionRequest(
+                prompt=request, max_new_tokens=max_new_tokens,
+                deadline_s=deadline_s, priority=priority,
+                session_id=session_id, sampling=sampling)
         now = time.perf_counter()
-        decision = self.router.route(text)
-        tokens = self.tok.encode(text)
-        sel = self.policy.select(decision, len(tokens), max_new_tokens,
-                                 self.profile)
-        model, backend = sel.entry.model, sel.entry.backend
+        prompt_tokens = self.tok.encode(request.prompt)
+        sess = (self._sessions.get(request.session_id)
+                if request.session_id else None)
+        if sess is None:
+            decision = self.router.route(request.prompt)
+            sel = self.policy.select(decision, len(prompt_tokens),
+                                     request.max_new_tokens, self.profile)
+            model, backend = sel.entry.model, sel.entry.backend
+            tier = sel.entry.tier
+            if request.session_id:      # pin the service for later turns
+                sess = _Session(model, backend, tier)
+                self._sessions[request.session_id] = sess
+                self._bound_sessions()
+        else:
+            model, backend, tier = sess.model, sess.backend, sess.tier
+            self._sessions.move_to_end(request.session_id)
         self.telemetry.record_request(model, now)
         cfg = self.models[model]
+        tokens = [t % cfg.vocab_size for t in prompt_tokens]
+        if sess is not None:
+            tokens = sess.tokens + tokens
         uid = self._uid
         self._uid += 1
-        req = Request(uid=uid, arrival_t=now,
-                      tokens=[t % cfg.vocab_size for t in tokens],
-                      sampling=sampling or
-                      SamplingParams(max_new_tokens=max_new_tokens),
-                      deadline_s=deadline_s)
-        if not self.scheduler.enqueue(model, backend, req, now):
-            self.shed_uids.append(uid)
-            return None
-        self._meta[uid] = (text, model, backend, sel.entry.tier)
-        return uid
+        ereq = Request(uid=uid, arrival_t=now, tokens=tokens,
+                       sampling=request.sampling or
+                       SamplingParams(max_new_tokens=request.max_new_tokens),
+                       deadline_s=request.deadline_s,
+                       priority=int(request.priority))
+        handle = CompletionHandle(self, uid, request, model=model,
+                                  backend=backend, tier=tier)
+        info = _Inflight(request, ereq, model, backend, tier,
+                         cold_mark=len(self.pool.cold_starts),
+                         turn=sess.turns if sess is not None else -1)
+        if not self.scheduler.enqueue(model, backend, ereq, now):
+            res = GenResult(uid=uid, prompt_len=len(tokens), shed=True)
+            handle._resolve(self._make_response(info, res))
+            self._remember(handle.response)
+            return handle
+        self._inflight[uid] = info
+        self._handles[uid] = handle
+        return handle
 
     # -- serve loop -----------------------------------------------------
-    def step(self) -> List[GatewayResult]:
-        """One serve-loop iteration: Algorithm-1 tick when due, then one
-        scheduling + decode pass over the pool. Returns newly finished."""
+    def step(self) -> List[CompletionResponse]:
+        """One serve-loop iteration: Algorithm-1 tick when due, one
+        scheduling + decode pass over the pool, streaming deltas pushed
+        to their handles. Returns newly finished responses."""
         now = time.perf_counter()
-        if now >= self._next_tick:
+        if self.config.autoscale and now >= self._next_tick:
             before = {m: self.registry.model_replicas(m)
                       for m in self.registry.models}
             for m, target in self.orch.tick(now).items():
                 self.orch_events.append(OrchEvent(now, m, before[m], target))
             self._next_tick = now + self.spin.tick_s
-        out: List[GatewayResult] = []
-        for (model, backend), res in self.scheduler.step(now):
-            meta = self._meta.pop(res.uid, None)
-            if meta is None:                      # warm-up probe etc.
-                continue
-            text, m, b, tier = meta
-            gr = GatewayResult(
-                text_prompt=text, model=m, backend=b, tier=tier,
-                new_tokens=res.new_tokens, ttft_s=res.ttft,
-                latency_s=res.latency, cold_start_s=0.0,
-                completed=res.completed, uid=res.uid)
-            self._results[res.uid] = gr
-            out.append(gr)
+        finished = self.scheduler.step(now)
+        for uid, token in self.scheduler.drain_deltas():
+            h = self._handles.get(uid)
+            if h is not None:            # warm-up probes have no handle
+                h._push_token(token)
+        out: List[CompletionResponse] = []
+        for _key, res in finished:
+            resp = self._finish(res)
+            if resp is not None:
+                out.append(resp)
         return out
 
-    def poll(self, uid: int) -> Optional[GatewayResult]:
-        """Fetch-and-remove the finished result for ``uid`` (None if
-        unknown or still in flight) — results don't accumulate forever
-        on a long-running serve plane."""
-        return self._results.pop(uid, None)
+    def cancel(self, uid: int) -> bool:
+        """Abort ``uid`` wherever it is (queue or mid-decode). The handle
+        resolves immediately with ``finish_reason == "cancelled"`` and
+        the engine's slot + KV blocks are freed. False if unknown or
+        already finished."""
+        info = self._inflight.get(uid)
+        if info is None:
+            return False
+        res = self.scheduler.cancel(info.model, info.backend, uid)
+        if res is None:
+            return False
+        self._finish(res)
+        return True
 
     def has_work(self) -> bool:
         return self.scheduler.has_work()
 
-    def serve_all(self, max_steps: int = 1_000_000) -> List[GatewayResult]:
+    def serve_all(self, max_steps: int = 1_000_000
+                  ) -> List[CompletionResponse]:
         """Synchronous driver: run the serve loop until all queues drain."""
-        out: List[GatewayResult] = []
+        out: List[CompletionResponse] = []
         steps = 0
         while self.has_work() and steps < max_steps:
             out.extend(self.step())
             steps += 1
         return out
+
+    def drain(self) -> List[CompletionResponse]:
+        """Hand over (and clear) the bounded buffer of finished
+        responses — the explicit bulk-results surface for drivers that
+        don't keep per-request handles."""
+        out = list(self._recent.values())
+        self._recent.clear()
+        return out
+
+    def serve_open_loop(self, requests: Sequence[CompletionRequest],
+                        arrivals: Sequence[float]
+                        ) -> Tuple[List[CompletionHandle], float]:
+        """Open-loop driver: submit ``requests[i]`` at offset
+        ``arrivals[i]`` (seconds, sorted) regardless of completions —
+        arrivals do not wait for the system, so overload shows up as
+        queueing/shedding, not as a slower workload. Drives the serve
+        loop continuously in between. Returns (handles, wall_s); every
+        handle is resolved on return (shed ones with
+        ``finish_reason == "shed"``)."""
+        t0 = time.perf_counter()
+        handles: List[CompletionHandle] = []
+        i, n = 0, len(requests)
+        while i < n or self.has_work():
+            now = time.perf_counter() - t0
+            while i < n and arrivals[i] <= now:
+                handles.append(self.submit(requests[i]))
+                i += 1
+            self.step()
+            if not self.has_work() and i < n:
+                time.sleep(max(0.0, min(0.005, arrivals[i] - now)))
+        return handles, time.perf_counter() - t0
 
     def settle(self, timeout_s: float = 5.0, poll_s: float = 0.02) -> bool:
         """Idle the serve loop so Spin's idle branch can fire (scale-to-
@@ -306,6 +326,71 @@ class AsyncGateway:
             time.sleep(poll_s)
         return self.pool.total_replicas() <= floor
 
+    def end_session(self, session_id: str) -> bool:
+        """Drop a session's history explicitly (its cached KV blocks age
+        out of the radix cache on their own). True if it existed."""
+        return self._sessions.pop(session_id, None) is not None
+
+    # -- internals -------------------------------------------------------
+    def _finish(self, res: GenResult) -> Optional[CompletionResponse]:
+        info = self._inflight.pop(res.uid, None)
+        handle = self._handles.pop(res.uid, None)
+        if info is None:                 # warm-up probe etc.
+            return None
+        resp = self._make_response(info, res)
+        if info.request.session_id and resp.completed:
+            sess = self._sessions.get(info.request.session_id)
+            # turn guard: only a turn built on the CURRENT history may
+            # extend it — an overlapping turn (submitted before the
+            # previous one resolved) is served but never clobbers the
+            # chain with history it didn't see
+            if sess is not None and sess.turns == info.turn:
+                sess.tokens = info.ereq.tokens + res.new_tokens
+                sess.turns += 1
+        if handle is not None:
+            handle._resolve(resp)
+        self._remember(resp)
+        return resp
+
+    def _make_response(self, info: _Inflight,
+                       res: GenResult) -> CompletionResponse:
+        if res.shed:
+            reason = FinishReason.SHED
+        elif res.cancelled:
+            reason = FinishReason.CANCELLED
+        elif res.timed_out:
+            reason = FinishReason.TIMEOUT
+        else:
+            eos = info.ereq.sampling.eos_id
+            reason = (FinishReason.STOP if res.completed and eos is not None
+                      and res.new_tokens and res.new_tokens[-1] == eos
+                      else FinishReason.LENGTH)
+        # real measured spin time this request waited on: every cold/warm
+        # start of ITS service logged between submit and finish
+        svc = f"{info.model}/{info.backend}/"
+        cold = sum(d for label, d in
+                   self.pool.cold_starts[info.cold_mark:]
+                   if label.startswith(svc))
+        usage = Usage(prompt_tokens=res.prompt_len,
+                      cached_tokens=res.cached_tokens,
+                      completion_tokens=len(res.new_tokens),
+                      cold_start_s=cold)
+        return CompletionResponse(
+            uid=res.uid, prompt=info.request.prompt, model=info.model,
+            backend=info.backend, tier=info.tier,
+            new_tokens=list(res.new_tokens), finish_reason=reason,
+            completed=res.completed, ttft_s=res.ttft, latency_s=res.latency,
+            usage=usage, session_id=info.request.session_id)
+
+    def _remember(self, resp: CompletionResponse) -> None:
+        self._recent[resp.uid] = resp
+        while len(self._recent) > self.config.result_retention:
+            self._recent.popitem(last=False)
+
+    def _bound_sessions(self) -> None:
+        while len(self._sessions) > self.config.session_retention:
+            self._sessions.popitem(last=False)
+
     def _floor_replicas(self) -> int:
         """Total replicas Spin's idle branch would leave running."""
         total = 0
@@ -319,25 +404,54 @@ class AsyncGateway:
         return total
 
 
-def serve_open_loop(gw: AsyncGateway,
-                    jobs: Sequence[Tuple[str, dict]],
-                    arrivals: Sequence[float]
-                    ) -> Tuple[List[Optional[int]], float]:
-    """Open-loop driver: submit ``jobs[i]`` at offset ``arrivals[i]``
-    (seconds, sorted) regardless of completions — arrivals do not wait
-    for the system, so overload shows up as queueing/shedding, not as a
-    slower workload. Drives the serve loop continuously in between.
-    Returns (uids, wall_s); ``uids[i]`` is None if job i was shed."""
-    t0 = time.perf_counter()
-    uids: List[Optional[int]] = []
-    i, n = 0, len(jobs)
-    while i < n or gw.has_work():
-        now = time.perf_counter() - t0
-        while i < n and arrivals[i] <= now:
-            text, kw = jobs[i]
-            uids.append(gw.submit(text, **kw))
-            i += 1
-        gw.step()
-        if not gw.has_work() and i < n:
-            time.sleep(max(0.0, min(0.005, arrivals[i] - now)))
-    return uids, time.perf_counter() - t0
+class Gateway:
+    """Thin SYNCHRONOUS facade over ``ServeFrontend`` — the serial
+    baseline (one blocking request at a time) with zero construction
+    logic of its own. ``handle()`` is ``submit().result()`` on the same
+    concurrent plane everything else uses; Algorithm-1 autoscaling is
+    off (the caller drives lifecycle explicitly via ``scale_to_zero``)."""
+
+    def __init__(self, models: Dict[str, ModelConfig], router=None,
+                 policy_cls=MultiObjectivePolicy,
+                 profile: OperatorProfile = PROFILES["balanced"],
+                 backends: Tuple[str, ...] = ("trt",),
+                 max_seq: int = 256, seed: int = 0,
+                 cost_configs: Dict[str, ModelConfig] = None,
+                 sched: Optional[SchedulerConfig] = None, paged="auto"):
+        self.frontend = ServeFrontend(GatewayConfig(
+            models=models, router=router, policy_cls=policy_cls,
+            profile=profile, backends=backends, max_seq=max_seq, seed=seed,
+            cost_configs=cost_configs, sched=sched, paged=paged,
+            autoscale=False))
+
+    # shared-plane passthroughs (no duplicated state)
+    models = property(lambda self: self.frontend.models)
+    router = property(lambda self: self.frontend.router)
+    registry = property(lambda self: self.frontend.registry)
+    policy = property(lambda self: self.frontend.policy)
+    profile = property(lambda self: self.frontend.profile)
+    telemetry = property(lambda self: self.frontend.telemetry)
+    tok = property(lambda self: self.frontend.tok)
+    max_seq = property(lambda self: self.frontend.max_seq)
+    pool = property(lambda self: self.frontend.pool)
+    scheduler = property(lambda self: self.frontend.scheduler)
+    cold_starts = property(lambda self: self.frontend.cold_starts)
+
+    # -- request path ("Pick" -> serve) -------------------------------------
+    def handle(self, text: str, max_new_tokens: int = 16,
+               deadline_s: Optional[float] = None,
+               priority: Priority = Priority.NORMAL,
+               session_id: Optional[str] = None,
+               sampling: Optional[SamplingParams] = None
+               ) -> CompletionResponse:
+        return self.frontend.submit(
+            text, max_new_tokens=max_new_tokens, deadline_s=deadline_s,
+            priority=priority, session_id=session_id,
+            sampling=sampling).result()
+
+    # -- lifecycle ("Spin", explicit on the serial facade) -------------------
+    def scale_to_zero(self, model: str, backend: str,
+                      keep_warm: bool = True) -> None:
+        self.frontend.pool.scale(model, backend, 0)
+        if not keep_warm:
+            self.frontend.pool.evict(model)

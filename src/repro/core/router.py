@@ -37,8 +37,10 @@ KEYWORD_OVERHEAD_S = 0.0002
 CLASSIFIER_OVERHEAD_S = 0.012
 
 
-@dataclass
+@dataclass(frozen=True)
 class RouteDecision:
+    """Immutable: decisions are shared across policy/bandit/simulator
+    layers, so no consumer may rewrite another's view of the route."""
     tier: str                          # predicted complexity class C_hat
     probs: Dict[str, float]           # p_k over tiers (Eq. 3)
     mode: str                          # keyword | semantic | hybrid
@@ -101,15 +103,21 @@ class HybridRouter:
         ambiguous = [i for i, d in enumerate(kw)
                      if max(d.probs.values()) < self.margin + 1e-9
                      or d.tier == "medium"]
-        if ambiguous:
-            sem = self.sem.route_many([texts[i] for i in ambiguous])
-            for i, d in zip(ambiguous, sem):
-                kw[i] = RouteDecision(d.tier, d.probs, "hybrid",
-                                      KEYWORD_OVERHEAD_S + d.overhead_s)
-        for d in kw:
-            if d.mode == "keyword":
-                d.mode = "hybrid"
-        return kw
+        sem = dict(zip(ambiguous,
+                       self.sem.route_many([texts[i] for i in ambiguous])
+                       if ambiguous else []))
+        # fresh decisions throughout — the keyword router's outputs are
+        # never rewritten in place (they may be cached/shared upstream)
+        out: List[RouteDecision] = []
+        for i, d in enumerate(kw):
+            s = sem.get(i)
+            if s is not None:
+                out.append(RouteDecision(s.tier, s.probs, "hybrid",
+                                         KEYWORD_OVERHEAD_S + s.overhead_s))
+            else:
+                out.append(RouteDecision(d.tier, dict(d.probs), "hybrid",
+                                         d.overhead_s))
+        return out
 
     def route(self, text: str) -> RouteDecision:
         return self.route_many([text])[0]

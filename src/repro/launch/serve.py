@@ -4,12 +4,14 @@ Spins a model pool (reduced variants on CPU; the same code drives TPU
 deployments with full configs), routes a synthetic request stream, and
 prints per-model serving stats + lifecycle events.
 
-Two serve planes:
-  * default      — serial Gateway: one blocking request at a time
-                   (baseline; each request served to completion).
-  * --concurrent — AsyncGateway serve plane: open-loop Poisson arrivals
-                   (--rate rps) into bounded per-service queues, many
-                   requests in flight across replica pools of real
+Both planes speak serving API v2 (``repro.api``): typed
+``CompletionRequest`` in, ``CompletionResponse`` out, shed requests as
+structured results.
+  * default      — serial ``Gateway`` facade: one blocking request at a
+                   time (baseline; each request served to completion).
+  * --concurrent — ``ServeFrontend``: open-loop Poisson arrivals
+                   (--rate rps) into priority-ordered bounded queues,
+                   many requests in flight across replica pools of real
                    engines, with the Algorithm-1 Spin loop ticking live
                    (scale-up under load, scale-to-zero when idle).
 
@@ -29,8 +31,9 @@ import time
 
 import numpy as np
 
+from repro.api import CompletionRequest
 from repro.configs.registry import ARCHS
-from repro.core.gateway import AsyncGateway, Gateway, serve_open_loop
+from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
@@ -96,25 +99,26 @@ def run_serial(pool, args) -> None:
 def run_concurrent(pool, args) -> None:
     spin = SpinConfig(window_s=60.0, cooldown_s=0.5, idle_tau_s=2.0,
                       tick_s=0.2, max_replicas=4)
-    gw = AsyncGateway(pool, router=build_router(args.router),
-                      profile=PROFILES[args.profile], max_seq=96, spin=spin,
-                      sched=SchedulerConfig(
-                          max_queue_depth=args.max_queue_depth))
+    gw = ServeFrontend(pool, router=build_router(args.router),
+                       profile=PROFILES[args.profile], max_seq=96, spin=spin,
+                       sched=SchedulerConfig(
+                           max_queue_depth=args.max_queue_depth))
     prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
     rng = np.random.RandomState(3)
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=len(prompts)))
-    jobs = [(p.text, dict(max_new_tokens=args.max_new_tokens,
-                          deadline_s=args.deadline_s)) for p in prompts]
+    reqs = [CompletionRequest(prompt=p.text,
+                              max_new_tokens=args.max_new_tokens,
+                              deadline_s=args.deadline_s) for p in prompts]
 
-    uids, wall = serve_open_loop(gw, jobs, arrivals)
+    handles, wall = gw.serve_open_loop(reqs, arrivals)
     gw.settle(timeout_s=spin.idle_tau_s + 1.0)
-    results = [gw.poll(u) for u in uids if u is not None]
-    results = [r for r in results if r is not None]
+    results = [h.response for h in handles if not h.shed]
 
     _print_results(results, wall, args, f"concurrent @ {args.rate:.1f} rps")
-    if gw.shed_uids:
+    shed = sum(h.shed for h in handles)
+    if shed:
         print(f"shed at admission (queue depth {args.max_queue_depth}): "
-              f"{len(gw.shed_uids)}")
+              f"{shed}")
     print("\nlifecycle events (pool, measured on live engines):")
     for e in gw.pool.events:
         print(f"  {e}")
@@ -133,7 +137,7 @@ def main() -> None:
                     choices=("keyword", "distilbert", "hybrid"))
     ap.add_argument("--deadline-s", type=float, default=120.0)
     ap.add_argument("--concurrent", action="store_true",
-                    help="use the AsyncGateway serve plane (replica pools, "
+                    help="use the ServeFrontend serve plane (replica pools, "
                          "bounded queues, live Spin control loop)")
     ap.add_argument("--rate", type=float, default=6.0,
                     help="open-loop Poisson arrival rate, rps (--concurrent)")

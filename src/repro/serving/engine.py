@@ -25,7 +25,7 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,7 @@ class Request:
     sampling: SamplingParams
     deadline_s: Optional[float] = None
     arrival_t: float = 0.0
+    priority: int = 1                             # api.Priority class (int)
     src_embeds: Optional[np.ndarray] = None       # encdec stub input
 
 
@@ -61,6 +62,9 @@ class GenResult:
     latency: float = 0.0
     completed: bool = False                       # finished within limits
     timed_out: bool = False
+    cancelled: bool = False                       # caller aborted it
+    shed: bool = False                            # evicted at admission
+    cached_tokens: int = 0                        # prompt tokens from prefix cache
 
 
 @dataclass
@@ -169,6 +173,10 @@ class InferenceEngine:
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
         self.cache = self._init_cache()
         self._finished: List[GenResult] = []
+        # (uid, token) streaming deltas of the CURRENT step — cleared at
+        # the top of each step(), so a caller draining between steps sees
+        # exactly one decode iteration's worth of tokens
+        self._deltas: List[Tuple[int, int]] = []
         self.fns = fns or self._compile()
         self._bind_fns()
 
@@ -192,13 +200,46 @@ class InferenceEngine:
         return self._decode(self.params, jnp.asarray(tokens), self.cache,
                             jnp.asarray(pos))
 
-    def _release(self, slot: "_Slot") -> None:
+    def _release(self, slot: "_Slot", register_prefix: bool = True) -> None:
         """Reap hook: free per-request cache resources (no-op dense)."""
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.arrival_t = req.arrival_t or time.perf_counter()
         self._queue.append(req)
+
+    def cancel(self, uid: int, now: float = None) -> Optional[GenResult]:
+        """Abort a request wherever it is. Queued: removed before ever
+        touching a slot. In a slot: the slot is freed immediately and —
+        on the paged engine — its KV blocks go back to the pool without
+        registering in the prefix cache (the caller abandoned the work).
+        Returns the partial ``GenResult`` (``cancelled=True``), or None
+        if ``uid`` is unknown/already finished here."""
+        now = time.perf_counter() if now is None else now
+        for i, r in enumerate(self._queue):
+            if r.uid == uid:
+                self._queue.pop(i)
+                res = GenResult(uid=uid, prompt_len=len(r.tokens),
+                                cancelled=True)
+                res.latency = now - r.arrival_t
+                return res
+        for slot in self._slots:
+            if not slot.done and slot.req is not None and slot.req.uid == uid:
+                res = slot.res
+                res.latency = now - slot.req.arrival_t
+                res.cancelled = True
+                res.completed = False
+                self._release(slot, register_prefix=False)
+                slot.done = True
+                slot.req = None
+                slot.res = None
+                return res
+        return None
+
+    def drain_deltas(self) -> List[Tuple[int, int]]:
+        """Fetch-and-clear the current step's (uid, token) stream deltas."""
+        out, self._deltas = self._deltas, []
+        return out
 
     def has_work(self) -> bool:
         return bool(self._queue) or any(not s.done for s in self._slots)
@@ -216,6 +257,7 @@ class InferenceEngine:
     def step(self) -> List[GenResult]:
         """Admit waiting requests, run one batched decode, reap finished."""
         now = time.perf_counter()
+        self._deltas = []                 # this step's streaming increments
         # 1) admit (a paged engine may refuse — out of KV blocks — in
         #    which case the request stays queued for a later step)
         for slot_id, slot in enumerate(self._slots):
@@ -254,6 +296,7 @@ class InferenceEngine:
             for i in active:
                 s = self._slots[i]
                 s.res.new_tokens.append(int(nxt[i]))
+                self._deltas.append((s.req.uid, int(nxt[i])))
                 s.pos += 1
                 sp = s.req.sampling
                 hit_eos = sp.eos_id is not None and int(nxt[i]) == sp.eos_id
@@ -315,6 +358,7 @@ class InferenceEngine:
         self.key, sk = jax.random.split(self.key)
         first = int(np.asarray(sample(logits, req.sampling, sk))[0])
         res.new_tokens.append(first)
+        self._deltas.append((req.uid, first))
         # the first token is subject to the same termination rules as
         # decoded ones: max_new_tokens=1 must return exactly one token,
         # and an EOS straight out of prefill must stop generation
@@ -526,7 +570,7 @@ class PagedInferenceEngine(InferenceEngine):
         # first token is determined here (same dispatch-time TTFT
         # convention as the dense engine); the scatter below is cache
         # bookkeeping for future steps and blocks on the donated buffer
-        res = GenResult(uid=req.uid, prompt_len=plen)
+        res = GenResult(uid=req.uid, prompt_len=plen, cached_tokens=keep)
         res.ttft = time.perf_counter() - req.arrival_t
         self.cache = self._scatter(self.cache, new_kv, jnp.asarray(table),
                                    start, live)
@@ -538,6 +582,7 @@ class PagedInferenceEngine(InferenceEngine):
         self.key, sk = jax.random.split(self.key)
         first = int(np.asarray(sample(logits, req.sampling, sk))[0])
         res.new_tokens.append(first)
+        self._deltas.append((req.uid, first))
         sp = req.sampling
         t = time.perf_counter()
         hit_eos = sp.eos_id is not None and first == sp.eos_id
@@ -563,10 +608,10 @@ class PagedInferenceEngine(InferenceEngine):
         return True
 
     # -- reap -----------------------------------------------------------
-    def _release(self, slot: _PagedSlot) -> None:
+    def _release(self, slot: _PagedSlot, register_prefix: bool = True) -> None:
         if slot.table is None:
             return
-        if self.prefix is not None and slot.res is not None:
+        if register_prefix and self.prefix is not None and slot.res is not None:
             # everything written (prompt + generated-but-last) is valid
             # KV; register its full blocks for future prefix hits
             seq = (slot.prompt + slot.res.new_tokens)[: slot.pos]

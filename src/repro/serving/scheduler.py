@@ -4,11 +4,20 @@ Sits between the Pick layer (router + Algorithm-2 policy, which choose a
 (model, backend) service per request) and the ``ReplicaPool`` of real
 engines. Responsibilities:
 
-  * per-service FIFO admission queues with a bounded depth — beyond it
-    requests are SHED at submit time (backpressure instead of unbounded
-    latency collapse);
+  * per-service admission queues with a bounded depth — beyond it
+    requests are SHED at admission (backpressure instead of unbounded
+    latency collapse). Queues are PRIORITY-ordered: dispatch serves the
+    highest priority class first (FIFO within a class), and under
+    pressure a full queue sheds strictly low-before-high — an arriving
+    high-priority request evicts the newest queued request of the lowest
+    class rather than being rejected. Every shed is a structured result
+    (``GenResult.shed``) delivered through the serve loop, never a
+    silent drop;
   * deadline-aware dispatch: queued requests already past their deadline
     are dropped before ever touching an engine slot;
+  * cancellation: ``cancel()`` aborts a request wherever it lives —
+    still queued (removed before touching a slot) or mid-decode (the
+    engine frees its slot and KV blocks the same call);
   * scale-from-zero on demand: work queued on a service with no live
     replicas spins one up (the Orchestrator adds capacity beyond that);
   * the serve loop: ``step()`` admits queued work into free slots (least
@@ -53,9 +62,11 @@ class SchedulerConfig:
 @dataclass
 class SchedStats:
     submitted: int = 0
-    shed: int = 0                 # rejected at admission (queue full)
+    shed: int = 0                 # rejected/evicted at admission
     shed_blocks: int = 0          # ...of which under KV block pressure
+    preempted: int = 0            # ...of which queued low-priority evictions
     expired: int = 0              # dropped from queue past deadline
+    cancelled: int = 0            # aborted by the caller
     dispatched: int = 0
     completed: int = 0
     steps: int = 0
@@ -70,13 +81,20 @@ class RequestScheduler:
         self.cfg = cfg or SchedulerConfig()
         self._queues: Dict[_Key, Deque[Request]] = {
             key: deque() for key in pool._replicas}
-        self._expired: List[Tuple[_Key, GenResult]] = []
+        # requests resolved OFF the engines (deadline-expired, priority-
+        # evicted): surfaced as structured results on the next step
+        self._reaped: List[Tuple[_Key, GenResult]] = []
+        # (uid, token) streaming increments of the latest step
+        self._deltas: List[Tuple[int, int]] = []
         self.stats = SchedStats()
 
     # -- admission ----------------------------------------------------------
     def enqueue(self, model: str, backend: str, req: Request,
                 now: float = None) -> bool:
-        """Admit a routed request. Returns False if shed (queue full)."""
+        """Admit a routed request. Returns False if shed (queue full and
+        nothing of lower priority to evict). When the queue is full but
+        holds a LOWER-priority request, that one is evicted instead
+        (shed low before high) and surfaced as a ``shed`` result."""
         key = (model, backend)
         q = self._queues[key]
         self.stats.submitted += 1
@@ -86,15 +104,37 @@ class RequestScheduler:
             self.stats.dispatched += 1
             return True
         if len(q) >= self._depth_limit(model, backend):
+            victim = self._shed_victim(q, req)
+            if victim is None:
+                self.stats.shed += 1
+                # block-pressure shed = the TIGHTENED bound did it (an
+                # ordinary queue-full shed at max depth is not the pool's)
+                if len(q) < self.cfg.max_queue_depth:
+                    self.stats.shed_blocks += 1
+                return False
+            now = time.perf_counter() if now is None else now
+            q.remove(victim)
+            res = GenResult(uid=victim.uid, prompt_len=len(victim.tokens),
+                            shed=True)
+            res.latency = now - victim.arrival_t
+            self._reaped.append((key, res))
             self.stats.shed += 1
-            # block-pressure shed = the TIGHTENED bound did it (an
-            # ordinary queue-full shed at max depth is not the pool's)
-            if len(q) < self.cfg.max_queue_depth:
-                self.stats.shed_blocks += 1
-            return False
+            self.stats.preempted += 1
+            q.append(req)                 # entry.queued is net unchanged
+            return True
         q.append(req)
         self.reg.entry(model, backend).queued += 1
         return True
+
+    @staticmethod
+    def _shed_victim(q: Deque[Request], req: Request) -> Optional[Request]:
+        """Newest queued request of the lowest priority class — evicted
+        only when strictly below the arrival's class (FIFO fairness
+        within a class: equal priority never preempts)."""
+        lowest = min(r.priority for r in q)
+        if lowest >= req.priority:
+            return None
+        return next(r for r in reversed(q) if r.priority == lowest)
 
     def _depth_limit(self, model: str, backend: str) -> int:
         """Block-watermark shed policy: when a paged service's pool is
@@ -114,8 +154,36 @@ class RequestScheduler:
         return sum(len(q) for q in self._queues.values())
 
     def has_work(self) -> bool:
-        return (any(self._queues.values()) or bool(self._expired)
+        return (any(self._queues.values()) or bool(self._reaped)
                 or any(eng.has_work() for _, eng in self.pool.engines()))
+
+    # -- cancellation ---------------------------------------------------
+    def cancel(self, model: str, backend: str, uid: int,
+               now: float = None) -> Optional[GenResult]:
+        """Abort ``uid`` on the given service: removed from the admission
+        queue, or cancelled mid-flight on whichever replica holds it
+        (slot + KV blocks freed immediately). Returns the partial
+        ``GenResult`` (``cancelled=True``), or None if unknown/finished."""
+        now = time.perf_counter() if now is None else now
+        key = (model, backend)
+        q = self._queues[key]
+        entry = self.reg.entry(*key)
+        for r in q:
+            if r.uid == uid:
+                q.remove(r)
+                entry.queued = max(0, entry.queued - 1)
+                res = GenResult(uid=uid, prompt_len=len(r.tokens),
+                                cancelled=True)
+                res.latency = now - r.arrival_t
+                self.stats.cancelled += 1
+                return res
+        for eng in self.pool.replicas(*key):
+            res = eng.cancel(uid, now)
+            if res is not None:
+                entry.active_requests = max(0, entry.active_requests - 1)
+                self.stats.cancelled += 1
+                return res
+        return None
 
     # -- serve loop -----------------------------------------------------
     def dispatch(self, now: float) -> int:
@@ -139,18 +207,22 @@ class RequestScheduler:
                 continue
             if self.cfg.spin_on_demand and not self.pool.replicas(*key):
                 self.pool.scale(model, backend, 1, now)
-            # cache-aware admission order: requests with the biggest
-            # cached-prefix reuse go first — they skip most of their
-            # prefill, holding their slot for the least time (stable
-            # sort keeps FIFO fairness between equal hits). Only worth
-            # the radix walks when something can actually dispatch.
-            if self.cfg.prefix_aware and len(q) > 1 \
-                    and self.pool.free_slots(model, backend) > 0 \
-                    and self.pool.paged_replicas(*key):
-                ordered = sorted(q, key=lambda r: -self.pool.prefix_peek(
-                    model, backend, r))
-                q.clear()
-                q.extend(ordered)
+            # dispatch order: priority class first (high before low),
+            # then cache-aware within a class — the biggest cached-prefix
+            # reuse goes first (it skips most of its prefill, holding its
+            # slot for the least time). Stable sort keeps FIFO fairness
+            # between equal keys; only worth the radix walks when
+            # something can actually dispatch.
+            if len(q) > 1 and self.pool.free_slots(model, backend) > 0:
+                prefix = (self.cfg.prefix_aware
+                          and bool(self.pool.paged_replicas(*key)))
+                if prefix or any(r.priority != q[0].priority for r in q):
+                    ordered = sorted(q, key=lambda r: (
+                        -r.priority,
+                        -self.pool.prefix_peek(model, backend, r)
+                        if prefix else 0))
+                    q.clear()
+                    q.extend(ordered)
             while q and self.pool.free_slots(model, backend) > 0:
                 req = q.popleft()
                 entry.queued = max(0, entry.queued - 1)
@@ -165,7 +237,7 @@ class RequestScheduler:
         res = GenResult(uid=req.uid, prompt_len=len(req.tokens),
                         timed_out=True)
         res.latency = now - req.arrival_t
-        self._expired.append((key, res))
+        self._reaped.append((key, res))
         self.stats.expired += 1
         return True
 
@@ -176,7 +248,8 @@ class RequestScheduler:
         self.stats.steps += 1
         self.dispatch(now)
         out: List[Tuple[_Key, GenResult]]
-        out, self._expired = self._expired, []
+        out, self._reaped = self._reaped, []
+        self._deltas = []
         for key, eng in self.pool.engines():
             if not eng.has_work():
                 continue
@@ -187,6 +260,7 @@ class RequestScheduler:
                                         res.latency)
                 self.stats.completed += 1
                 out.append((key, res))
+            self._deltas.extend(eng.drain_deltas())
         # paged-plane gauges: pool pressure / occupancy / prefix hit-rate
         # land in the same telemetry the Orchestrator ticks on, so Spin
         # can treat a block-starved service as a loaded one
@@ -195,6 +269,12 @@ class RequestScheduler:
             if stats:
                 for name, value in stats.items():
                     self.tel.record_gauge(model, name, now, value)
+        return out
+
+    def drain_deltas(self) -> List[Tuple[int, int]]:
+        """Fetch the latest step's (uid, token) streaming increments, in
+        generation order per request."""
+        out, self._deltas = self._deltas, []
         return out
 
     # -- internals -------------------------------------------------------

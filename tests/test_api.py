@@ -1,0 +1,294 @@
+"""Serving API v2: typed protocol, streaming handles, cancellation,
+sessions, priorities — the gateway facade and the concurrent frontend
+speaking one language over REAL engines (reduced smollm on CPU).
+"""
+import dataclasses
+
+import pytest
+
+from conftest import reduced_f32
+from repro.api import CompletionRequest, FinishReason, Priority
+from repro.core.gateway import Gateway, GatewayConfig, ServeFrontend
+from repro.core.orchestrator import SpinConfig
+from repro.core.router import HybridRouter, KeywordRouter
+from repro.core.scoring import PROFILES
+
+SMOL = "smollm-360m"
+KEY = (SMOL, "trt")
+
+
+@pytest.fixture(scope="module")
+def fe():
+    # paged engines so cancellation/session tests can watch the block
+    # pool; huge tick so the Spin loop can't retire replicas mid-assert
+    spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=3600.0,
+                      tick_s=3600.0, max_replicas=1,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    return ServeFrontend({SMOL: reduced_f32(SMOL)},
+                         profile=PROFILES["balanced"], max_seq=96, spin=spin,
+                         paged=True)
+
+
+def _engine(fe):
+    return fe.pool.replicas(*KEY)[0]
+
+
+# ---------------------------------------------------------------------------
+# streaming
+
+
+def test_stream_yields_exactly_the_final_tokens(fe):
+    h = fe.submit("add the numbers now please", max_new_tokens=12)
+    events = list(h.tokens())
+    assert events[-1].kind == "done"
+    assert events[-1].finish_reason == FinishReason.LENGTH
+    streamed = [ev.token for ev in events if ev.kind == "token"]
+    assert streamed == h.response.new_tokens
+    assert len(streamed) == 12
+    assert [ev.index for ev in events] == list(range(len(events)))
+
+
+def test_stream_is_incremental_per_decode_iteration(fe):
+    h = fe.submit("count the items quickly", max_new_tokens=8)
+    it = h.tokens()
+    first = next(it)
+    assert first.kind == "token"
+    assert not h.done()                  # mid-generation, not buffered-at-end
+    rest = list(it)
+    assert h.done()
+    assert [first.token] + [e.token for e in rest
+                            if e.kind == "token"] == h.response.new_tokens
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+
+
+def test_cancel_in_flight_frees_slot_and_kv_blocks(fe):
+    fe.serve_all()
+    eng = _engine(fe)
+    eng.prefix.clear()                   # drop cache leases -> true baseline
+    base_free = eng.pool.num_free
+    assert base_free == eng.num_blocks and eng.idle_slots() == eng.max_batch
+    h = fe.submit("list everything at great length", max_new_tokens=64)
+    fe.step()
+    fe.step()                            # prefilled + decoding in a slot
+    assert eng.idle_slots() == eng.max_batch - 1
+    assert eng.pool.num_free < base_free
+    assert h.cancel()
+    assert h.response.finish_reason == FinishReason.CANCELLED
+    assert not h.response.completed and len(h.response.new_tokens) >= 1
+    # slot free the same call; blocks back once the admit-time prefix
+    # registration (evictable, refcounted) is dropped
+    assert eng.idle_slots() == eng.max_batch
+    assert eng.kv_free_frac() == 1.0
+    eng.prefix.clear()
+    assert eng.pool.num_free == base_free
+    assert not fe.has_work()
+    assert not h.cancel()                # second cancel is a no-op
+
+
+def test_cancel_queued_request_never_touches_a_slot(fe):
+    fe.serve_all()
+    eng = _engine(fe)
+    blockers = [fe.submit(f"sum the items {i}", max_new_tokens=24)
+                for i in range(eng.max_batch)]
+    victim = fe.submit("count this later", max_new_tokens=4)
+    assert victim.uid in {r.uid for r in fe.scheduler._queues[KEY]}
+    dispatched0 = fe.scheduler.stats.dispatched
+    assert victim.cancel()
+    assert victim.response.finish_reason == FinishReason.CANCELLED
+    assert victim.response.new_tokens == []          # never decoded a token
+    assert fe.scheduler.stats.cancelled >= 1
+    assert fe.registry.entry(*KEY).queued == 0
+    fe.serve_all()
+    # only the blockers were ever dispatched; the victim never got a slot
+    assert fe.scheduler.stats.dispatched == dispatched0
+    assert all(b.response.completed for b in blockers)
+
+
+# ---------------------------------------------------------------------------
+# priorities
+
+
+def test_priority_dispatch_order_high_first(fe):
+    fe.serve_all()
+    eng = _engine(fe)
+    blockers = [fe.submit(f"sum the items {i}", max_new_tokens=30)
+                for i in range(eng.max_batch)]
+    fe.step()                            # all slots busy
+    low = fe.submit("low priority batch work", max_new_tokens=8,
+                    priority=Priority.BATCH)
+    hi = fe.submit("interactive arrives later", max_new_tokens=8,
+                   priority=Priority.INTERACTIVE)
+    assert blockers[0].cancel()          # free exactly one slot
+    fe.step()                            # dispatch: priority beats FIFO
+    live = {s.req.uid for s in eng._slots if not s.done and s.req} \
+        | {r.uid for r in eng._queue}
+    assert hi.uid in live
+    assert low.uid in {r.uid for r in fe.scheduler._queues[KEY]}
+    fe.serve_all()
+    assert hi.response.completed and low.response.completed
+
+
+def test_priority_shed_low_before_high_under_pressure(fe):
+    fe.serve_all()
+    eng = _engine(fe)
+    depth0 = fe.scheduler.cfg.max_queue_depth
+    fe.scheduler.cfg.max_queue_depth = 1
+    try:
+        blockers = [fe.submit(f"sum the items {i}", max_new_tokens=24)
+                    for i in range(eng.max_batch)]
+        low = fe.submit("queued batch work", max_new_tokens=2,
+                        priority=Priority.BATCH)
+        assert not low.done()            # admitted into the queue
+        # equal class cannot preempt: NORMAL is rejected, low keeps its spot
+        normal = fe.submit("queued normal work", max_new_tokens=2,
+                           priority=Priority.BATCH)
+        assert normal.shed
+        # higher class evicts the queued low-priority request instead of
+        # being rejected — shed low before high, as a structured result
+        hi = fe.submit("urgent interactive", max_new_tokens=2,
+                       priority=Priority.INTERACTIVE)
+        assert not hi.done()
+        preempted0 = fe.scheduler.stats.preempted
+        assert preempted0 >= 1
+        fe.serve_all()
+        assert low.response.finish_reason == FinishReason.SHED
+        assert not low.response.ok
+        assert hi.response.completed
+        assert all(b.response.completed for b in blockers)
+    finally:
+        fe.scheduler.cfg.max_queue_depth = depth0
+
+
+# ---------------------------------------------------------------------------
+# sessions
+
+
+def test_session_turn2_hits_prefix_cache(fe):
+    fe.serve_all()
+    r1 = fe.submit(CompletionRequest(
+        prompt="you are a terse assistant; count apples pears and plums",
+        max_new_tokens=4, session_id="conv-a")).result()
+    assert r1.completed and r1.session_id == "conv-a"
+    r2 = fe.submit(CompletionRequest(
+        prompt=" now add two more fruits", max_new_tokens=4,
+        session_id="conv-a")).result()
+    # the service is pinned and the turn-1 history (prompt + completion)
+    # is served out of cached KV blocks, not re-prefilled
+    assert (r2.model, r2.backend) == (r1.model, r1.backend)
+    assert r2.usage.prompt_tokens > len(" now add two more fruits")
+    assert r2.usage.cached_tokens >= _engine(fe).block_size
+    sess = fe._sessions["conv-a"]
+    assert sess.turns == 2
+
+
+def test_overlapping_session_turn_cannot_clobber_history(fe):
+    fe.serve_all()
+    t1 = fe.submit(CompletionRequest(prompt="count the apples here now",
+                                     max_new_tokens=4, session_id="conv-b"))
+    # turn 2 submitted BEFORE turn 1 resolves: it is served, but it was
+    # not built on turn 1's history, so it must not extend the chain
+    t2 = fe.submit(CompletionRequest(prompt=" and the pears",
+                                     max_new_tokens=4, session_id="conv-b"))
+    fe.serve_all()
+    assert t1.response.completed and t2.response.completed
+    sess = fe._sessions["conv-b"]
+    assert sess.turns == 1               # only one turn won the chain
+    assert sess.tokens[-4:] in (t1.response.new_tokens,
+                                t2.response.new_tokens)
+    assert fe.end_session("conv-b") and not fe.end_session("conv-b")
+
+
+def test_sessions_are_lru_bounded(fe):
+    fe.serve_all()
+    keep0 = fe.config.session_retention
+    fe.config.session_retention = 3
+    try:
+        handles = [fe.submit(CompletionRequest(
+            prompt=f"sum the numbers {i}", max_new_tokens=2,
+            session_id=f"one-shot-{i}")) for i in range(6)]
+        fe.serve_all()
+        assert all(h.response.completed for h in handles)
+        assert len(fe._sessions) <= 3
+        assert "one-shot-5" in fe._sessions      # newest survive
+    finally:
+        fe.config.session_retention = keep0
+
+
+# ---------------------------------------------------------------------------
+# facade equivalence + cold-start attribution
+
+
+def test_sync_facade_equals_concurrent_plane_under_greedy(fe):
+    fe.serve_all()
+    _engine(fe).prefix.clear()           # same cold-cache start both planes
+    prompt = "count the items here: ".ljust(32, "x")   # pow2: no truncation
+    r_conc = fe.submit(prompt, max_new_tokens=6).result()
+    gw = Gateway({SMOL: reduced_f32(SMOL)}, profile=PROFILES["balanced"],
+                 max_seq=96, paged=True)
+    r_sync = gw.handle(prompt, max_new_tokens=6)
+    assert isinstance(gw.frontend, ServeFrontend)
+    assert r_sync.new_tokens == r_conc.new_tokens      # greedy, same plane
+    assert (r_sync.model, r_sync.backend) == (r_conc.model, r_conc.backend)
+    # facade cold start is real and attributed; the live plane's is zero
+    assert r_sync.cold_start_s > 0.0
+    assert r_conc.cold_start_s == 0.0
+
+
+def test_one_construction_path_no_duplicated_setup(fe):
+    gw = Gateway({SMOL: reduced_f32(SMOL)}, max_seq=96)
+    # the facade owns NO plane state — registry/policy/pool/scheduler are
+    # the frontend's, reached through passthroughs
+    assert gw.registry is gw.frontend.registry
+    assert gw.policy is gw.frontend.policy
+    assert gw.pool is gw.frontend.pool
+    assert gw.scheduler is gw.frontend.scheduler
+    cfg = gw.frontend.config
+    assert isinstance(cfg, GatewayConfig) and cfg.autoscale is False
+
+
+# ---------------------------------------------------------------------------
+# bounded results + structured shed
+
+
+def test_result_retention_is_bounded_and_drained(fe):
+    fe.serve_all()
+    fe.drain()
+    keep0 = fe.config.result_retention
+    fe.config.result_retention = 4
+    try:
+        handles = [fe.submit(f"sum the numbers {i}", max_new_tokens=2)
+                   for i in range(7)]
+        fe.serve_all()                   # nobody polls; buffer must bound
+        assert len(fe._recent) <= 4
+        drained = fe.drain()
+        assert len(drained) <= 4 and fe._recent == {}
+        # per-request handles still hold every result (no loss for
+        # callers that kept theirs)
+        assert all(h.response is not None for h in handles)
+    finally:
+        fe.config.result_retention = keep0
+
+
+# ---------------------------------------------------------------------------
+# router satellite: frozen decisions, no in-place rewrites
+
+
+def test_route_decision_is_frozen():
+    d = KeywordRouter().route("prove the theorem rigorously")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        d.mode = "hybrid"
+
+
+def test_hybrid_route_many_returns_fresh_decisions():
+    hr = HybridRouter(semantic=None)     # clear-cut prompts never fall through
+    texts = ["prove the theorem step by step rigorously",
+             "briefly sum the list"]
+    kw = hr.kw.route_many(texts)
+    out = hr.route_many(texts)
+    assert [d.tier for d in out] == [d.tier for d in kw]
+    assert all(d.mode == "hybrid" for d in out)
+    assert all(k.mode == "keyword" for k in kw)        # sources untouched
+    assert all(o is not k for o, k in zip(out, kw))

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from conftest import reduced_f32
-from repro.core.gateway import AsyncGateway
+from repro.core.gateway import ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.scoring import PROFILES
 from repro.models import init_model
@@ -245,15 +245,15 @@ def agw():
                       warm_pool={"small": 0, "medium": 0, "large": 0})
     # paged=True: force paged engines on the trt column so the
     # cache-aware serve-plane policies are exercised end to end
-    return AsyncGateway({SMOL: reduced_f32(SMOL)},
-                        profile=PROFILES["balanced"], max_seq=96, spin=spin,
-                        paged=True)
+    return ServeFrontend({SMOL: reduced_f32(SMOL)},
+                         profile=PROFILES["balanced"], max_seq=96, spin=spin,
+                         paged=True)
 
 
 def test_pool_spins_paged_engines_and_reports_gauges(agw):
-    u = agw.submit("sum the numbers please", max_new_tokens=4)
+    h = agw.submit("sum the numbers please", max_new_tokens=4)
     agw.serve_all()
-    assert agw.poll(u).completed
+    assert h.response.completed
     eng = agw.pool.replicas(*KEY)[0]
     assert eng.paged
     stats = agw.pool.kv_stats(SMOL)
@@ -315,9 +315,9 @@ def test_block_watermark_sheds_early(agw):
         assert depth == max(1, agw.scheduler.cfg.max_queue_depth //
                             agw.scheduler.cfg.watermark_depth_div)
         shed0 = agw.scheduler.stats.shed_blocks
-        uids = [agw.submit(f"add numbers {i}", max_new_tokens=2)
-                for i in range(depth + 6)]
-        assert sum(u is None for u in uids) >= 2    # early backpressure
+        handles = [agw.submit(f"add numbers {i}", max_new_tokens=2)
+                   for i in range(depth + 6)]
+        assert sum(h.shed for h in handles) >= 2    # early backpressure
         assert agw.scheduler.stats.shed_blocks > shed0
     finally:
         for b in hold:

@@ -1,15 +1,17 @@
 """Concurrent serve plane: scheduler, replica pool, live Spin control loop.
 
 All tests run against REAL engines (reduced smollm on CPU) through the
-full AsyncGateway path: Router -> Algorithm-2 policy -> bounded queues ->
-replica pool, with Algorithm-1 scaling applied to live engines.
+full serving-API-v2 path: Router -> Algorithm-2 policy -> priority
+bounded queues -> replica pool, with Algorithm-1 scaling applied to live
+engines. ``submit()`` returns a ``CompletionHandle``; shed requests
+resolve with a structured ``finish_reason == "shed"``.
 """
 import time
 
 import pytest
 
 from conftest import reduced_f32
-from repro.core.gateway import AsyncGateway
+from repro.core.gateway import ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.scoring import PROFILES
 
@@ -24,15 +26,15 @@ def agw():
     spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=0.5,
                       tick_s=3600.0, max_replicas=2,
                       warm_pool={"small": 0, "medium": 0, "large": 0})
-    return AsyncGateway({SMOL: reduced_f32(SMOL)},
-                        profile=PROFILES["balanced"], max_seq=96, spin=spin)
+    return ServeFrontend({SMOL: reduced_f32(SMOL)},
+                         profile=PROFILES["balanced"], max_seq=96, spin=spin)
 
 
 def test_concurrent_requests_interleave(agw):
     a = agw.submit("add the numbers now please", max_new_tokens=24)
     b = agw.submit("count the items quickly", max_new_tokens=4)
     agw.serve_all()
-    ra, rb = agw.poll(a), agw.poll(b)
+    ra, rb = a.response, b.response
     assert ra.completed and len(ra.new_tokens) == 24
     assert rb.completed and len(rb.new_tokens) == 4
     # B entered the batch while A was still decoding: its first token
@@ -48,16 +50,19 @@ def test_bounded_queue_sheds_when_saturated(agw):
     agw.scheduler.cfg.max_queue_depth = 2
     try:
         # 1 replica x 4 trt slots + depth 2 => 12 submissions can't all fit
-        uids = [agw.submit(f"sum the numbers {i}", max_new_tokens=4)
-                for i in range(12)]
-        shed = sum(u is None for u in uids)
+        handles = [agw.submit(f"sum the numbers {i}", max_new_tokens=4)
+                   for i in range(12)]
+        shed = sum(h.shed for h in handles)
         assert shed >= 1
+        # equal priority: nothing to evict, arrivals are rejected with a
+        # structured shed response at submit time
+        assert all(h.response.finish_reason == "shed"
+                   for h in handles if h.shed)
         assert agw.scheduler.stats.shed >= shed
         assert len(agw.scheduler._queues[KEY]) <= 2
         assert agw.registry.entry(*KEY).queued <= 2
         agw.serve_all()
-        done = [agw.poll(u) for u in uids if u is not None]
-        assert all(r is not None and r.completed for r in done)
+        assert all(h.response.completed for h in handles if not h.shed)
     finally:
         agw.scheduler.cfg.max_queue_depth = depth0
 
@@ -78,9 +83,24 @@ def test_scale_to_zero_then_warm_respin(agw):
     assert ev.kind == "spin-warm"
     # warm re-spin reuses cached params + compiled step functions
     assert ev.duration_s < min(cold_durs)
-    u = agw.submit("sum the list", max_new_tokens=2)
+    h = agw.submit("sum the list", max_new_tokens=2)
     agw.serve_all()
-    assert agw.poll(u).completed
+    assert h.response.completed
+
+
+def test_cold_start_attributed_to_waiting_request(agw):
+    agw.serve_all()
+    agw.pool.scale(*KEY, 0)                         # force a respin
+    h = agw.submit("sum the numbers", max_new_tokens=2)
+    agw.serve_all()
+    spin = agw.pool.cold_starts[-1]
+    assert spin[0].startswith(f"{SMOL}/trt/")
+    # the measured spin time this request waited on lands in its usage
+    assert h.response.usage.cold_start_s == pytest.approx(spin[1])
+    # a follow-up served by the now-live replica pays nothing
+    h2 = agw.submit("sum the numbers again", max_new_tokens=2)
+    agw.serve_all()
+    assert h2.response.usage.cold_start_s == 0.0
 
 
 def test_orchestrator_adds_replica_under_load(agw):
@@ -99,10 +119,10 @@ def test_orchestrator_adds_replica_under_load(agw):
     assert len(agw.pool.replicas(*KEY)) == agw.spin.max_replicas > before
     # the added replicas are LIVE: a burst larger than one engine's slot
     # count is absorbed without queue residue
-    uids = [agw.submit(f"count items {i}", max_new_tokens=2)
-            for i in range(6)]
+    handles = [agw.submit(f"count items {i}", max_new_tokens=2)
+               for i in range(6)]
     agw.serve_all()
-    assert all(agw.poll(u).completed for u in uids)
+    assert all(h.response.completed for h in handles)
 
 
 def test_orchestrator_scales_to_zero_when_idle(agw):
@@ -118,9 +138,9 @@ def test_orchestrator_scales_to_zero_when_idle(agw):
     assert len(agw.pool.replicas(*KEY)) == 0
     assert agw.pool.has_params(SMOL)                # warm pool survives
     # next request re-spins from the warm caches and completes
-    u = agw.submit("sum the numbers", max_new_tokens=2)
+    h = agw.submit("sum the numbers", max_new_tokens=2)
     agw.serve_all()
-    assert agw.poll(u).completed
+    assert h.response.completed
     assert agw.pool.events[-1].kind == "spin-warm"
 
 
@@ -133,9 +153,10 @@ def test_expired_queued_requests_are_dropped(agw):
     blockers = [agw.submit(f"sum the items {i}", max_new_tokens=24)
                 for i in range(4)]
     doomed = agw.submit("count this", max_new_tokens=4, deadline_s=1e-6)
-    assert doomed is not None
+    assert not doomed.done()                        # admitted, queued
     agw.serve_all()
-    r = agw.poll(doomed)
+    r = doomed.response
     assert r is not None and not r.completed
+    assert r.finish_reason == "timeout"
     assert agw.scheduler.stats.expired >= 1
-    assert all(agw.poll(u).completed for u in blockers)
+    assert all(h.response.completed for h in blockers)
