@@ -57,12 +57,16 @@ class CompletionRequest:
 @dataclass
 class Usage:
     """Per-request accounting, including the real measured cold-start
-    time this request waited on (a replica spun up for it) and the prompt
-    tokens served from the radix prefix cache instead of prefill."""
+    time this request waited on (a replica spun up for it), the prompt
+    tokens served from the radix prefix cache instead of prefill, and
+    how many chunked-prefill passes the prompt took (1 = it fit one
+    chunk; more = it amortized across engine steps under the token
+    budget)."""
     prompt_tokens: int = 0
     cached_tokens: int = 0
     completion_tokens: int = 0
     cold_start_s: float = 0.0
+    prefill_chunks: int = 0
 
 
 @dataclass(frozen=True)

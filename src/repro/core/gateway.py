@@ -67,6 +67,14 @@ class GatewayConfig:
     spin: Optional[SpinConfig] = None
     sched: Optional[SchedulerConfig] = None
     paged: object = "auto"
+    # continuous batching: each engine step spends `step_token_budget`
+    # tokens — one per in-flight decode first, the rest on prefill
+    # chunks of at most `chunk_tokens` — so a long prompt amortizes
+    # across steps instead of stalling every in-flight decode.
+    # chunk_tokens=None restores whole-prompt prefill (the bench
+    # baseline); budget=None leaves the step unbounded.
+    chunk_tokens: Optional[int] = 64
+    step_token_budget: Optional[int] = 256
     autoscale: bool = True                     # run Algorithm 1 inline
     result_retention: int = 256                # bounded finished-result buffer
     session_retention: int = 1024              # LRU bound on live sessions
@@ -151,7 +159,9 @@ class ServeFrontend:
         self.max_seq = cfg.max_seq
         self.spin = cfg.spin or SpinConfig()
         self.pool = ReplicaPool(cfg.models, self.registry, max_seq=cfg.max_seq,
-                                seed=cfg.seed, paged=cfg.paged)
+                                seed=cfg.seed, paged=cfg.paged,
+                                chunk_tokens=cfg.chunk_tokens,
+                                step_token_budget=cfg.step_token_budget)
         self.scheduler = RequestScheduler(self.pool, self.registry,
                                           self.telemetry, cfg.sched)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
@@ -374,7 +384,8 @@ class ServeFrontend:
         usage = Usage(prompt_tokens=res.prompt_len,
                       cached_tokens=res.cached_tokens,
                       completion_tokens=len(res.new_tokens),
-                      cold_start_s=cold)
+                      cold_start_s=cold,
+                      prefill_chunks=res.prefill_chunks)
         return CompletionResponse(
             uid=res.uid, prompt=info.request.prompt, model=info.model,
             backend=info.backend, tier=info.tier,
@@ -417,11 +428,14 @@ class Gateway:
                  backends: Tuple[str, ...] = ("trt",),
                  max_seq: int = 256, seed: int = 0,
                  cost_configs: Dict[str, ModelConfig] = None,
-                 sched: Optional[SchedulerConfig] = None, paged="auto"):
+                 sched: Optional[SchedulerConfig] = None, paged="auto",
+                 chunk_tokens: Optional[int] = 64,
+                 step_token_budget: Optional[int] = 256):
         self.frontend = ServeFrontend(GatewayConfig(
             models=models, router=router, policy_cls=policy_cls,
             profile=profile, backends=backends, max_seq=max_seq, seed=seed,
             cost_configs=cost_configs, sched=sched, paged=paged,
+            chunk_tokens=chunk_tokens, step_token_budget=step_token_budget,
             autoscale=False))
 
     # shared-plane passthroughs (no duplicated state)

@@ -50,6 +50,20 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, valid_len, *,
                                          valid_len, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefill_attention(q, k_pool, v_pool, k_new, v_new, block_table,
+                            start, s_real, *,
+                            interpret: Optional[bool] = None):
+    """Chunked prefill-append: a query chunk of one sequence attends its
+    cached blocks (positions < start) plus its own fresh KV, causal
+    within the chunk — the kernel contract behind token-budget
+    continuous batching (see serving/engine.py)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged.paged_prefill_attention(q, k_pool, v_pool, k_new, v_new,
+                                          block_table, start, s_real,
+                                          interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128,
              interpret: Optional[bool] = None):

@@ -71,6 +71,43 @@ def ref_paged_decode_attention(q, k_pool, v_pool, block_tables, valid_len,
                                 ring=False, scale=scale)
 
 
+def ref_paged_prefill_attention(q, k_pool, v_pool, k_new, v_new,
+                                block_table, start, s_real,
+                                *, scale: Optional[float] = None):
+    """Chunked prefill-append oracle: one sequence's query chunk attends
+    the KV it already cached (gathered through the block table, positions
+    ``< start``) PLUS the chunk's own fresh KV (causal within the chunk,
+    limited to ``s_real`` live tokens — the rest is bucket padding).
+
+    q: (Sb, Hq, D) chunk queries at global offset ``start``;
+    pools: (NB, BS, Hkv, D); k_new/v_new: (Sb, Hkv, D); block_table:
+    (NBctx,) int32. Returns (Sb, Hq, Dv)."""
+    Sb, Hq, D = q.shape
+    NB, BS, Hkv, _ = k_pool.shape
+    G = Hq // Hkv
+    Dv = v_pool.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    ctx_k = jnp.take(k_pool, block_table, axis=0).reshape(-1, Hkv, D)
+    ctx_v = jnp.take(v_pool, block_table, axis=0).reshape(-1, Hkv, Dv)
+    CtxT = ctx_k.shape[0]
+    k = jnp.concatenate([ctx_k, k_new], axis=0)         # (CtxT+Sb, Hkv, D)
+    v = jnp.concatenate([ctx_v, v_new], axis=0)
+    k = jnp.repeat(k, G, axis=1)                        # (K, Hq, D)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale       # (Hq, Sb, K)
+    qi = jnp.arange(Sb)[:, None]
+    live_ctx = jnp.broadcast_to((jnp.arange(CtxT) < start)[None, :],
+                                (Sb, CtxT))
+    kj = jnp.arange(Sb)[None, :]
+    live_new = (kj <= qi) & (kj < s_real)
+    mask = jnp.concatenate([live_ctx, live_new], axis=1)      # (Sb, K)
+    s = jnp.where(mask[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def ref_ssd(x, dt, A, Bm, Cm):
     """Naive O(L) recurrence. x: (B,L,H,P); dt: (B,L,H); A: (H,);
     Bm/Cm: (B,L,H,N). Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""

@@ -101,6 +101,8 @@ def run_concurrent(pool, args) -> None:
                       tick_s=0.2, max_replicas=4)
     gw = ServeFrontend(pool, router=build_router(args.router),
                        profile=PROFILES[args.profile], max_seq=96, spin=spin,
+                       chunk_tokens=args.chunk_tokens or None,
+                       step_token_budget=args.step_token_budget or None,
                        sched=SchedulerConfig(
                            max_queue_depth=args.max_queue_depth))
     prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
@@ -143,6 +145,12 @@ def main() -> None:
                     help="open-loop Poisson arrival rate, rps (--concurrent)")
     ap.add_argument("--max-queue-depth", type=int, default=64,
                     help="per-service admission bound (--concurrent)")
+    ap.add_argument("--chunk-tokens", type=int, default=64,
+                    help="prefill chunk bound per engine step; 0 = "
+                         "whole-prompt prefill (--concurrent)")
+    ap.add_argument("--step-token-budget", type=int, default=256,
+                    help="tokens one engine step may spend across decode "
+                         "+ prefill; 0 = unbounded (--concurrent)")
     args = ap.parse_args()
 
     pool = {}

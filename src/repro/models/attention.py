@@ -448,7 +448,52 @@ def gqa_paged_decode(params: Params, cfg: ModelConfig, x, cos, sin,
 
 
 # ---------------------------------------------------------------------------
-# cross attention (encoder-decoder)
+# dense per-slot chunk append (continuous batching on the DENSE cache)
+#
+# The chunked-prefill trunk (lm_chunk_prefill == lm_paged_prefill) is
+# layout-agnostic: it only needs "this sequence's cached KV in token
+# order" as ctx_kv. The paged engine gathers that through a block table
+# (paged_gather_ctx); the dense engine gathers one slot's rows out of its
+# (B, S, ...) cache with these two helpers, so BOTH cache disciplines
+# share one chunk-append code path — and one equivalence contract.
+
+
+def _slot_axis(path) -> int:
+    """Batch/slot axis of a dense-cache leaf: prefix-layer leaves are
+    (B, S, ...), stacked-layer leaves are (L, B, S, ...)."""
+    return 0 if any(getattr(k, "key", None) == "prefix" for k in path) else 1
+
+
+def dense_gather_slot(cache: Params, slot) -> Params:
+    """Read ONE slot's rows out of the dense cache: every leaf
+    (..., B, S, H, D) -> (..., S, H, D) in token order. The result is the
+    ``ctx_kv`` of a chunk prefill (entries >= ``start`` are masked by the
+    compute, so stale rows past the cursor are harmless)."""
+    def take(path, leaf):
+        return jax.lax.dynamic_index_in_dim(leaf, slot, axis=_slot_axis(path),
+                                            keepdims=False)
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+def dense_scatter_slot(cache: Params, new_kv: Params, slot, start,
+                       s_real) -> Params:
+    """Write a chunk's fresh KV into one slot's rows at positions
+    ``start .. start+s_real-1`` (bucket pads dropped). Compiled with the
+    cache donated — an in-place O(chunk) update, not an O(cache) rebuild
+    like admission's whole-row insert."""
+    k0 = new_kv["stack"]["k"] if "stack" in new_kv else new_kv["k"]
+    Sb = k0.shape[-3]
+
+    def put(path, leaf, upd):
+        S = leaf.shape[-3]
+        pos = start + jnp.arange(Sb)
+        pos = jnp.where(jnp.arange(Sb) < s_real, pos, S)       # drop pads
+        upd = upd.astype(leaf.dtype)
+        if _slot_axis(path) == 0:                   # (B, S, H, D)
+            return leaf.at[slot, pos].set(upd, mode="drop")
+        return leaf.at[:, slot, pos].set(upd, mode="drop")     # (L, B, S, ...)
+
+    return jax.tree_util.tree_map_with_path(put, cache, new_kv)
 
 
 def cross_kv(params: Params, cfg: ModelConfig, enc_out: jnp.ndarray):

@@ -266,6 +266,17 @@ def supports_paged(cfg: ModelConfig) -> bool:
             and cfg.sliding_window is None)
 
 
+def supports_chunked(cfg: ModelConfig) -> bool:
+    """Chunked (token-budget) prefill needs an append-able linear KV
+    layout: the GQA trunk qualifies on BOTH cache disciplines (paged
+    block tables and the dense per-slot cache share ``lm_chunk_prefill``
+    via their gather/scatter pairs). Ring-buffer sliding windows, MLA
+    latent caches and SSM/enc-dec state fall back to whole-prompt
+    prefill — the engine still schedules them under the same token
+    budget, as one maximal chunk."""
+    return supports_paged(cfg)
+
+
 def lm_paged_prefill(
     params: Params, cfg: ModelConfig, tokens: jnp.ndarray, ctx_kv: Params,
     start, s_real, *, moe_cf=1.25,
@@ -318,6 +329,14 @@ def lm_paged_prefill(
     if new_prefix:
         new_kv["prefix"] = new_prefix
     return unembed(params, cfg, h_last), new_kv
+
+
+# The chunk-prefill trunk is cache-layout agnostic: ``ctx_kv`` is "this
+# sequence's cached KV in token order", however it was gathered — through
+# a block table (attn.paged_gather_ctx) or out of a dense slot
+# (attn.dense_gather_slot). Continuous batching runs a prompt through it
+# one chunk at a time, advancing ``start`` per chunk.
+lm_chunk_prefill = lm_paged_prefill
 
 
 def lm_paged_decode(

@@ -1,31 +1,52 @@
-"""In-process inference engine with slot-based continuous batching.
+"""In-process inference engine: continuous batching under a token budget.
 
 Real execution (CPU here, TPU mesh in production): one global KV-cache
-pool of ``max_batch`` slots; requests prefill individually (B=1) and are
-inserted into a free slot; every engine step runs ONE batched decode over
-all active slots with per-slot positions (ragged batching — the model
-decode path accepts a (B,) position vector). Finished/expired requests
-free their slot immediately; waiting requests join mid-flight. This is
-iteration-level (Orca-style) continuous batching, the same discipline
-vLLM/TGI use.
+pool of ``max_batch`` slots. Every ``step()`` spends ONE token budget
+across the whole batch — one decode token per active slot, committed
+first, plus bounded CHUNKS of pending prefills with what remains. Long
+prompts amortize over many steps instead of stalling every in-flight
+decode behind a whole-prompt prefill (the head-of-line blocking the old
+admit-then-decode split had), which is exactly the iteration-level
+discipline vLLM/Sarathi-style chunked prefill uses.
+
+The unified schedule per step:
+
+  1. admission — queued requests claim free slots (state only: the paged
+     engine leases its KV blocks here; no model compute);
+  2. prefill   — mid-prefill slots advance their cursor by up to
+     ``chunk_tokens``, oldest admission first, throttled by what the
+     decode tokens left of ``step_token_budget``. A chunk attends the
+     slot's cached KV plus itself (causal); the LAST chunk's logits
+     sample the request's first token — that is when TTFT is stamped;
+  3. decode    — one batched decode over every slot whose prefill is
+     complete (including slots that finished in step 2: their first
+     token joins this batch, matching the old admit-then-decode flow
+     token for token).
 
 The engine reports per-request TTFT / latency / completion, which is
 exactly the telemetry the Pick-and-Spin control loop consumes.
 
-Two cache disciplines share the same slot/step machinery:
+Two cache disciplines share the slot/step/chunk machinery:
 ``InferenceEngine`` keeps the dense per-slot (max_batch, max_seq) cache
-(the latency profile's statically-planned layout), while
-``PagedInferenceEngine`` leases fixed-size KV blocks from a global
+(chunks append through ``dense_gather_slot``/``dense_scatter_slot``),
+while ``PagedInferenceEngine`` leases fixed-size KV blocks from a global
 ``kvpool.BlockPool`` with radix prefix reuse and copy-on-write sharing —
 admission gated on free blocks, blocks freed the step a request
-finishes, prefix hits skipping the shared part of prefill.
+finishes, prefix hits skipping the cached part of prefill, and every
+completed chunk's full blocks registered for reuse as soon as their KV
+is valid.
+
+Sampling uses a PER-REQUEST PRNG stream (engine seed x uid x token
+index), so a request's sampled tokens never depend on which other
+requests share its batch — serve it alone or under load, same tokens.
 """
 from __future__ import annotations
 
 import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,10 +54,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import init_cache, model_decode, model_prefill
-from repro.models.attention import paged_gather_ctx, paged_scatter
+from repro.models.attention import (dense_gather_slot, dense_scatter_slot,
+                                    paged_gather_ctx, paged_scatter)
 from repro.models.transformer import (copy_paged_block, init_paged_cache,
-                                      lm_paged_decode, lm_paged_prefill,
-                                      supports_paged)
+                                      lm_chunk_prefill, lm_paged_decode,
+                                      supports_chunked, supports_paged)
 from repro.serving.backend import BackendProfile
 from repro.serving.kvpool import BlockPool, RadixPrefixCache
 from repro.serving.sampling import SamplingParams, sample
@@ -65,21 +87,28 @@ class GenResult:
     cancelled: bool = False                       # caller aborted it
     shed: bool = False                            # evicted at admission
     cached_tokens: int = 0                        # prompt tokens from prefix cache
+    prefill_chunks: int = 0                       # prefill passes the prompt took
 
 
 @dataclass
 class _Slot:
     req: Optional[Request] = None
     res: Optional[GenResult] = None
-    pos: int = 0                                  # next write position
+    pos: int = 0                 # tokens with valid KV (next write position)
     done: bool = True
+    # chunked-prefill cursor
+    prompt: List[int] = field(default_factory=list)
+    filled: int = 0              # prompt tokens cached so far (prefix incl.)
+    prefilling: bool = False
+    order: int = 0               # admission sequence (FIFO chunk scheduling)
+    key: object = None           # fold_in(seed, uid), cached at admission
 
 
 @dataclass
 class _PagedSlot(_Slot):
-    prompt: List[int] = field(default_factory=list)
     table: Optional[np.ndarray] = None            # (blocks_per_seq,) int32
     blocks: List[int] = field(default_factory=list)   # ids this req refs
+    matched: bool = False        # prefix lookup done (first-chunk time)
 
 
 def _insert_impl(cache, rcache, slot):
@@ -98,10 +127,18 @@ class CompiledFns:
     the first replica's XLA executables, so only the first spin-up of a
     service ever pays compile — the dominant real cold-start cost. The
     replica pool caches these across scale-to-zero (its "code cache").
+
+    ``prefill``/``insert`` are the whole-prompt path (families without a
+    chunk-append layout, and ``chunk_tokens=None``); the ``*_slot`` trio
+    is the chunk-append path over the dense per-slot cache, compiled only
+    when the family supports it.
     """
     prefill: object
     decode: object
     insert: object
+    gather_slot: object = None
+    chunk_prefill: object = None
+    scatter_slot: object = None
 
 
 def compile_fns(cfg: ModelConfig, backend: BackendProfile,
@@ -114,8 +151,17 @@ def compile_fns(cfg: ModelConfig, backend: BackendProfile,
     def _decode(params, token, cache, pos):
         return model_decode(params, cfg, token, cache, pos)
 
+    extra = {}
+    if supports_chunked(cfg):
+        def _chunk(params, tokens, ctx_kv, start, s_real):
+            return lm_chunk_prefill(params, cfg, tokens, ctx_kv, start, s_real)
+
+        extra = dict(
+            gather_slot=jax.jit(dense_gather_slot),
+            chunk_prefill=jax.jit(_chunk),
+            scatter_slot=jax.jit(dense_scatter_slot, donate_argnums=(0,)))
     return CompiledFns(prefill=jax.jit(_prefill), decode=jax.jit(_decode),
-                       insert=jax.jit(_insert_impl))
+                       insert=jax.jit(_insert_impl), **extra)
 
 
 @dataclass(frozen=True)
@@ -126,10 +172,10 @@ class PagedCompiledFns:
 
     Prefill is three functions, and that split is the perf point of the
     paged plane: ``gather`` READS the request's context blocks out of
-    the pool (output is O(context)), ``prefill`` runs the model over the
-    uncached suffix only, and ``scatter`` writes the new KV into the
-    request's blocks with the pool buffer DONATED — an in-place O(suffix)
-    update. The dense engine's admission rewrites its whole
+    the pool (output is O(context)), ``prefill`` runs the model over one
+    uncached CHUNK only, and ``scatter`` writes the new KV into the
+    request's blocks with the pool buffer DONATED — an in-place O(chunk)
+    update. The dense engine's whole-prompt admission rewrites its whole
     (max_batch, max_seq) cache per insert; here the pool is never
     re-materialized."""
     gather: object           # (cache, table_ctx) -> ctx_kv
@@ -142,7 +188,7 @@ class PagedCompiledFns:
 def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
                       max_seq: int, block_size: int) -> PagedCompiledFns:
     def _prefill(params, tokens, ctx_kv, start, s_real):
-        return lm_paged_prefill(params, cfg, tokens, ctx_kv, start, s_real)
+        return lm_chunk_prefill(params, cfg, tokens, ctx_kv, start, s_real)
 
     def _decode(params, token, cache, tables, pos):
         return lm_paged_decode(params, cfg, token, cache, tables, pos)
@@ -156,20 +202,34 @@ def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
 
 
 class InferenceEngine:
-    """Continuous-batching engine for one (model x backend) instance."""
+    """Continuous-batching engine for one (model x backend) instance.
+
+    ``chunk_tokens`` bounds how many prompt tokens one prefill pass may
+    cover (None: whole prompt in one pass). ``step_token_budget`` caps
+    the tokens one ``step()`` spends across decode + prefill (None:
+    unbounded — decode everything, prefill everything admitted).
+    """
 
     paged = False
 
     def __init__(self, cfg: ModelConfig, params, backend: BackendProfile,
-                 max_seq: int = 512, seed: int = 0, fns=None):
+                 max_seq: int = 512, seed: int = 0, fns=None,
+                 chunk_tokens: Optional[int] = None,
+                 step_token_budget: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
         self.max_seq = max_seq
         self.max_batch = backend.max_batch
-        self.key = jax.random.PRNGKey(seed)
+        # 0 means "whole prompt" (the launcher's CLI convention); a raw 0
+        # reaching the chunk sizing would stall the cursor forever
+        self.chunk_tokens = max(1, chunk_tokens) if chunk_tokens else None
+        self.step_token_budget = (max(1, step_token_budget)
+                                  if step_token_budget else None)
+        self._base_key = jax.random.PRNGKey(seed)
         self._slots = [self._make_slot() for _ in range(self.max_batch)]
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = deque()
+        self._order = 0
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
         self.cache = self._init_cache()
         self._finished: List[GenResult] = []
@@ -195,10 +255,23 @@ class InferenceEngine:
         self._prefill = self.fns.prefill
         self._decode = self.fns.decode
         self._insert = self.fns.insert
+        self._gather_slot = self.fns.gather_slot
+        self._chunk_prefill = self.fns.chunk_prefill
+        self._scatter_slot = self.fns.scatter_slot
+
+    def _chunkable(self) -> bool:
+        """Chunk-append available AND requested for this engine."""
+        return self.chunk_tokens is not None and self.fns.chunk_prefill is not None
 
     def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
+        # inactive rows (pos < 0) park their ignored write at max_seq-1, a
+        # position no live request ever stores KV in (prompts are capped
+        # at max_seq - max_new - 1 and decode finishes before writing it).
+        # The old -1 sentinel clamped to position 0, which would corrupt a
+        # mid-prefill slot's first chunk under the unified schedule.
+        safe = np.where(pos >= 0, pos, self.max_seq - 1)
         return self._decode(self.params, jnp.asarray(tokens), self.cache,
-                            jnp.asarray(pos))
+                            jnp.asarray(safe))
 
     def _release(self, slot: "_Slot", register_prefix: bool = True) -> None:
         """Reap hook: free per-request cache resources (no-op dense)."""
@@ -210,15 +283,16 @@ class InferenceEngine:
 
     def cancel(self, uid: int, now: float = None) -> Optional[GenResult]:
         """Abort a request wherever it is. Queued: removed before ever
-        touching a slot. In a slot: the slot is freed immediately and —
-        on the paged engine — its KV blocks go back to the pool without
-        registering in the prefix cache (the caller abandoned the work).
-        Returns the partial ``GenResult`` (``cancelled=True``), or None
-        if ``uid`` is unknown/already finished here."""
+        touching a slot. In a slot (mid-prefill or mid-decode): the slot
+        is freed immediately and — on the paged engine — its KV blocks go
+        back to the pool without registering in the prefix cache (the
+        caller abandoned the work). Returns the partial ``GenResult``
+        (``cancelled=True``), or None if ``uid`` is unknown/already
+        finished here."""
         now = time.perf_counter() if now is None else now
-        for i, r in enumerate(self._queue):
+        for r in self._queue:
             if r.uid == uid:
-                self._queue.pop(i)
+                self._queue.remove(r)
                 res = GenResult(uid=uid, prompt_len=len(r.tokens),
                                 cancelled=True)
                 res.latency = now - r.arrival_t
@@ -230,8 +304,7 @@ class InferenceEngine:
                 res.cancelled = True
                 res.completed = False
                 self._release(slot, register_prefix=False)
-                slot.done = True
-                slot.req = None
+                self._clear_slot(slot)
                 slot.res = None
                 return res
         return None
@@ -254,64 +327,71 @@ class InferenceEngine:
         negative count would corrupt scheduler admission math."""
         return max(0, self.idle_slots() - len(self._queue))
 
+    def pending_tokens(self) -> int:
+        """Prefill backlog in TOKENS: queued prompt tokens plus the
+        unfilled remainder of every mid-prefill slot. The scheduler's
+        token-budget load gauge — two replicas with equal free slots can
+        hide a 100x difference here."""
+        # queued prompts count at their SERVED size (admission keeps only
+        # the last max_seq - max_new - 1 tokens; raw oversized prompts
+        # would report phantom load)
+        queued = sum(
+            min(len(r.tokens),
+                max(self.max_seq - r.sampling.max_new_tokens - 1, 1))
+            for r in self._queue)
+        inflight = sum(len(s.prompt) - s.filled for s in self._slots
+                       if not s.done and s.prefilling)
+        return queued + inflight
+
     def step(self) -> List[GenResult]:
-        """Admit waiting requests, run one batched decode, reap finished."""
-        now = time.perf_counter()
+        """One token-budget iteration: admit, prefill chunks, decode."""
         self._deltas = []                 # this step's streaming increments
-        # 1) admit (a paged engine may refuse — out of KV blocks — in
+        # 1) admission (a paged engine may refuse — out of KV blocks — in
         #    which case the request stays queued for a later step)
         for slot_id, slot in enumerate(self._slots):
             if not self._queue:
                 break
             if slot.done:
-                if not self._admit(slot_id, self._queue[0]):
+                if not self._begin(slot_id, self._queue[0]):
                     break
-                self._queue.pop(0)
-        # 2) decode one token for all active slots
-        active = [i for i, s in enumerate(self._slots) if not s.done]
+                self._queue.popleft()
+        # 2) budget: decode tokens are committed first — in-flight decodes
+        #    must never stall behind prefill (that's the whole point);
+        #    the remainder throttles prefill chunks. Slots whose LAST
+        #    chunk completes below join this step's decode uncharged
+        #    (bounded by max_batch; the overdraft buys them the same
+        #    admit-then-decode cadence the old engine had).
+        decoding = sum(1 for s in self._slots
+                       if not s.done and not s.prefilling)
+        rem = (None if self.step_token_budget is None
+               else max(self.step_token_budget - decoding, 0))
+        # 3) prefill chunks, oldest admission first
+        for i in sorted((i for i, s in enumerate(self._slots)
+                         if not s.done and s.prefilling),
+                        key=lambda i: self._slots[i].order):
+            if rem is not None and rem <= 0:
+                break
+            rem = self._prefill_step(i, self._slots[i], rem)
+        # 4) decode one token for all fully-prefilled slots
+        active = [i for i, s in enumerate(self._slots)
+                  if not s.done and not s.prefilling]
         if active:
             tokens = np.zeros((self.max_batch, 1), np.int32)
             pos = np.full((self.max_batch,), -1, np.int32)   # -1: idle slot
-            for i, s in enumerate(self._slots):
-                if not s.done:
-                    last = (s.res.new_tokens[-1] if s.res.new_tokens
-                            else s.req.tokens[-1])
-                    tokens[i, 0] = last
-                    pos[i] = s.pos
-            logits, self.cache = self._run_decode(tokens, pos)
-            # sample per request: group active slots by their SamplingParams
-            # so mixed batches honor each request's temperature/top-k/top-p
-            # (a single sample() over the batch would silently apply the
-            # first active slot's params to everyone)
-            nxt = np.zeros((self.max_batch,), np.int32)
-            groups: Dict[SamplingParams, List[int]] = {}
             for i in active:
-                groups.setdefault(self._slots[i].req.sampling, []).append(i)
-            for sp, idxs in groups.items():
-                self.key, sk = jax.random.split(self.key)
-                toks = np.asarray(sample(logits[np.asarray(idxs)], sp, sk))
-                for j, i in enumerate(idxs):
-                    nxt[i] = toks[j]
+                s = self._slots[i]
+                tokens[i, 0] = (s.res.new_tokens[-1] if s.res.new_tokens
+                                else s.req.tokens[-1])
+                pos[i] = s.pos
+            logits, self.cache = self._run_decode(tokens, pos)
+            nxt = self._sample_batch(logits, active)
             t = time.perf_counter()
             for i in active:
                 s = self._slots[i]
                 s.res.new_tokens.append(int(nxt[i]))
                 self._deltas.append((s.req.uid, int(nxt[i])))
                 s.pos += 1
-                sp = s.req.sampling
-                hit_eos = sp.eos_id is not None and int(nxt[i]) == sp.eos_id
-                full = len(s.res.new_tokens) >= sp.max_new_tokens
-                timed_out = (s.req.deadline_s is not None and
-                             t - s.req.arrival_t > s.req.deadline_s)
-                out_of_room = s.pos >= self.max_seq - 1
-                if hit_eos or full or timed_out or out_of_room:
-                    s.res.latency = t - s.req.arrival_t
-                    s.res.completed = (hit_eos or full) and not timed_out
-                    s.res.timed_out = timed_out
-                    self._finished.append(s.res)
-                    self._release(s)
-                    s.done = True
-                    s.req = None
+                self._maybe_finish(s, t)
         return self.drain_finished()
 
     def drain_finished(self) -> List[GenResult]:
@@ -330,7 +410,79 @@ class InferenceEngine:
             steps += 1
         return results
 
-    # -- internals -------------------------------------------------------
+    # -- sampling (per-request PRNG streams) ------------------------------
+    def _sample_one(self, slot: "_Slot", logits_row) -> int:
+        """Sample one token for one slot from its (1, V) logits. The key
+        for the ``index``-th token is fold_in(fold_in(seed, uid), index)
+        — a pure function of the request, so sampled tokens are
+        identical whether it decodes alone or inside any batch; the
+        uid-level fold is cached on the slot at admission."""
+        sp = slot.req.sampling
+        if sp.temperature <= 0.0:
+            return int(np.asarray(jnp.argmax(logits_row, axis=-1))[0])
+        key = jax.random.fold_in(slot.key, len(slot.res.new_tokens))
+        return int(np.asarray(sample(logits_row, sp, key))[0])
+
+    def _sample_batch(self, logits, active: List[int]) -> np.ndarray:
+        """Per-slot sampling over batched decode logits (max_batch, V):
+        greedy slots share one argmax pass; stochastic slots draw from
+        their own uid stream, batched per SamplingParams group (one
+        vmapped dispatch per group — the per-request keys are stacked,
+        so the streams stay batch-composition independent while the hot
+        path avoids a device round-trip per slot)."""
+        nxt = np.zeros((self.max_batch,), np.int32)
+        greedy = set(i for i in active
+                     if self._slots[i].req.sampling.temperature <= 0.0)
+        if greedy:
+            am = np.asarray(jnp.argmax(logits, axis=-1))
+            for i in greedy:
+                nxt[i] = am[i]
+        groups = {}
+        for i in active:
+            if i not in greedy:
+                groups.setdefault(self._slots[i].req.sampling, []).append(i)
+        for sp, idxs in groups.items():
+            # one dispatch for the whole group: stacked cached uid-keys
+            # folded with their token indices under the same vmap
+            uid_keys = jnp.stack([self._slots[i].key for i in idxs])
+            draws = jnp.asarray([len(self._slots[i].res.new_tokens)
+                                 for i in idxs])
+            toks = np.asarray(jax.vmap(
+                lambda l, k, d: sample(l[None], sp,
+                                       jax.random.fold_in(k, d))[0])(
+                    logits[np.asarray(idxs)], uid_keys, draws))
+            for j, i in enumerate(idxs):
+                nxt[i] = toks[j]
+        return nxt
+
+    # -- termination ------------------------------------------------------
+    def _maybe_finish(self, s: "_Slot", t: float) -> bool:
+        """Apply the shared termination rules after a token lands."""
+        sp = s.req.sampling
+        last = s.res.new_tokens[-1]
+        hit_eos = sp.eos_id is not None and last == sp.eos_id
+        full = len(s.res.new_tokens) >= sp.max_new_tokens
+        timed_out = (s.req.deadline_s is not None and
+                     t - s.req.arrival_t > s.req.deadline_s)
+        out_of_room = s.pos >= self.max_seq - 1
+        if hit_eos or full or timed_out or out_of_room:
+            s.res.latency = t - s.req.arrival_t
+            s.res.completed = (hit_eos or full) and not timed_out
+            s.res.timed_out = timed_out
+            self._finished.append(s.res)
+            self._release(s)
+            self._clear_slot(s)
+            return True
+        return False
+
+    def _clear_slot(self, s: "_Slot") -> None:
+        s.done = True
+        s.req = None
+        s.prefilling = False
+        s.prompt = []
+        s.filled = 0
+
+    # -- admission (state only; compute happens in _prefill_step) ---------
     @staticmethod
     def _bucket(n: int) -> int:
         """Power-of-2 length bucket (floor, min 8) so prefill compiles a
@@ -342,44 +494,140 @@ class InferenceEngine:
             b *= 2
         return b
 
-    def _admit(self, slot_id: int, req: Request) -> bool:
+    @staticmethod
+    def _bucket_up(n: int) -> int:
+        """Power-of-2 ceiling bucket (min 8): prefill CHUNKS and the
+        paged suffix pad up instead of truncating, so prompt tokens keep
+        their absolute positions."""
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def _occupy(self, slot: "_Slot", req: Request, prompt: List[int],
+                filled: int, cached: int = 0) -> None:
+        """Claim a slot for ``req`` with its prefill cursor at
+        ``filled`` (prefix hits start past the cached tokens)."""
+        slot.req = req
+        slot.res = GenResult(uid=req.uid, prompt_len=len(prompt),
+                             cached_tokens=cached)
+        slot.prompt = prompt
+        slot.filled = filled
+        slot.pos = filled
+        slot.prefilling = True
+        slot.done = False
+        slot.order = self._order
+        self._order += 1
+        # uid-level PRNG fold cached for the request's lifetime (greedy
+        # requests never draw, so they skip even this one dispatch)
+        slot.key = (jax.random.fold_in(self._base_key, req.uid)
+                    if req.sampling.temperature > 0.0 else None)
+
+    def _begin(self, slot_id: int, req: Request) -> bool:
         prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
         prompt = prompt[-self._bucket(len(prompt)):]
-        batch = {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None])}
+        self._occupy(self._slots[slot_id], req, prompt, filled=0)
+        return True
+
+    # -- prefill ----------------------------------------------------------
+    def _prefill_step(self, slot_id: int, slot: "_Slot",
+                      rem: Optional[int]) -> Optional[int]:
+        """Advance one slot's prefill cursor by (up to) one chunk; on the
+        last chunk, sample the request's first token. Returns the
+        remaining token budget."""
+        req, res = slot.req, slot.res
+        t = time.perf_counter()
+        # deadline sweep at the chunk boundary: budget must not be burnt
+        # prefilling a request that already missed its deadline
+        if req.deadline_s is not None and t - req.arrival_t > req.deadline_s:
+            res.latency = t - req.arrival_t
+            res.timed_out = True
+            res.completed = False
+            self._finished.append(res)
+            self._release(slot)
+            self._clear_slot(slot)
+            return rem
+        remaining = len(slot.prompt) - slot.filled
+        if self._chunkable():
+            n = min(self.chunk_tokens, remaining)
+            if rem is not None:
+                n = max(1, min(n, rem))
+        else:
+            n = remaining              # whole-prompt prefill is atomic; it
+            #                            may overdraw the budget (rem goes
+            #                            negative and the loop stops)
+        logits = self._prefill_chunk(slot_id, slot, n)
+        slot.filled += n
+        slot.pos = slot.filled
+        res.prefill_chunks += 1
+        if rem is not None:
+            rem -= n
+        if slot.filled >= len(slot.prompt):
+            self._finish_prefill(slot, logits)
+        return rem
+
+    def _prefill_chunk(self, slot_id: int, slot: "_Slot", n: int):
+        """Run the model over ``n`` prompt tokens at the cursor; returns
+        the last live token's logits (meaningful on the final chunk)."""
+        if not self._chunkable():
+            return self._whole_prefill(slot_id, slot)
+        start = slot.filled
+        chunk = slot.prompt[start:start + n]
+        sb = self._bucket_up(n)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :n] = chunk
+        ctx = self._gather_slot(self.cache, jnp.int32(slot_id))
+        logits, new_kv = self._chunk_prefill(self.params, jnp.asarray(padded),
+                                             ctx, jnp.int32(start),
+                                             jnp.int32(n))
+        self._stamp_ttft(slot, start + n)
+        self.cache = self._scatter_slot(self.cache, new_kv, jnp.int32(slot_id),
+                                        jnp.int32(start), jnp.int32(n))
+        return logits
+
+    def _stamp_ttft(self, slot: "_Slot", filled_after: int) -> None:
+        """TTFT convention: the clock stops when the last chunk's logits
+        are produced — the first token is determined there. The scatter
+        that follows is cache bookkeeping for FUTURE steps (it blocks on
+        the donated pool buffer) and must not count against TTFT, same
+        as the pre-chunking engine."""
+        if filled_after >= len(slot.prompt):
+            slot.res.ttft = time.perf_counter() - slot.req.arrival_t
+
+    def _whole_prefill(self, slot_id: int, slot: "_Slot"):
+        """Legacy one-shot prefill + whole-row insert (non-chunkable
+        families, and ``chunk_tokens=None`` where it skips the per-chunk
+        gather)."""
+        req = slot.req
+        batch = {"tokens": jnp.asarray(np.asarray(slot.prompt, np.int32)[None])}
         if self.cfg.family == "encdec":
             se = (req.src_embeds if req.src_embeds is not None
-                  else np.zeros((self.cfg.frontend_seq, self.cfg.d_model), np.float32))
+                  else np.zeros((self.cfg.frontend_seq, self.cfg.d_model),
+                                np.float32))
             batch["src_embeds"] = jnp.asarray(se[None])
         logits, rcache = self._prefill(self.params, batch)
         self.cache = self._insert(self.cache, rcache, slot_id)
-        res = GenResult(uid=req.uid, prompt_len=len(prompt))
-        res.ttft = time.perf_counter() - req.arrival_t
-        # first token comes from the prefill logits
-        self.key, sk = jax.random.split(self.key)
-        first = int(np.asarray(sample(logits, req.sampling, sk))[0])
+        self._stamp_ttft(slot, len(slot.prompt))   # after insert: the slot
+        #       row must be live before the first decode (old convention)
+        return logits
+
+    def _finish_prefill(self, slot: "_Slot", logits) -> None:
+        """The last chunk just ran: stamp TTFT, sample the first token
+        from its logits, and apply the same termination rules decoded
+        tokens get (max_new_tokens=1 must return exactly one token, an
+        EOS straight out of prefill must stop generation)."""
+        res, req = slot.res, slot.req
+        self._register_prefix(slot)
+        if not res.ttft:                 # _prefill_chunk stamps pre-scatter
+            res.ttft = time.perf_counter() - req.arrival_t
+        first = self._sample_one(slot, logits)
         res.new_tokens.append(first)
         self._deltas.append((req.uid, first))
-        # the first token is subject to the same termination rules as
-        # decoded ones: max_new_tokens=1 must return exactly one token,
-        # and an EOS straight out of prefill must stop generation
-        sp = req.sampling
-        t = time.perf_counter()
-        hit_eos = sp.eos_id is not None and first == sp.eos_id
-        full = len(res.new_tokens) >= sp.max_new_tokens
-        timed_out = (req.deadline_s is not None and
-                     t - req.arrival_t > req.deadline_s)
-        if hit_eos or full or timed_out:
-            res.latency = t - req.arrival_t
-            res.completed = (hit_eos or full) and not timed_out
-            res.timed_out = timed_out
-            self._finished.append(res)
-            return True                  # never occupies a decode slot
-        slot = self._slots[slot_id]
-        slot.req = req
-        slot.res = res
-        slot.pos = len(prompt)
-        slot.done = False
-        return True
+        slot.prefilling = False
+        self._maybe_finish(slot, time.perf_counter())
+
+    def _register_prefix(self, slot: "_Slot") -> None:
+        """Paged hook: register completed full blocks for prefix reuse."""
 
 
 # ---------------------------------------------------------------------------
@@ -399,11 +647,16 @@ class PagedInferenceEngine(InferenceEngine):
       * a radix prefix cache: the cached prefix of a prompt (multi-turn
         history, shared system prompt) is leased by refcount and only the
         uncached suffix is prefilled — this is where the TTFT win on
-        shared-prefix traffic comes from;
+        shared-prefix traffic comes from. The lookup runs at admission
+        (leases protect the prefix from eviction, gating counts only the
+        blocks actually needed) and again at first-chunk time as an
+        EXTENSION, so a prompt admitted while its twin is still
+        prefilling adopts every full block the twin registers chunk by
+        chunk;
       * prompts are NOT bucket-truncated (truncation would shift token
-        positions and break prefix identity); instead the uncached
-        suffix is right-padded to a power-of-2 bucket and masked, which
-        bounds compile specializations the same way.
+        positions and break prefix identity); instead each prefill chunk
+        is right-padded to a power-of-2 bucket and masked, which bounds
+        compile specializations the same way.
     """
 
     paged = True
@@ -412,7 +665,9 @@ class PagedInferenceEngine(InferenceEngine):
                  max_seq: int = 512, seed: int = 0, fns=None,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  num_blocks: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 chunk_tokens: Optional[int] = None,
+                 step_token_budget: Optional[int] = None):
         if not supports_paged(cfg):
             raise ValueError(f"{cfg.name}: family/attention has no paged path")
         if max_seq % block_size:
@@ -427,7 +682,9 @@ class PagedInferenceEngine(InferenceEngine):
             RadixPrefixCache(self.pool) if prefix_cache else None)
         self.hit_tokens = 0                       # prefix tokens NOT prefilled
         self.prompt_tokens = 0
-        super().__init__(cfg, params, backend, max_seq, seed, fns)
+        super().__init__(cfg, params, backend, max_seq, seed, fns,
+                         chunk_tokens=chunk_tokens,
+                         step_token_budget=step_token_budget)
 
     # -- hooks ----------------------------------------------------------
     def _make_slot(self) -> _PagedSlot:
@@ -447,6 +704,11 @@ class PagedInferenceEngine(InferenceEngine):
         self._scatter = self.fns.scatter
         self._decode = self.fns.decode
         self._copy = self.fns.copy
+
+    def _chunkable(self) -> bool:
+        # the paged prefill is ALWAYS a chunk-append (gather/compute/
+        # scatter); chunk_tokens only bounds how much one pass covers
+        return self.chunk_tokens is not None
 
     def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
         tables = np.zeros((self.max_batch, self.blocks_per_seq), np.int32)
@@ -493,119 +755,147 @@ class PagedInferenceEngine(InferenceEngine):
         return max(0, cap - len(self._queue))
 
     # -- admission ------------------------------------------------------
-    @staticmethod
-    def _bucket_up(n: int) -> int:
-        """Power-of-2 ceiling bucket (min 8) for the prefill SUFFIX —
-        padding instead of the dense engine's truncation, so prompt
-        tokens keep their absolute positions (prefix identity)."""
-        b = 8
-        while b < n:
-            b *= 2
-        return b
-
-    def _admit(self, slot_id: int, req: Request) -> bool:
+    def _begin(self, slot_id: int, req: Request) -> bool:
         bs = self.block_size
         prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
         plen = len(prompt)
-
-        # 1) prefix match: lease every cached full block of this prompt
-        matched: List[int] = []
-        keep = 0
-        cow_src = None
-        if self.prefix is not None:
-            matched, m = self.prefix.match(prompt)
-            # always recompute >= 1 token (the last token's logits seed
-            # generation), so a fully-cached prompt keeps plen-1 tokens
-            keep = min(m, plen - 1)
-            n_keep = keep // bs
-            if keep < m:                      # match overshoots the kept run
-                if keep % bs:
-                    cow_src = matched[n_keep]      # partial block -> COW
-                    drop = matched[n_keep + 1:]
-                else:
-                    drop = matched[n_keep:]
-                for b in drop:
-                    self.pool.decref(b)
-                matched = matched[:n_keep]
-
-        # 2) allocate the rest of the sequence up front (no mid-flight OOM)
         total = min(plen + req.sampling.max_new_tokens, self.max_seq)
-        n_new = math.ceil(total / bs) - len(matched)
-        short = n_new - self.pool.num_free
+        # prefix lookup AT ADMISSION: the leases protect the matched
+        # blocks from the eviction below (a repeat prompt must never
+        # evict its own cached prefix to make room for itself), and the
+        # gating counts only the blocks actually needed — a mostly-
+        # cached prompt admits on a nearly-full pool
+        matched, keep, cow_src = self._match_prefix(prompt)
+        n_need = math.ceil(total / bs) - len(matched)
+        short = n_need - self.pool.num_free
         if short > 0 and self.prefix is not None:
             self.prefix.evict(short)
-        if n_new > self.pool.num_free:
-            for b in matched:                 # out of blocks: stay queued
+        if n_need > self.pool.num_free:
+            for b in matched:             # out of blocks: stay queued
                 self.pool.decref(b)
             if cow_src is not None:
                 self.pool.decref(cow_src)
             return False
-        fresh = self.pool.alloc_many(n_new)
-        if cow_src is not None:               # copy-on-write the shared tail
+        fresh = self.pool.alloc_many(n_need)
+        if cow_src is not None:           # copy-on-write the shared tail
             self.cache = self._copy(self.cache, jnp.int32(cow_src),
                                     jnp.int32(fresh[0]))
             self.pool.decref(cow_src)
         owned = matched + fresh
         table = np.zeros((self.blocks_per_seq,), np.int32)
         table[:len(owned)] = owned
-        self.hit_tokens += keep
-        self.prompt_tokens += plen
-
-        # 3) prefill ONLY the uncached suffix, padded to a pow2 bucket
-        suffix = prompt[keep:]
-        sb = self._bucket_up(len(suffix))
-        padded = np.zeros((1, sb), np.int32)
-        padded[0, :len(suffix)] = suffix
-        # pow2 bound on the table entries holding CACHED context (the
-        # suffix attends itself inside the compute core), so the gather
-        # reads ~the reused prefix, not the full max_seq span
-        ctx = 1
-        while ctx * bs < keep:
-            ctx *= 2
-        ctx = min(ctx, self.blocks_per_seq)
-        start, live = jnp.int32(keep), jnp.int32(len(suffix))
-        ctx_kv = self._gather(self.cache, jnp.asarray(table[:ctx]))
-        logits, new_kv = self._prefill(self.params, jnp.asarray(padded),
-                                       ctx_kv, start, live)
-        # first token is determined here (same dispatch-time TTFT
-        # convention as the dense engine); the scatter below is cache
-        # bookkeeping for future steps and blocks on the donated buffer
-        res = GenResult(uid=req.uid, prompt_len=plen, cached_tokens=keep)
-        res.ttft = time.perf_counter() - req.arrival_t
-        self.cache = self._scatter(self.cache, new_kv, jnp.asarray(table),
-                                   start, live)
-
-        # 4) register the prompt's full blocks right away, so requests
-        #    admitted later in this same step already share them
-        if self.prefix is not None and plen >= bs:
-            self.prefix.insert(prompt, table[: plen // bs].tolist())
-        self.key, sk = jax.random.split(self.key)
-        first = int(np.asarray(sample(logits, req.sampling, sk))[0])
-        res.new_tokens.append(first)
-        self._deltas.append((req.uid, first))
-        sp = req.sampling
-        t = time.perf_counter()
-        hit_eos = sp.eos_id is not None and first == sp.eos_id
-        full = len(res.new_tokens) >= sp.max_new_tokens
-        timed_out = (req.deadline_s is not None and
-                     t - req.arrival_t > req.deadline_s)
-        if hit_eos or full or timed_out:
-            res.latency = t - req.arrival_t
-            res.completed = (hit_eos or full) and not timed_out
-            res.timed_out = timed_out
-            self._finished.append(res)
-            for b in owned:                   # cache refs (if any) survive
-                self.pool.decref(b)
-            return True
         slot = self._slots[slot_id]
-        slot.req = req
-        slot.res = res
-        slot.pos = plen
-        slot.done = False
-        slot.prompt = prompt
+        self._occupy(slot, req, prompt, filled=keep, cached=keep)
         slot.table = table
         slot.blocks = owned
+        slot.matched = False              # extension lookup pending
+        self.hit_tokens += keep
+        self.prompt_tokens += plen
         return True
+
+    def _match_prefix(self, prompt: List[int]):
+        """Longest cached prefix of ``prompt`` trimmed to reusable form:
+        always recompute >= 1 token (the last token's logits seed
+        generation), so a fully-cached prompt keeps ``plen - 1``.
+        Returns ``(leased full blocks, keep tokens, cow_src)`` —
+        ``cow_src`` is a leased partially-needed block the caller must
+        copy-on-write into an owned block (or decref)."""
+        if self.prefix is None:
+            return [], 0, None
+        bs = self.block_size
+        plen = len(prompt)
+        matched, m = self.prefix.match(prompt)
+        keep = min(m, plen - 1)
+        n_keep = keep // bs
+        cow_src = None
+        if keep < m:                      # match overshoots the kept run
+            if keep % bs:
+                cow_src = matched[n_keep]      # partial block -> COW
+                drop = matched[n_keep + 1:]
+            else:
+                drop = matched[n_keep:]
+            for b in drop:
+                self.pool.decref(b)
+            matched = matched[:n_keep]
+        return matched, keep, cow_src
+
+    # -- prefill --------------------------------------------------------
+    def _extend_prefix(self, slot: _PagedSlot) -> None:
+        """First-chunk re-lookup: adopt full blocks a concurrent twin
+        registered between this slot's admission and its first prefill
+        pass (progressive chunk-by-chunk sharing). Aligned extension
+        only — when admission copy-on-wrote a partial tail, what it
+        decided stands."""
+        slot.matched = True
+        if self.prefix is None or slot.filled % self.block_size:
+            return
+        bs = self.block_size
+        prompt, plen = slot.prompt, len(slot.prompt)
+        n0 = slot.filled // bs
+        matched, m = self.prefix.match(prompt)
+        n_keep = min(m, plen - 1) // bs
+        if n_keep > n0:
+            for b in slot.blocks[n0:n_keep]:   # fresh blocks now covered
+                self.pool.decref(b)
+            slot.blocks[n0:n_keep] = matched[n0:n_keep]
+            slot.table[n0:n_keep] = matched[n0:n_keep]
+            gained = n_keep * bs - slot.filled
+            slot.filled = n_keep * bs
+            slot.pos = slot.filled
+            slot.res.cached_tokens += gained
+            self.hit_tokens += gained
+            adopted = set(range(n0, n_keep))
+            for i, b in enumerate(matched):    # release unadopted leases
+                if i not in adopted:
+                    self.pool.decref(b)
+        else:
+            for b in matched:
+                self.pool.decref(b)
+
+    def _prefill_chunk(self, slot_id: int, slot: _PagedSlot, n: int):
+        bs = self.block_size
+        start = slot.filled
+        chunk = slot.prompt[start:start + n]
+        sb = self._bucket_up(n)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :n] = chunk
+        # pow2 bound on the table entries holding CACHED context (the
+        # chunk attends itself inside the compute core), so the gather
+        # reads ~the cached prefix, not the full max_seq span
+        ctx = 1
+        while ctx * bs < start:
+            ctx *= 2
+        ctx = min(ctx, self.blocks_per_seq)
+        ctx_kv = self._gather(self.cache, jnp.asarray(slot.table[:ctx]))
+        logits, new_kv = self._prefill(self.params, jnp.asarray(padded),
+                                       ctx_kv, jnp.int32(start), jnp.int32(n))
+        self._stamp_ttft(slot, start + n)
+        self.cache = self._scatter(self.cache, new_kv,
+                                   jnp.asarray(slot.table), jnp.int32(start),
+                                   jnp.int32(n))
+        return logits
+
+    def _prefill_step(self, slot_id: int, slot: _PagedSlot,
+                      rem: Optional[int]) -> Optional[int]:
+        # extension lookup on the slot's FIRST prefill pass, before the
+        # base class sizes the chunk: blocks a twin registered since
+        # admission move the cursor, so only the remainder is charged
+        if not slot.matched:
+            self._extend_prefix(slot)
+        rem = super()._prefill_step(slot_id, slot, rem)
+        # register full blocks the moment their KV is valid (the radix
+        # insert dedupes), so a twin prompt admitted in the same step
+        # reuses this one's blocks chunk by chunk instead of waiting for
+        # the whole prefill to land
+        if not slot.done and slot.prefilling:
+            self._register_prefix(slot)
+        return rem
+
+    def _register_prefix(self, slot: _PagedSlot) -> None:
+        if self.prefix is not None and slot.filled >= self.block_size:
+            n_full = slot.filled // self.block_size
+            self.prefix.insert(slot.prompt[:n_full * self.block_size],
+                               slot.table[:n_full].tolist())
 
     # -- reap -----------------------------------------------------------
     def _release(self, slot: _PagedSlot, register_prefix: bool = True) -> None:
@@ -620,6 +910,6 @@ class PagedInferenceEngine(InferenceEngine):
                 self.prefix.insert(seq, slot.table[:n_full].tolist())
         for b in slot.blocks:
             self.pool.decref(b)
-        slot.prompt = []
         slot.table = None
         slot.blocks = []
+        slot.matched = False

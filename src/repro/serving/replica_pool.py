@@ -57,7 +57,9 @@ class ReplicaPool:
 
     def __init__(self, models: Dict[str, object], registry,
                  max_seq: int = 256, seed: int = 0, paged="auto",
-                 block_size: int = DEFAULT_BLOCK_SIZE):
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 chunk_tokens: Optional[int] = None,
+                 step_token_budget: Optional[int] = None):
         self.models = models
         self.reg = registry
         self.max_seq = max_seq
@@ -66,6 +68,11 @@ class ReplicaPool:
         # supports it (GQA transformer trunk), False forces dense engines
         self.paged = paged
         self.block_size = block_size
+        # continuous-batching knobs threaded into every spun engine:
+        # prefill chunk bound + per-step token budget (None: whole-prompt
+        # prefill / unbounded step, the pre-chunking behavior)
+        self.chunk_tokens = chunk_tokens
+        self.step_token_budget = step_token_budget
         self._replicas: Dict[_Key, List[InferenceEngine]] = {
             (m, b): [] for m in models for b in registry.backends}
         self._params: Dict[str, object] = {}       # warm weights per model
@@ -156,6 +163,14 @@ class ReplicaPool:
         reps = self.paged_replicas(model, backend)
         return max((e.prefix_peek(req) for e in reps), default=0)
 
+    def backlog_tokens(self, model: str) -> int:
+        """Prefill backlog in TOKENS across every live replica of
+        ``model`` (engine-internal queues + unfilled prefill cursors) —
+        the load measure that sees a half-prefilled 8k prompt where a
+        free-slot count sees an almost-idle engine."""
+        return sum(e.pending_tokens() for b in self.reg.backends
+                   for e in self._replicas[(model, b)])
+
     # -- lifecycle (Orchestrator scale_cb target) -----------------------------
     def scale(self, model: str, backend: str, replicas: int,
               now: float = None) -> int:
@@ -198,7 +213,9 @@ class ReplicaPool:
                 else compile_fns(cfg, BACKENDS[backend], self.max_seq))
         kw = dict(max_seq=self.max_seq,
                   seed=self.seed + 101 * (len(reps) + 1),
-                  fns=self._code[key])
+                  fns=self._code[key],
+                  chunk_tokens=self.chunk_tokens,
+                  step_token_budget=self.step_token_budget)
         if use_paged:
             eng = PagedInferenceEngine(cfg, self._params[model],
                                        BACKENDS[backend],

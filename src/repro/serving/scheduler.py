@@ -4,15 +4,18 @@ Sits between the Pick layer (router + Algorithm-2 policy, which choose a
 (model, backend) service per request) and the ``ReplicaPool`` of real
 engines. Responsibilities:
 
-  * per-service admission queues with a bounded depth — beyond it
-    requests are SHED at admission (backpressure instead of unbounded
-    latency collapse). Queues are PRIORITY-ordered: dispatch serves the
-    highest priority class first (FIFO within a class), and under
-    pressure a full queue sheds strictly low-before-high — an arriving
-    high-priority request evicts the newest queued request of the lowest
-    class rather than being rejected. Every shed is a structured result
-    (``GenResult.shed``) delivered through the serve loop, never a
-    silent drop;
+  * per-service admission queues with a bounded depth measured in BOTH
+    requests and TOKENS (``max_queue_tokens``): one 8k-token prompt
+    loads a queue like hundreds of chat turns, so counting requests
+    alone hides the backlog that actually determines waiting time under
+    chunked prefill. Beyond either bound requests are SHED at admission
+    (backpressure instead of unbounded latency collapse). Queues are
+    PRIORITY-ordered: dispatch serves the highest priority class first
+    (FIFO within a class), and under pressure a full queue sheds
+    strictly low-before-high — an arriving high-priority request evicts
+    the newest queued request of the lowest class rather than being
+    rejected. Every shed is a structured result (``GenResult.shed``)
+    delivered through the serve loop, never a silent drop;
   * deadline-aware dispatch: queued requests already past their deadline
     are dropped before ever touching an engine slot;
   * cancellation: ``cancel()`` aborts a request wherever it lives —
@@ -52,6 +55,9 @@ _Key = Tuple[str, str]
 @dataclass
 class SchedulerConfig:
     max_queue_depth: int = 64     # per-service bound; beyond this we shed
+    # per-service queue bound in TOKENS (prompt tokens waiting to
+    # prefill) — the request bound's blind spot. None disables.
+    max_queue_tokens: Optional[int] = 16384
     shed_expired: bool = True     # drop queued requests already past deadline
     spin_on_demand: bool = True   # scale 0->1 when work queues on a dead svc
     prefix_aware: bool = True     # dispatch best-cached-prefix first
@@ -64,6 +70,7 @@ class SchedStats:
     submitted: int = 0
     shed: int = 0                 # rejected/evicted at admission
     shed_blocks: int = 0          # ...of which under KV block pressure
+    shed_tokens: int = 0          # ...of which over the token bound
     preempted: int = 0            # ...of which queued low-priority evictions
     expired: int = 0              # dropped from queue past deadline
     cancelled: int = 0            # aborted by the caller
@@ -103,55 +110,113 @@ class RequestScheduler:
             self._to_engine(key, req)
             self.stats.dispatched += 1
             return True
-        if len(q) >= self._depth_limit(model, backend):
-            victim = self._shed_victim(q, req)
-            if victim is None:
+        over_tokens = (self.cfg.max_queue_tokens is not None and q and
+                       self._queue_tokens(q) + self._req_tokens(req)
+                       > self._token_limit(model, backend))
+        if len(q) >= self._depth_limit(model, backend) or over_tokens:
+            victims = self._shed_victims(model, backend, q, req)
+            if victims is None:
                 self.stats.shed += 1
+                if over_tokens:
+                    self.stats.shed_tokens += 1
                 # block-pressure shed = the TIGHTENED bound did it (an
                 # ordinary queue-full shed at max depth is not the pool's)
-                if len(q) < self.cfg.max_queue_depth:
+                elif len(q) < self.cfg.max_queue_depth:
                     self.stats.shed_blocks += 1
                 return False
             now = time.perf_counter() if now is None else now
-            q.remove(victim)
-            res = GenResult(uid=victim.uid, prompt_len=len(victim.tokens),
-                            shed=True)
-            res.latency = now - victim.arrival_t
-            self._reaped.append((key, res))
-            self.stats.shed += 1
-            self.stats.preempted += 1
-            q.append(req)                 # entry.queued is net unchanged
+            entry = self.reg.entry(model, backend)
+            for victim in victims:
+                q.remove(victim)
+                res = GenResult(uid=victim.uid,
+                                prompt_len=len(victim.tokens), shed=True)
+                res.latency = now - victim.arrival_t
+                self._reaped.append((key, res))
+                self.stats.shed += 1
+                self.stats.preempted += 1
+            q.append(req)
+            entry.queued = max(0, entry.queued - len(victims) + 1)
             return True
         q.append(req)
         self.reg.entry(model, backend).queued += 1
         return True
 
-    @staticmethod
-    def _shed_victim(q: Deque[Request], req: Request) -> Optional[Request]:
-        """Newest queued request of the lowest priority class — evicted
-        only when strictly below the arrival's class (FIFO fairness
-        within a class: equal priority never preempts)."""
-        lowest = min(r.priority for r in q)
-        if lowest >= req.priority:
+    def _shed_victims(self, model: str, backend: str, q: Deque[Request],
+                      req: Request) -> Optional[List[Request]]:
+        """Queued requests of STRICTLY lower priority classes whose
+        eviction makes room for ``req`` under BOTH bounds — lowest class
+        first, newest first within a class (FIFO fairness: equal
+        priority never preempts). One victim frees a seat; the token
+        bound may need several (one 8k prompt displaces many chat
+        turns). None when no such set exists — then the ARRIVAL is shed
+        and nobody already queued is punished for an infeasible one."""
+        cands = [r for r in q if r.priority < req.priority]
+        if not cands:
             return None
-        return next(r for r in reversed(q) if r.priority == lowest)
+        cands.sort(key=lambda r: (r.priority, -r.arrival_t))
+        token_limit = (self._token_limit(model, backend)
+                       if self.cfg.max_queue_tokens is not None else None)
+        depth = self._depth_limit(model, backend)
+        tokens = self._queue_tokens(q)
+        arriving = self._req_tokens(req)
+        victims: List[Request] = []
+        for r in cands:
+            seat_ok = len(q) - len(victims) < depth
+            tokens_ok = (token_limit is None
+                         or tokens + arriving <= token_limit)
+            if seat_ok and tokens_ok:
+                return victims
+            victims.append(r)
+            tokens -= self._req_tokens(r)
+        seat_ok = len(q) - len(victims) < depth
+        tokens_ok = (token_limit is None
+                     or tokens + arriving <= token_limit)
+        return victims if seat_ok and tokens_ok else None
+
+    def _under_block_pressure(self, model: str, backend: str) -> bool:
+        """True when a paged service's pool is below the free-block
+        watermark AND blocks (not slots) are the binding resource —
+        compute idle, pool dry. A busy-slots busy-pool burst is ordinary
+        queueing, not block starvation."""
+        return (self.pool.kv_free_frac(model, backend)
+                < self.cfg.block_watermark
+                and self.pool.kv_bound(model, backend))
 
     def _depth_limit(self, model: str, backend: str) -> int:
-        """Block-watermark shed policy: when a paged service's pool is
-        below the free-block watermark AND blocks (not slots) are the
-        binding resource — compute idle, pool dry — queued work would
-        only sit behind block-starved admission. Tighten the queue bound
-        so callers see backpressure now instead of latency collapse
-        later. A busy-slots busy-pool burst is ordinary queueing and
-        keeps the full depth."""
+        """Block-watermark shed policy: under block pressure, queued work
+        would only sit behind block-starved admission. Tighten the queue
+        bound so callers see backpressure now instead of latency collapse
+        later."""
         depth = self.cfg.max_queue_depth
-        if (self.pool.kv_free_frac(model, backend) < self.cfg.block_watermark
-                and self.pool.kv_bound(model, backend)):
+        if self._under_block_pressure(model, backend):
             depth = max(1, depth // self.cfg.watermark_depth_div)
         return depth
 
+    def _token_limit(self, model: str, backend: str) -> int:
+        """Token-denominated queue bound, tightened by the same
+        watermark divisor under block pressure."""
+        limit = self.cfg.max_queue_tokens
+        if self._under_block_pressure(model, backend):
+            limit = max(1, limit // self.cfg.watermark_depth_div)
+        return limit
+
+    def _req_tokens(self, r: Request) -> int:
+        """Prompt tokens the engine will actually prefill: engines keep
+        only the last ``max_seq - max_new - 1`` tokens, so counting a
+        raw oversized prompt would shed real work over phantom load."""
+        return min(len(r.tokens),
+                   max(self.pool.max_seq - r.sampling.max_new_tokens - 1, 1))
+
+    def _queue_tokens(self, q: Deque[Request]) -> int:
+        return sum(self._req_tokens(r) for r in q)
+
     def queued(self) -> int:
         return sum(len(q) for q in self._queues.values())
+
+    def queued_tokens(self) -> int:
+        """Total prompt tokens waiting in admission queues — queue depth
+        in the unit that predicts prefill work, not request count."""
+        return sum(self._queue_tokens(q) for q in self._queues.values())
 
     def has_work(self) -> bool:
         return (any(self._queues.values()) or bool(self._reaped)
@@ -269,6 +334,14 @@ class RequestScheduler:
             if stats:
                 for name, value in stats.items():
                     self.tel.record_gauge(model, name, now, value)
+            # token-denominated load: queued prompt tokens + unfilled
+            # prefill backlog on the engines — the gauge that actually
+            # predicts time-to-first-token under chunked prefill
+            qtok = sum(self._queue_tokens(q)
+                       for (m, _b), q in self._queues.items() if m == model)
+            self.tel.record_gauge(model, "queue_tokens", now, float(qtok))
+            self.tel.record_gauge(model, "backlog_tokens", now,
+                                  float(qtok + self.pool.backlog_tokens(model)))
         return out
 
     def drain_deltas(self) -> List[Tuple[int, int]]:
@@ -279,14 +352,17 @@ class RequestScheduler:
 
     # -- internals -------------------------------------------------------
     def _to_engine(self, key: _Key, req: Request) -> None:
-        # cache-affine, pack-first placement: prefer the replica whose
-        # radix cache already holds this request's prefix (its prefill
-        # mostly vanishes), then fill the busiest replica with a free
-        # slot. Densest batches extract the most from iteration-level
-        # batching (a decode step costs ~the same at batch 1 and batch
-        # N), and replicas the pool may retire stay drained.
+        # cache-affine, token-aware, pack-first placement: prefer the
+        # replica whose radix cache already holds this request's prefix
+        # (its prefill mostly vanishes), then the one with the smallest
+        # prefill backlog in TOKENS (two replicas with equal free slots
+        # can differ 100x in pending prefill work under chunking), then
+        # fill the busiest replica with a free slot. Densest batches
+        # extract the most from iteration-level batching, and replicas
+        # the pool may retire stay drained.
         cands = [g for g in self.pool.replicas(*key) if g.free_slots() > 0]
         eng = min(cands, key=lambda g: (
-            -(g.prefix_peek(req) if g.paged else 0), g.free_slots()))
+            -(g.prefix_peek(req) if g.paged else 0),
+            g.pending_tokens(), g.free_slots()))
         eng.submit(req)
         self.reg.entry(*key).active_requests += 1

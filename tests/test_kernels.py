@@ -90,6 +90,65 @@ def test_paged_decode_attention(B, Hq, Hkv, D, BS, NBseq, NB, dtype):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Sb,Hq,Hkv,D,BS,NBctx,NB,start,s_real", [
+    (16, 4, 4, 32, 16, 4, 8, 48, 16),     # MHA, full chunk, deep context
+    (32, 8, 2, 64, 16, 4, 24, 24, 20),    # GQA 4:1, padded chunk, ragged ctx
+    (8, 16, 1, 128, 32, 2, 6, 0, 5),      # MQA, NO cached context yet
+    (16, 6, 2, 32, 8, 6, 32, 41, 16),     # non-pow2 heads, mid-block start
+])
+def test_paged_prefill_attention(Sb, Hq, Hkv, D, BS, NBctx, NB, start,
+                                 s_real, dtype):
+    q = _rand((Sb, Hq, D), dtype)
+    k_pool = _rand((NB, BS, Hkv, D), dtype)
+    v_pool = _rand((NB, BS, Hkv, D), dtype)
+    k_new = _rand((Sb, Hkv, D), dtype)
+    v_new = _rand((Sb, Hkv, D), dtype)
+    table = jnp.asarray(RNG.permutation(NB)[:NBctx], jnp.int32)
+    out = ops.paged_prefill_attention(q, k_pool, v_pool, k_new, v_new,
+                                      table, start, s_real, interpret=True)
+    want = ref.ref_paged_prefill_attention(q, k_pool, v_pool, k_new, v_new,
+                                           table, start, s_real)
+    # pad rows (>= s_real) are garbage by contract; compare live rows
+    np.testing.assert_allclose(np.asarray(out, np.float32)[:s_real],
+                               np.asarray(want, np.float32)[:s_real],
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_chunked_prefill_iterates_to_full_attention():
+    """Appending a sequence chunk by chunk — each chunk attending the
+    blocks written so far plus itself — reproduces whole-prompt causal
+    attention exactly. This is the engine's chunked-prefill contract."""
+    S, Hq, Hkv, D, BS, chunk = 64, 4, 2, 32, 16, 16
+    q = _rand((S, Hq, D), jnp.float32)
+    k = _rand((S, Hkv, D), jnp.float32)
+    v = _rand((S, Hkv, D), jnp.float32)
+    NB = S // BS + 1
+    k_pool = jnp.zeros((NB, BS, Hkv, D), jnp.float32)
+    v_pool = jnp.zeros((NB, BS, Hkv, D), jnp.float32)
+    table = jnp.asarray(RNG.permutation(NB - 1) + 1, jnp.int32)  # 0 unused
+    outs = []
+    for start in range(0, S, chunk):
+        sl = slice(start, start + chunk)
+        outs.append(ops.paged_prefill_attention(
+            q[sl], k_pool, v_pool, k[sl], v[sl], table, start, chunk,
+            interpret=True))
+        # scatter the chunk's KV into its blocks for the next iteration
+        flat = table[(start + np.arange(chunk)) // BS] * BS \
+            + (start + np.arange(chunk)) % BS
+        k_pool = k_pool.reshape(NB * BS, Hkv, D).at[flat].set(k[sl]) \
+            .reshape(NB, BS, Hkv, D)
+        v_pool = v_pool.reshape(NB * BS, Hkv, D).at[flat].set(v[sl]) \
+            .reshape(NB, BS, Hkv, D)
+    got = jnp.concatenate(outs, axis=0)                  # (S, Hq, D)
+    want = ref.ref_attention(q.transpose(1, 0, 2)[None],
+                             k.transpose(1, 0, 2)[None],
+                             v.transpose(1, 0, 2)[None], causal=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[0].transpose(1, 0, 2)),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_paged_decode_matches_dense_decode():
     """A paged cache whose block table is the identity equals the dense
     decode kernel on the same data — the paging is layout, not math."""
