@@ -75,6 +75,12 @@ class GatewayConfig:
     # baseline); budget=None leaves the step unbounded.
     chunk_tokens: Optional[int] = 64
     step_token_budget: Optional[int] = 256
+    # opt-in decode burst: with no prefill backlog pending, one engine
+    # step runs K fused decode iterations in a single device dispatch
+    # (the offline/throughput path). 1 keeps stepwise decoding — the
+    # right default for an interactive serve plane, where bursts delay
+    # admission of freshly arrived prompts by up to K-1 decode tokens.
+    decode_burst: int = 1
     autoscale: bool = True                     # run Algorithm 1 inline
     result_retention: int = 256                # bounded finished-result buffer
     session_retention: int = 1024              # LRU bound on live sessions
@@ -161,7 +167,8 @@ class ServeFrontend:
         self.pool = ReplicaPool(cfg.models, self.registry, max_seq=cfg.max_seq,
                                 seed=cfg.seed, paged=cfg.paged,
                                 chunk_tokens=cfg.chunk_tokens,
-                                step_token_budget=cfg.step_token_budget)
+                                step_token_budget=cfg.step_token_budget,
+                                decode_burst=cfg.decode_burst)
         self.scheduler = RequestScheduler(self.pool, self.registry,
                                           self.telemetry, cfg.sched)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
@@ -430,13 +437,14 @@ class Gateway:
                  cost_configs: Dict[str, ModelConfig] = None,
                  sched: Optional[SchedulerConfig] = None, paged="auto",
                  chunk_tokens: Optional[int] = 64,
-                 step_token_budget: Optional[int] = 256):
+                 step_token_budget: Optional[int] = 256,
+                 decode_burst: int = 1):
         self.frontend = ServeFrontend(GatewayConfig(
             models=models, router=router, policy_cls=policy_cls,
             profile=profile, backends=backends, max_seq=max_seq, seed=seed,
             cost_configs=cost_configs, sched=sched, paged=paged,
             chunk_tokens=chunk_tokens, step_token_budget=step_token_budget,
-            autoscale=False))
+            decode_burst=decode_burst, autoscale=False))
 
     # shared-plane passthroughs (no duplicated state)
     models = property(lambda self: self.frontend.models)

@@ -1,12 +1,34 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels + the kernel-dispatch
+registry.
 
 On non-TPU backends (this container) the kernels execute in interpret mode
 — the kernel body runs as traced JAX on CPU, preserving semantics for
 tests. On TPU they compile to Mosaic. ``interpret`` can be forced either
 way for debugging.
+
+KERNEL DISPATCH: the model trunk (``models/attention.py`` /
+``models/transformer.py``) asks ``kernel_mode()`` which implementation of
+the paged-attention contract to trace into the engine's jitted hot path:
+
+    mode        decode / chunk-prefill implementation       default on
+    ---------   -----------------------------------------   -----------
+    mosaic      Pallas kernels compiled by Mosaic            TPU
+    interpret   same Pallas kernels, interpreter-executed    (tests)
+    reference   the jnp trunk (gather + dense attention)     CPU
+
+``reference`` stays the trunk on CPU because interpret-mode Pallas is an
+interpreter, not a fast path; on TPU the Mosaic kernels ARE the hot path
+— the decode kernel streams exactly the blocks a sequence owns through
+its scalar-prefetched table instead of materializing a gathered
+(B, max_seq) KV copy per step. ``kernel_dispatch(mode)`` overrides the
+default (tests pin ``interpret`` to execute the real kernel bodies and
+``reference`` for the oracle); the mode is read at TRACE time, so build
+engines inside the context. int8-quantized KV pools always take the
+reference path (the kernels read raw k/v blocks, not scale pairs).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -17,6 +39,37 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention as _paged
 from repro.kernels import ssd_scan as _ssd
+
+KERNEL_MODES = ("mosaic", "interpret", "reference")
+_forced_mode: Optional[str] = None
+
+
+def kernel_mode() -> str:
+    """Resolve the active dispatch mode (see module docstring table)."""
+    if _forced_mode is not None:
+        return _forced_mode
+    return "mosaic" if jax.default_backend() == "tpu" else "reference"
+
+
+def set_kernel_mode(mode: Optional[str]) -> None:
+    """Force a dispatch mode process-wide (None restores the default).
+    Affects functions traced AFTER the call — jit caches keep whatever
+    mode they were traced under."""
+    global _forced_mode
+    if mode is not None and mode not in KERNEL_MODES:
+        raise ValueError(f"kernel mode {mode!r} not in {KERNEL_MODES}")
+    _forced_mode = mode
+
+
+@contextlib.contextmanager
+def kernel_dispatch(mode: str):
+    """Scoped ``set_kernel_mode`` for tests/benchmarks."""
+    prev = _forced_mode
+    set_kernel_mode(mode)
+    try:
+        yield
+    finally:
+        set_kernel_mode(prev)
 
 
 def _default_interpret() -> bool:

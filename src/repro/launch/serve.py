@@ -103,6 +103,7 @@ def run_concurrent(pool, args) -> None:
                        profile=PROFILES[args.profile], max_seq=96, spin=spin,
                        chunk_tokens=args.chunk_tokens or None,
                        step_token_budget=args.step_token_budget or None,
+                       decode_burst=args.decode_burst,
                        sched=SchedulerConfig(
                            max_queue_depth=args.max_queue_depth))
     prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
@@ -151,6 +152,12 @@ def main() -> None:
     ap.add_argument("--step-token-budget", type=int, default=256,
                     help="tokens one engine step may spend across decode "
                          "+ prefill; 0 = unbounded (--concurrent)")
+    ap.add_argument("--decode-burst", type=int, default=1,
+                    help="fused decode iterations per step when no "
+                         "prefill backlog is pending (1 = stepwise; "
+                         "throughput knob for offline traffic, bounds "
+                         "cancel/deadline latency by K tokens) "
+                         "(--concurrent)")
     args = ap.parse_args()
 
     pool = {}

@@ -28,6 +28,19 @@ from repro.models.common import Params, apply_rope, dense_init
 NEG_INF = -1e30
 
 
+def _kernel_dispatch(cache_like: Params) -> Optional[bool]:
+    """Paged-attention dispatch decision for the engine hot path (see
+    ``kernels.ops`` registry): None — run the jnp reference trunk;
+    otherwise the Pallas kernel's ``interpret`` flag (False: Mosaic on
+    TPU). int8 KV pools always take the reference trunk — the kernels
+    stream raw k/v blocks, not (values, scales) pairs."""
+    from repro.kernels import ops
+    mode = ops.kernel_mode()
+    if mode == "reference" or "k_scale" in cache_like:
+        return None
+    return mode != "mosaic"
+
+
 def dyn_write(cache: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
     """Write ``new`` (B, 1, ...) into ``cache`` (B, S, ...) at sequence
     position ``pos`` (scalar, or (B,) for ragged continuous batching)."""
@@ -396,13 +409,28 @@ def gqa_paged_prefill(params: Params, cfg: ModelConfig, x, cos, sin,
     ``s_real`` <= Sb is the count of live (non-pad) suffix tokens.
     Queries run at global offset ``start`` so causality and RoPE line up
     with the cached prefix. Returns (out, packed suffix KV for
-    ``paged_scatter``) — the pool itself is untouched here."""
+    ``paged_scatter``) — the pool itself is untouched here.
+
+    Kernel dispatch: under ``mosaic``/``interpret`` the chunk attends
+    through ``kernels.paged_prefill_attention`` — the gathered context
+    is presented as ONE pool block (the kernel's block-table contract
+    covers any block size), the chunk's fresh KV rides as operands, and
+    one online softmax streams context + self causally. The jnp math
+    below is the ``reference`` trunk the kernel is validated against."""
     B, Sb, _ = x.shape
     q, k, v = _proj_qkv(params, cfg, x)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     kc, vc = _unpack_kv(cfg, ctx_kv)              # (CtxT, Hkv, D)
     CtxT = kc.shape[0]
+    interpret = _kernel_dispatch(ctx_kv)
+    if interpret is not None:
+        from repro.kernels import ops
+        o = ops.paged_prefill_attention(
+            q[0], kc[None], vc[None], k[0], v[0],
+            jnp.zeros((1,), jnp.int32), start, s_real,
+            interpret=interpret)[None]
+        return _out_proj(params, cfg, o.astype(x.dtype)), _pack_kv(cfg, k[0], v[0])
     Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
     scale = 1.0 / math.sqrt(cfg.head_dim)
     qg = q.reshape(B, Sb, Hkv, G, cfg.head_dim).astype(jnp.float32)
@@ -429,7 +457,16 @@ def gqa_paged_decode(params: Params, cfg: ModelConfig, x, cos, sin,
     """One-token decode against a paged cache. ``block_tables``:
     (B, NBseq) pool block ids; ``pos``: (B,) global index of the new
     token, or -1 for inactive batch slots (their write is dropped and
-    their output is garbage the engine ignores)."""
+    their output is garbage the engine ignores).
+
+    Kernel dispatch: under ``mosaic``/``interpret`` the attention runs
+    through ``kernels.paged_decode_attention`` directly against the pool
+    — each sequence's blocks are streamed through its scalar-prefetched
+    table, with NO gathered (B, Smax) KV copy materialized per step (the
+    reference trunk's gather exists to reuse the dense math, not because
+    the contract needs it). Inactive rows carry valid_len 0 — every
+    block is skipped and the flushed output is the garbage the engine
+    ignores."""
     B = x.shape[0]
     q, k, v = _proj_qkv(params, cfg, x)
     q = apply_rope(q, cos, sin)
@@ -440,6 +477,13 @@ def gqa_paged_decode(params: Params, cfg: ModelConfig, x, cos, sin,
     blk = jnp.take_along_axis(block_tables, (safe // bs)[:, None], axis=1)[:, 0]
     flat = jnp.where(pos >= 0, blk * bs + safe % bs, nb * bs)
     pool = _paged_write(pool, k[:, 0], v[:, 0], flat)
+    interpret = _kernel_dispatch(pool)
+    if interpret is not None:
+        from repro.kernels import ops
+        o = ops.paged_decode_attention(q[:, 0], pool["k"], pool["v"],
+                                       block_tables, pos + 1,
+                                       interpret=interpret)[:, None]
+        return _out_proj(params, cfg, o.astype(x.dtype)), pool
     t = jnp.arange(block_tables.shape[1] * bs)
     gflat = jnp.take(block_tables, t // bs, axis=1) * bs + t % bs  # (B, Smax)
     kc, vc = _paged_gather(cfg, pool, gflat)

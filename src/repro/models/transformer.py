@@ -256,6 +256,13 @@ def lm_decode(
 
 # ---------------------------------------------------------------------------
 # paged prefill / decode (block-pool KV cache; see serving/kvpool.py)
+#
+# Attention inside these trunks is dispatched per backend through the
+# kernel registry (kernels/ops.kernel_mode): the Mosaic Pallas
+# paged_decode_attention / paged_prefill_attention kernels on TPU,
+# interpret-executed kernels for kernel tests, and the jnp reference math
+# on CPU. The dispatch decision is read at trace time, i.e. once per
+# compiled engine step — not per token.
 
 
 def supports_paged(cfg: ModelConfig) -> bool:

@@ -1,5 +1,5 @@
 from repro.serving.backend import BACKENDS, BackendProfile, get_backend  # noqa: F401
-from repro.serving.sampling import SamplingParams, sample  # noqa: F401
+from repro.serving.sampling import SamplingParams, sample, sample_rows  # noqa: F401
 from repro.serving.engine import (CompiledFns, GenResult, InferenceEngine,  # noqa: F401
                                   PagedCompiledFns, PagedInferenceEngine,
                                   Request, compile_fns, compile_paged_fns)

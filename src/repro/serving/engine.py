@@ -39,6 +39,22 @@ is valid.
 Sampling uses a PER-REQUEST PRNG stream (engine seed x uid x token
 index), so a request's sampled tokens never depend on which other
 requests share its batch — serve it alone or under load, same tokens.
+
+DEVICE-RESIDENT DECODE HOT PATH: the decode inner loop is ONE fused
+jitted step — model decode plus per-row sampling (``sampling.sample_rows``,
+greedy and stochastic unified under masks) over persistent device-side
+state buffers (last tokens, positions, active mask, per-slot
+``SamplingParams`` fields, PRNG uid-keys and draw counters, block tables
+on the paged engine), updated by jitted index ops at admission /
+activation / reap instead of host ``np`` staging arrays rebuilt and
+re-uploaded every step. Only the sampled ``(max_batch,)`` int32 token
+ids cross the host boundary per decode iteration — the ``(max_batch,
+V)`` logits never leave the device. With ``decode_burst=K`` and no
+prefill backlog pending, ``step()`` runs K decode iterations inside one
+``lax.scan`` dispatch with on-device EOS/length retirement (deltas
+flushed per burst; K bounds how stale a cancel or deadline can go), the
+throughput path for ``run()``/offline serving. Burst and stepwise
+decoding are token-for-token equivalent under greedy and fixed seeds.
 """
 from __future__ import annotations
 
@@ -46,7 +62,7 @@ import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +77,7 @@ from repro.models.transformer import (copy_paged_block, init_paged_cache,
                                       supports_chunked, supports_paged)
 from repro.serving.backend import BackendProfile
 from repro.serving.kvpool import BlockPool, RadixPrefixCache
-from repro.serving.sampling import SamplingParams, sample
+from repro.serving.sampling import SamplingParams, sample_rows
 
 
 @dataclass
@@ -73,6 +89,7 @@ class Request:
     arrival_t: float = 0.0
     priority: int = 1                             # api.Priority class (int)
     src_embeds: Optional[np.ndarray] = None       # encdec stub input
+    cancelled: bool = False                       # queue tombstone (cancel())
 
 
 @dataclass
@@ -101,7 +118,7 @@ class _Slot:
     filled: int = 0              # prompt tokens cached so far (prefix incl.)
     prefilling: bool = False
     order: int = 0               # admission sequence (FIFO chunk scheduling)
-    key: object = None           # fold_in(seed, uid), cached at admission
+    idx: int = 0                 # batch row (device-state buffer index)
 
 
 @dataclass
@@ -119,6 +136,114 @@ def _insert_impl(cache, rcache, slot):
     return jax.tree_util.tree_map_with_path(put, cache, rcache)
 
 
+# ---------------------------------------------------------------------------
+# device-resident decode state
+#
+# One stacked buffer per per-slot quantity the fused decode step needs, so
+# the hot loop never rebuilds host arrays: admission/activation/reap touch
+# single rows through jitted index ops, and the step itself reads/advances
+# everything on device. ``draws`` mirrors ``len(res.new_tokens)`` (the
+# PRNG token index), so a row's key for its n-th token is
+# fold_in(fold_in(fold_in(seed, uid), n)) — identical to the host-side
+# per-request streams this replaces, and independent of batch composition.
+
+
+def init_device_state(max_batch: int, blocks_per_seq: Optional[int] = None):
+    state = {
+        "tokens": jnp.zeros((max_batch, 1), jnp.int32),   # last sampled token
+        "pos": jnp.zeros((max_batch,), jnp.int32),        # next KV write slot
+        "active": jnp.zeros((max_batch,), jnp.bool_),     # decoding rows
+        "temp": jnp.zeros((max_batch,), jnp.float32),     # SamplingParams...
+        "top_k": jnp.zeros((max_batch,), jnp.int32),
+        "top_p": jnp.ones((max_batch,), jnp.float32),
+        "key": jnp.zeros((max_batch, 2), jnp.uint32),     # fold_in(seed, uid)
+        "draws": jnp.zeros((max_batch,), jnp.int32),      # tokens sampled
+        "eos": jnp.full((max_batch,), -1, jnp.int32),     # -1: no eos_id
+        "max_new": jnp.zeros((max_batch,), jnp.int32),
+    }
+    if blocks_per_seq is not None:                        # paged engines
+        state["tables"] = jnp.zeros((max_batch, blocks_per_seq), jnp.int32)
+    return state
+
+
+def _occupy_impl(state, slot, base_key, uid, temp, top_k, top_p, eos,
+                 max_new, pos0):
+    """Admission index-op: load one row's sampling fields + uid key."""
+    return dict(
+        state,
+        tokens=state["tokens"].at[slot].set(0),
+        pos=state["pos"].at[slot].set(pos0),
+        active=state["active"].at[slot].set(False),
+        temp=state["temp"].at[slot].set(temp),
+        top_k=state["top_k"].at[slot].set(top_k),
+        top_p=state["top_p"].at[slot].set(top_p),
+        key=state["key"].at[slot].set(jax.random.fold_in(base_key, uid)),
+        draws=state["draws"].at[slot].set(0),
+        eos=state["eos"].at[slot].set(eos),
+        max_new=state["max_new"].at[slot].set(max_new))
+
+
+def _deactivate_impl(state, slot):
+    """Reap index-op: retire one row from the decode batch. The row's
+    temperature is zeroed too — a stale temp > 0 on a vacated slot would
+    defeat ``sample_rows``'s all-greedy argmax short-circuit for every
+    later step until the row is reoccupied."""
+    return dict(state, active=state["active"].at[slot].set(False),
+                temp=state["temp"].at[slot].set(0.0))
+
+
+def _first_tokens_impl(state, logits, idx, pos_vals, tables):
+    """Batched first-token sampling for every slot whose prefill just
+    completed: one fused dispatch samples all of them from their final-
+    chunk logits and activates their rows (token, position, draw counter,
+    and — paged — block table). ``idx`` entries equal to ``max_batch``
+    are pow2-bucket pads: their gathers clip harmlessly and their
+    scatters drop."""
+    keys = jax.vmap(jax.random.fold_in)(state["key"][idx],
+                                        state["draws"][idx])
+    toks = sample_rows(logits, state["temp"][idx], state["top_k"][idx],
+                       state["top_p"][idx], keys)
+    new = dict(
+        state,
+        tokens=state["tokens"].at[idx, 0].set(toks, mode="drop"),
+        pos=state["pos"].at[idx].set(pos_vals, mode="drop"),
+        active=state["active"].at[idx].set(True, mode="drop"),
+        draws=state["draws"].at[idx].set(state["draws"][idx] + 1,
+                                         mode="drop"))
+    if tables is not None:
+        new["tables"] = state["tables"].at[idx].set(tables, mode="drop")
+    return toks, new
+
+
+def _advance_impl(state, logits):
+    """Fused sample-in-step: draw every row's next token ON DEVICE from
+    the decode logits (greedy/stochastic unified under masks, per-row
+    keys folded from the uid streams) and advance the cursors of active
+    rows. The logits are consumed here — they are never materialized on
+    host."""
+    active = state["active"]
+    keys = jax.vmap(jax.random.fold_in)(state["key"], state["draws"])
+    nxt = sample_rows(logits, state["temp"], state["top_k"], state["top_p"],
+                      keys)
+    nxt = jnp.where(active, nxt, 0).astype(jnp.int32)
+    state = dict(state,
+                 tokens=nxt[:, None],
+                 pos=jnp.where(active, state["pos"] + 1, state["pos"]),
+                 draws=jnp.where(active, state["draws"] + 1, state["draws"]))
+    return nxt, state
+
+
+def _retire_impl(state, nxt, max_seq):
+    """On-device termination between burst iterations — the same rules
+    the host applies after a token lands (EOS / max_new_tokens / out of
+    cache room), minus wall-clock deadlines (those resolve at the burst
+    boundary, which is why K stays bounded)."""
+    hit_eos = (state["eos"] >= 0) & (nxt == state["eos"])
+    full = state["draws"] >= state["max_new"]
+    room = state["pos"] >= max_seq - 1
+    return dict(state, active=state["active"] & ~hit_eos & ~full & ~room)
+
+
 @dataclass(frozen=True)
 class CompiledFns:
     """Jitted step functions for one (config, backend, max_seq) service.
@@ -132,6 +257,16 @@ class CompiledFns:
     chunk-append layout, and ``chunk_tokens=None``); the ``*_slot`` trio
     is the chunk-append path over the dense per-slot cache, compiled only
     when the family supports it.
+
+    The decode hot path is the fused trio: ``fused_step`` (decode +
+    in-step sampling, one dispatch per token), ``fused_burst`` (K fused
+    iterations under one ``lax.scan`` dispatch; K is a static argument)
+    and ``first_tokens`` (batched first-token sampling for prefills
+    completing this step). ``occupy``/``deactivate`` are the index ops
+    that maintain the device-resident state between steps.
+    ``trace_counts`` counts ACTUAL retraces of the fused functions — the
+    regression guard that ``step()`` isn't silently recompiling per
+    step.
     """
     prefill: object
     decode: object
@@ -139,6 +274,51 @@ class CompiledFns:
     gather_slot: object = None
     chunk_prefill: object = None
     scatter_slot: object = None
+    fused_step: object = None
+    fused_burst: object = None
+    first_tokens: object = None
+    occupy: object = None
+    deactivate: object = None
+    trace_counts: object = None
+
+
+def _fused_fns(step_fn, max_seq: int):
+    """Build the fused decode fields of a CompiledFns/PagedCompiledFns
+    from ONE per-engine step closure ``step_fn(params, cache, state) ->
+    (nxt, cache, state)`` (decode + ``_advance_impl``): ``fused_step``
+    jits it directly, ``fused_burst`` scans it K times with
+    ``_retire_impl`` between iterations — a single source of truth, so
+    burst and stepwise can never diverge. The state-maintenance index
+    ops are shared too (the state pytree layout differs only by the
+    paged ``tables`` leaf, which they pass through untouched)."""
+    traces = {"fused_step": 0, "fused_burst": 0}
+
+    def _fused(params, cache, state):
+        traces["fused_step"] += 1
+        return step_fn(params, cache, state)
+
+    def _burst(params, cache, state, k):
+        traces["fused_burst"] += 1
+
+        def body(carry, _):
+            cache, state = carry
+            was = state["active"]
+            nxt, cache, state = step_fn(params, cache, state)
+            state = _retire_impl(state, nxt, max_seq)
+            return (cache, state), (nxt, was)
+
+        (cache, state), (toks, alive) = jax.lax.scan(body, (cache, state),
+                                                     None, length=k)
+        return toks, alive, cache, state
+
+    return dict(
+        fused_step=jax.jit(_fused, donate_argnums=(1, 2)),
+        fused_burst=jax.jit(_burst, static_argnums=(3,),
+                            donate_argnums=(1, 2)),
+        first_tokens=jax.jit(_first_tokens_impl, donate_argnums=(0,)),
+        occupy=jax.jit(_occupy_impl, donate_argnums=(0,)),
+        deactivate=jax.jit(_deactivate_impl, donate_argnums=(0,)),
+        trace_counts=traces)
 
 
 def compile_fns(cfg: ModelConfig, backend: BackendProfile,
@@ -151,12 +331,22 @@ def compile_fns(cfg: ModelConfig, backend: BackendProfile,
     def _decode(params, token, cache, pos):
         return model_decode(params, cfg, token, cache, pos)
 
-    extra = {}
+    def _step(params, cache, state):
+        # inactive rows park their ignored write at max_seq-1, a position
+        # no live request ever stores KV in (prompts are capped at
+        # max_seq - max_new - 1 and decode finishes before writing it)
+        safe = jnp.where(state["active"], state["pos"], max_seq - 1)
+        logits, cache = model_decode(params, cfg, state["tokens"], cache,
+                                     safe)
+        nxt, state = _advance_impl(state, logits)
+        return nxt, cache, state
+
+    extra = _fused_fns(_step, max_seq)
     if supports_chunked(cfg):
         def _chunk(params, tokens, ctx_kv, start, s_real):
             return lm_chunk_prefill(params, cfg, tokens, ctx_kv, start, s_real)
 
-        extra = dict(
+        extra.update(
             gather_slot=jax.jit(dense_gather_slot),
             chunk_prefill=jax.jit(_chunk),
             scatter_slot=jax.jit(dense_scatter_slot, donate_argnums=(0,)))
@@ -177,12 +367,22 @@ class PagedCompiledFns:
     request's blocks with the pool buffer DONATED — an in-place O(chunk)
     update. The dense engine's whole-prompt admission rewrites its whole
     (max_batch, max_seq) cache per insert; here the pool is never
-    re-materialized."""
+    re-materialized.
+
+    The ``fused_*``/``first_tokens``/``occupy``/``deactivate`` fields
+    carry the same device-resident decode hot path as ``CompiledFns``
+    (the state pytree additionally holds the per-row block tables)."""
     gather: object           # (cache, table_ctx) -> ctx_kv
     prefill: object          # (params, tokens, ctx_kv, start, s_real)
     scatter: object          # (cache, new_kv, table, start, s_real)
     decode: object           # (params, token, cache, tables, pos)
     copy: object             # (cache, src_block, dst_block) — COW
+    fused_step: object = None
+    fused_burst: object = None
+    first_tokens: object = None
+    occupy: object = None
+    deactivate: object = None
+    trace_counts: object = None
 
 
 def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
@@ -193,12 +393,21 @@ def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
     def _decode(params, token, cache, tables, pos):
         return lm_paged_decode(params, cfg, token, cache, tables, pos)
 
+    def _step(params, cache, state):
+        # -1 marks inactive rows: their pool write is dropped entirely
+        pos = jnp.where(state["active"], state["pos"], -1)
+        logits, cache = lm_paged_decode(params, cfg, state["tokens"], cache,
+                                        state["tables"], pos)
+        nxt, state = _advance_impl(state, logits)
+        return nxt, cache, state
+
     return PagedCompiledFns(
         gather=jax.jit(paged_gather_ctx),
         prefill=jax.jit(_prefill),
         scatter=jax.jit(paged_scatter, donate_argnums=(0,)),
         decode=jax.jit(_decode, donate_argnums=(2,)),
-        copy=jax.jit(copy_paged_block, donate_argnums=(0,)))
+        copy=jax.jit(copy_paged_block, donate_argnums=(0,)),
+        **_fused_fns(_step, max_seq))
 
 
 class InferenceEngine:
@@ -208,6 +417,8 @@ class InferenceEngine:
     cover (None: whole prompt in one pass). ``step_token_budget`` caps
     the tokens one ``step()`` spends across decode + prefill (None:
     unbounded — decode everything, prefill everything admitted).
+    ``decode_burst=K`` (opt-in, default 1) lets a step with NO prefill
+    backlog run K fused decode iterations in one device dispatch.
     """
 
     paged = False
@@ -215,7 +426,8 @@ class InferenceEngine:
     def __init__(self, cfg: ModelConfig, params, backend: BackendProfile,
                  max_seq: int = 512, seed: int = 0, fns=None,
                  chunk_tokens: Optional[int] = None,
-                 step_token_budget: Optional[int] = None):
+                 step_token_budget: Optional[int] = None,
+                 decode_burst: int = 1):
         self.cfg = cfg
         self.params = params
         self.backend = backend
@@ -226,17 +438,28 @@ class InferenceEngine:
         self.chunk_tokens = max(1, chunk_tokens) if chunk_tokens else None
         self.step_token_budget = (max(1, step_token_budget)
                                   if step_token_budget else None)
+        self.decode_burst = max(1, decode_burst)
         self._base_key = jax.random.PRNGKey(seed)
         self._slots = [self._make_slot() for _ in range(self.max_batch)]
+        for i, s in enumerate(self._slots):
+            s.idx = i
         self._queue: Deque[Request] = deque()
+        self._queue_tomb = 0                   # cancelled-in-queue count
+        # O(1) cancel index: uid -> queued Request, or the _Slot serving it
+        self._by_uid: Dict[int, object] = {}
         self._order = 0
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
         self.cache = self._init_cache()
+        self._dstate = self._init_dstate()
         self._finished: List[GenResult] = []
         # (uid, token) streaming deltas of the CURRENT step — cleared at
         # the top of each step(), so a caller draining between steps sees
-        # exactly one decode iteration's worth of tokens
+        # exactly one decode iteration's worth of tokens (one BURST's
+        # worth under decode_burst)
         self._deltas: List[Tuple[int, int]] = []
+        # slots whose prefill completes this step, awaiting the batched
+        # first-token sample: (slot, final-chunk logits) pairs
+        self._pending_first: List[Tuple["_Slot", object]] = []
         self.fns = fns or self._compile()
         self._bind_fns()
 
@@ -248,6 +471,9 @@ class InferenceEngine:
         return init_cache(self.cfg, self.max_batch, self.max_seq,
                           self._kv_dtype)
 
+    def _init_dstate(self):
+        return init_device_state(self.max_batch)
+
     def _compile(self):
         return compile_fns(self.cfg, self.backend, self.max_seq)
 
@@ -258,20 +484,18 @@ class InferenceEngine:
         self._gather_slot = self.fns.gather_slot
         self._chunk_prefill = self.fns.chunk_prefill
         self._scatter_slot = self.fns.scatter_slot
+        self._bind_fused()
+
+    def _bind_fused(self) -> None:
+        self._fused_step = self.fns.fused_step
+        self._fused_burst = self.fns.fused_burst
+        self._first_fn = self.fns.first_tokens
+        self._occupy_fn = self.fns.occupy
+        self._deactivate_fn = self.fns.deactivate
 
     def _chunkable(self) -> bool:
         """Chunk-append available AND requested for this engine."""
         return self.chunk_tokens is not None and self.fns.chunk_prefill is not None
-
-    def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
-        # inactive rows (pos < 0) park their ignored write at max_seq-1, a
-        # position no live request ever stores KV in (prompts are capped
-        # at max_seq - max_new - 1 and decode finishes before writing it).
-        # The old -1 sentinel clamped to position 0, which would corrupt a
-        # mid-prefill slot's first chunk under the unified schedule.
-        safe = np.where(pos >= 0, pos, self.max_seq - 1)
-        return self._decode(self.params, jnp.asarray(tokens), self.cache,
-                            jnp.asarray(safe))
 
     def _release(self, slot: "_Slot", register_prefix: bool = True) -> None:
         """Reap hook: free per-request cache resources (no-op dense)."""
@@ -280,9 +504,11 @@ class InferenceEngine:
     def submit(self, req: Request) -> None:
         req.arrival_t = req.arrival_t or time.perf_counter()
         self._queue.append(req)
+        self._by_uid[req.uid] = req
 
     def cancel(self, uid: int, now: float = None) -> Optional[GenResult]:
-        """Abort a request wherever it is. Queued: removed before ever
+        """Abort a request wherever it is, O(1) at any occupancy via the
+        uid index. Queued: tombstoned (skipped at admission) before ever
         touching a slot. In a slot (mid-prefill or mid-decode): the slot
         is freed immediately and — on the paged engine — its KV blocks go
         back to the pool without registering in the prefix cache (the
@@ -290,32 +516,40 @@ class InferenceEngine:
         (``cancelled=True``), or None if ``uid`` is unknown/already
         finished here."""
         now = time.perf_counter() if now is None else now
-        for r in self._queue:
-            if r.uid == uid:
-                self._queue.remove(r)
-                res = GenResult(uid=uid, prompt_len=len(r.tokens),
-                                cancelled=True)
-                res.latency = now - r.arrival_t
-                return res
-        for slot in self._slots:
-            if not slot.done and slot.req is not None and slot.req.uid == uid:
-                res = slot.res
-                res.latency = now - slot.req.arrival_t
-                res.cancelled = True
-                res.completed = False
-                self._release(slot, register_prefix=False)
-                self._clear_slot(slot)
-                slot.res = None
-                return res
-        return None
+        obj = self._by_uid.pop(uid, None)
+        if obj is None:
+            return None
+        if isinstance(obj, Request):          # still queued: tombstone
+            obj.cancelled = True
+            self._queue_tomb += 1
+            while self._queue and self._queue[0].cancelled:
+                self._queue.popleft()         # amortized front sweep
+                self._queue_tomb -= 1
+            res = GenResult(uid=uid, prompt_len=len(obj.tokens),
+                            cancelled=True)
+            res.latency = now - obj.arrival_t
+            return res
+        slot = obj
+        res = slot.res
+        res.latency = now - slot.req.arrival_t
+        res.cancelled = True
+        res.completed = False
+        self._release(slot, register_prefix=False)
+        self._clear_slot(slot)
+        slot.res = None
+        return res
 
     def drain_deltas(self) -> List[Tuple[int, int]]:
         """Fetch-and-clear the current step's (uid, token) stream deltas."""
         out, self._deltas = self._deltas, []
         return out
 
+    def _queued(self) -> int:
+        """Live (non-tombstoned) queued requests."""
+        return len(self._queue) - self._queue_tomb
+
     def has_work(self) -> bool:
-        return bool(self._queue) or any(not s.done for s in self._slots)
+        return self._queued() > 0 or any(not s.done for s in self._slots)
 
     def idle_slots(self) -> int:
         """Raw free decode slots (no queue/capacity accounting)."""
@@ -325,7 +559,7 @@ class InferenceEngine:
         """Slots a scheduler may still fill (free minus already queued),
         clamped at 0: the internal queue can exceed the free slots, and a
         negative count would corrupt scheduler admission math."""
-        return max(0, self.idle_slots() - len(self._queue))
+        return max(0, self.idle_slots() - self._queued())
 
     def pending_tokens(self) -> int:
         """Prefill backlog in TOKENS: queued prompt tokens plus the
@@ -338,7 +572,7 @@ class InferenceEngine:
         queued = sum(
             min(len(r.tokens),
                 max(self.max_seq - r.sampling.max_new_tokens - 1, 1))
-            for r in self._queue)
+            for r in self._queue if not r.cancelled)
         inflight = sum(len(s.prompt) - s.filled for s in self._slots
                        if not s.done and s.prefilling)
         return queued + inflight
@@ -346,13 +580,18 @@ class InferenceEngine:
     def step(self) -> List[GenResult]:
         """One token-budget iteration: admit, prefill chunks, decode."""
         self._deltas = []                 # this step's streaming increments
+        self._pending_first = []
         # 1) admission (a paged engine may refuse — out of KV blocks — in
-        #    which case the request stays queued for a later step)
-        for slot_id, slot in enumerate(self._slots):
+        #    which case the request stays queued for a later step).
+        #    Tombstoned (cancelled-in-queue) entries drain here for free.
+        for slot in self._slots:
+            while self._queue and self._queue[0].cancelled:
+                self._queue.popleft()
+                self._queue_tomb -= 1
             if not self._queue:
                 break
             if slot.done:
-                if not self._begin(slot_id, self._queue[0]):
+                if not self._begin(slot.idx, self._queue[0]):
                     break
                 self._queue.popleft()
         # 2) budget: decode tokens are committed first — in-flight decodes
@@ -372,27 +611,64 @@ class InferenceEngine:
             if rem is not None and rem <= 0:
                 break
             rem = self._prefill_step(i, self._slots[i], rem)
-        # 4) decode one token for all fully-prefilled slots
+        # 3b) ONE batched dispatch samples the first token of every slot
+        #     whose last chunk just ran; they join this step's decode
+        self._finish_first_tokens()
+        # 4) decode all fully-prefilled slots: one fused device step per
+        #    token, or a K-iteration burst when nothing is waiting to
+        #    prefill (the offline/throughput path)
         active = [i for i, s in enumerate(self._slots)
                   if not s.done and not s.prefilling]
         if active:
-            tokens = np.zeros((self.max_batch, 1), np.int32)
-            pos = np.full((self.max_batch,), -1, np.int32)   # -1: idle slot
-            for i in active:
-                s = self._slots[i]
-                tokens[i, 0] = (s.res.new_tokens[-1] if s.res.new_tokens
-                                else s.req.tokens[-1])
-                pos[i] = s.pos
-            logits, self.cache = self._run_decode(tokens, pos)
-            nxt = self._sample_batch(logits, active)
+            if (self.decode_burst > 1 and self._queued() == 0
+                    and not any(s.prefilling for s in self._slots
+                                if not s.done)):
+                self._decode_burst(active)
+            else:
+                self._decode_once(active)
+        return self.drain_finished()
+
+    # -- fused decode (device-resident hot path) --------------------------
+    def _decode_once(self, active: List[int]) -> None:
+        """One fused decode+sample dispatch; the ONLY device->host
+        traffic is the (max_batch,) int32 vector of sampled token ids."""
+        nxt, self.cache, self._dstate = self._fused_step(
+            self.params, self.cache, self._dstate)
+        toks = jax.device_get(nxt)
+        t = time.perf_counter()
+        for i in active:
+            s = self._slots[i]
+            tok = int(toks[i])
+            s.res.new_tokens.append(tok)
+            self._deltas.append((s.req.uid, tok))
+            s.pos += 1
+            self._maybe_finish(s, t)
+
+    def _decode_burst(self, active: List[int]) -> None:
+        """K fused decode iterations inside one ``lax.scan`` dispatch,
+        with on-device EOS/length retirement; the host replays the
+        (K, max_batch) token ids afterwards to run the shared
+        termination bookkeeping. Wall-clock deadlines resolve only at
+        the burst boundary — K bounds that staleness, which is why the
+        burst stays opt-in and bounded rather than running to EOS."""
+        k = self.decode_burst
+        toks, alive, self.cache, self._dstate = self._fused_burst(
+            self.params, self.cache, self._dstate, k)
+        toks, alive = jax.device_get((toks, alive))
+        for j in range(k):
             t = time.perf_counter()
             for i in active:
                 s = self._slots[i]
-                s.res.new_tokens.append(int(nxt[i]))
-                self._deltas.append((s.req.uid, int(nxt[i])))
+                # s.done: the host finished this row at an earlier burst
+                # iteration (e.g. a lapsed deadline the device couldn't
+                # see) — any tokens the device over-ran are dropped
+                if s.done or not alive[j, i]:
+                    continue
+                tok = int(toks[j, i])
+                s.res.new_tokens.append(tok)
+                self._deltas.append((s.req.uid, tok))
                 s.pos += 1
                 self._maybe_finish(s, t)
-        return self.drain_finished()
 
     def drain_finished(self) -> List[GenResult]:
         out, self._finished = self._finished, []
@@ -410,50 +686,45 @@ class InferenceEngine:
             steps += 1
         return results
 
-    # -- sampling (per-request PRNG streams) ------------------------------
-    def _sample_one(self, slot: "_Slot", logits_row) -> int:
-        """Sample one token for one slot from its (1, V) logits. The key
-        for the ``index``-th token is fold_in(fold_in(seed, uid), index)
-        — a pure function of the request, so sampled tokens are
-        identical whether it decodes alone or inside any batch; the
-        uid-level fold is cached on the slot at admission."""
-        sp = slot.req.sampling
-        if sp.temperature <= 0.0:
-            return int(np.asarray(jnp.argmax(logits_row, axis=-1))[0])
-        key = jax.random.fold_in(slot.key, len(slot.res.new_tokens))
-        return int(np.asarray(sample(logits_row, sp, key))[0])
+    # -- batched first-token sampling -------------------------------------
+    def _finish_first_tokens(self) -> None:
+        """Drain ``_pending_first``: every slot whose prefill completed
+        this step samples its first token in ONE fused dispatch (stacked
+        final-chunk logits rows, per-slot params/keys gathered from the
+        device state) and activates its decode row. Replaces the old
+        per-slot ``_sample_one`` round-trips."""
+        pend, self._pending_first = self._pending_first, []
+        if not pend:
+            return
+        n = len(pend)
+        nb = 1                           # pow2 pad bounds retraces by count
+        while nb < n:
+            nb *= 2
+        idx = np.full((nb,), self.max_batch, np.int32)   # max_batch: pad
+        pos_vals = np.zeros((nb,), np.int32)
+        rows = []
+        for j, (slot, logits) in enumerate(pend):
+            idx[j] = slot.idx
+            pos_vals[j] = slot.filled
+            rows.append(logits)
+        rows.extend([jnp.zeros_like(rows[0])] * (nb - n))
+        stacked = jnp.concatenate(rows, axis=0)
+        toks, self._dstate = self._first_fn(
+            self._dstate, stacked, jnp.asarray(idx), jnp.asarray(pos_vals),
+            self._stack_tables(pend, nb))
+        toks = jax.device_get(toks)
+        t = time.perf_counter()
+        for j, (slot, _) in enumerate(pend):
+            tok = int(toks[j])
+            slot.res.new_tokens.append(tok)
+            self._deltas.append((slot.req.uid, tok))
+            slot.prefilling = False
+            self._maybe_finish(slot, t)
 
-    def _sample_batch(self, logits, active: List[int]) -> np.ndarray:
-        """Per-slot sampling over batched decode logits (max_batch, V):
-        greedy slots share one argmax pass; stochastic slots draw from
-        their own uid stream, batched per SamplingParams group (one
-        vmapped dispatch per group — the per-request keys are stacked,
-        so the streams stay batch-composition independent while the hot
-        path avoids a device round-trip per slot)."""
-        nxt = np.zeros((self.max_batch,), np.int32)
-        greedy = set(i for i in active
-                     if self._slots[i].req.sampling.temperature <= 0.0)
-        if greedy:
-            am = np.asarray(jnp.argmax(logits, axis=-1))
-            for i in greedy:
-                nxt[i] = am[i]
-        groups = {}
-        for i in active:
-            if i not in greedy:
-                groups.setdefault(self._slots[i].req.sampling, []).append(i)
-        for sp, idxs in groups.items():
-            # one dispatch for the whole group: stacked cached uid-keys
-            # folded with their token indices under the same vmap
-            uid_keys = jnp.stack([self._slots[i].key for i in idxs])
-            draws = jnp.asarray([len(self._slots[i].res.new_tokens)
-                                 for i in idxs])
-            toks = np.asarray(jax.vmap(
-                lambda l, k, d: sample(l[None], sp,
-                                       jax.random.fold_in(k, d))[0])(
-                    logits[np.asarray(idxs)], uid_keys, draws))
-            for j, i in enumerate(idxs):
-                nxt[i] = toks[j]
-        return nxt
+    def _stack_tables(self, pend, nb: int):
+        """Paged hook: block tables to sync into the device state when
+        the pending slots activate (None on the dense engine)."""
+        return None
 
     # -- termination ------------------------------------------------------
     def _maybe_finish(self, s: "_Slot", t: float) -> bool:
@@ -476,6 +747,9 @@ class InferenceEngine:
         return False
 
     def _clear_slot(self, s: "_Slot") -> None:
+        if s.req is not None:
+            self._by_uid.pop(s.req.uid, None)
+        self._dstate = self._deactivate_fn(self._dstate, s.idx)
         s.done = True
         s.req = None
         s.prefilling = False
@@ -507,7 +781,10 @@ class InferenceEngine:
     def _occupy(self, slot: "_Slot", req: Request, prompt: List[int],
                 filled: int, cached: int = 0) -> None:
         """Claim a slot for ``req`` with its prefill cursor at
-        ``filled`` (prefix hits start past the cached tokens)."""
+        ``filled`` (prefix hits start past the cached tokens). The
+        slot's device-state row is loaded here (sampling fields + the
+        uid-level PRNG fold) by one jitted index op; the row activates
+        only when its first token lands."""
         slot.req = req
         slot.res = GenResult(uid=req.uid, prompt_len=len(prompt),
                              cached_tokens=cached)
@@ -518,10 +795,14 @@ class InferenceEngine:
         slot.done = False
         slot.order = self._order
         self._order += 1
-        # uid-level PRNG fold cached for the request's lifetime (greedy
-        # requests never draw, so they skip even this one dispatch)
-        slot.key = (jax.random.fold_in(self._base_key, req.uid)
-                    if req.sampling.temperature > 0.0 else None)
+        sp = req.sampling
+        self._dstate = self._occupy_fn(
+            self._dstate, slot.idx, self._base_key, np.int32(req.uid),
+            np.float32(sp.temperature), np.int32(sp.top_k),
+            np.float32(sp.top_p),
+            np.int32(-1 if sp.eos_id is None else sp.eos_id),
+            np.int32(sp.max_new_tokens), np.int32(filled))
+        self._by_uid[req.uid] = slot
 
     def _begin(self, slot_id: int, req: Request) -> bool:
         prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
@@ -612,19 +893,18 @@ class InferenceEngine:
         return logits
 
     def _finish_prefill(self, slot: "_Slot", logits) -> None:
-        """The last chunk just ran: stamp TTFT, sample the first token
-        from its logits, and apply the same termination rules decoded
-        tokens get (max_new_tokens=1 must return exactly one token, an
-        EOS straight out of prefill must stop generation)."""
+        """The last chunk just ran: register the prefix, stamp TTFT, and
+        queue the slot for this step's BATCHED first-token sample
+        (``_finish_first_tokens`` — one fused dispatch for every prefill
+        that completed this step). The usual termination rules apply
+        when the token lands there (max_new_tokens=1 must return exactly
+        one token, an EOS straight out of prefill must stop
+        generation)."""
         res, req = slot.res, slot.req
         self._register_prefix(slot)
         if not res.ttft:                 # _prefill_chunk stamps pre-scatter
             res.ttft = time.perf_counter() - req.arrival_t
-        first = self._sample_one(slot, logits)
-        res.new_tokens.append(first)
-        self._deltas.append((req.uid, first))
-        slot.prefilling = False
-        self._maybe_finish(slot, time.perf_counter())
+        self._pending_first.append((slot, logits))
 
     def _register_prefix(self, slot: "_Slot") -> None:
         """Paged hook: register completed full blocks for prefix reuse."""
@@ -667,7 +947,8 @@ class PagedInferenceEngine(InferenceEngine):
                  num_blocks: Optional[int] = None,
                  prefix_cache: bool = True,
                  chunk_tokens: Optional[int] = None,
-                 step_token_budget: Optional[int] = None):
+                 step_token_budget: Optional[int] = None,
+                 decode_burst: int = 1):
         if not supports_paged(cfg):
             raise ValueError(f"{cfg.name}: family/attention has no paged path")
         if max_seq % block_size:
@@ -684,7 +965,8 @@ class PagedInferenceEngine(InferenceEngine):
         self.prompt_tokens = 0
         super().__init__(cfg, params, backend, max_seq, seed, fns,
                          chunk_tokens=chunk_tokens,
-                         step_token_budget=step_token_budget)
+                         step_token_budget=step_token_budget,
+                         decode_burst=decode_burst)
 
     # -- hooks ----------------------------------------------------------
     def _make_slot(self) -> _PagedSlot:
@@ -693,6 +975,11 @@ class PagedInferenceEngine(InferenceEngine):
     def _init_cache(self):
         return init_paged_cache(self.cfg, self.num_blocks, self.block_size,
                                 self._kv_dtype)
+
+    def _init_dstate(self):
+        # per-row block tables ride in the device state so the fused
+        # decode never re-stages them from host
+        return init_device_state(self.max_batch, self.blocks_per_seq)
 
     def _compile(self) -> PagedCompiledFns:
         return compile_paged_fns(self.cfg, self.backend, self.max_seq,
@@ -704,19 +991,21 @@ class PagedInferenceEngine(InferenceEngine):
         self._scatter = self.fns.scatter
         self._decode = self.fns.decode
         self._copy = self.fns.copy
+        self._bind_fused()
 
     def _chunkable(self) -> bool:
         # the paged prefill is ALWAYS a chunk-append (gather/compute/
         # scatter); chunk_tokens only bounds how much one pass covers
         return self.chunk_tokens is not None
 
-    def _run_decode(self, tokens: np.ndarray, pos: np.ndarray):
-        tables = np.zeros((self.max_batch, self.blocks_per_seq), np.int32)
-        for i, s in enumerate(self._slots):
-            if not s.done and s.table is not None:
-                tables[i] = s.table
-        return self._decode(self.params, jnp.asarray(tokens), self.cache,
-                            jnp.asarray(tables), jnp.asarray(pos))
+    def _stack_tables(self, pend, nb: int):
+        """Sync each activating slot's (possibly extension-rewritten)
+        block table into the device state alongside its first token —
+        the one point every mid-prefill table edit funnels through."""
+        t = np.zeros((nb, self.blocks_per_seq), np.int32)
+        for j, (slot, _) in enumerate(pend):
+            t[j] = slot.table
+        return jnp.asarray(t)
 
     # -- capacity -------------------------------------------------------
     def kv_free_frac(self) -> float:

@@ -59,7 +59,8 @@ class ReplicaPool:
                  max_seq: int = 256, seed: int = 0, paged="auto",
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  chunk_tokens: Optional[int] = None,
-                 step_token_budget: Optional[int] = None):
+                 step_token_budget: Optional[int] = None,
+                 decode_burst: int = 1):
         self.models = models
         self.reg = registry
         self.max_seq = max_seq
@@ -70,9 +71,12 @@ class ReplicaPool:
         self.block_size = block_size
         # continuous-batching knobs threaded into every spun engine:
         # prefill chunk bound + per-step token budget (None: whole-prompt
-        # prefill / unbounded step, the pre-chunking behavior)
+        # prefill / unbounded step, the pre-chunking behavior), plus the
+        # opt-in decode-burst depth (K fused decode iterations per step
+        # when no prefill backlog is pending; 1 = stepwise)
         self.chunk_tokens = chunk_tokens
         self.step_token_budget = step_token_budget
+        self.decode_burst = decode_burst
         self._replicas: Dict[_Key, List[InferenceEngine]] = {
             (m, b): [] for m in models for b in registry.backends}
         self._params: Dict[str, object] = {}       # warm weights per model
@@ -215,7 +219,8 @@ class ReplicaPool:
                   seed=self.seed + 101 * (len(reps) + 1),
                   fns=self._code[key],
                   chunk_tokens=self.chunk_tokens,
-                  step_token_budget=self.step_token_budget)
+                  step_token_budget=self.step_token_budget,
+                  decode_burst=self.decode_burst)
         if use_paged:
             eng = PagedInferenceEngine(cfg, self._params[model],
                                        BACKENDS[backend],

@@ -1,4 +1,18 @@
-"""Token sampling: greedy / temperature / top-k / top-p (nucleus)."""
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+Two entry points share the same math:
+
+  * ``sample``      — one ``SamplingParams`` applied to a (B, V) batch;
+    python-level branching on the static params (the host-side path).
+  * ``sample_rows`` — PER-ROW params over a (B, V) batch with greedy and
+    stochastic rows unified under masks, vmapped so the whole mixed
+    batch samples in ONE device dispatch. This is the fused in-step
+    sampler of the decode hot path (serving/engine.py): the params live
+    in stacked device-resident buffers and the logits never reach the
+    host. Row ``i`` with key ``k_i`` draws exactly the token
+    ``sample(logits[i:i+1], params_i, k_i)`` would — the engine's
+    per-request PRNG streams are unchanged by the fusion.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -34,3 +48,52 @@ def sample(logits: jnp.ndarray, params: SamplingParams, key) -> jnp.ndarray:
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def _sample_row(logits: jnp.ndarray, temp, top_k, top_p, key) -> jnp.ndarray:
+    """One row of ``sample_rows``: (V,) logits + traced per-row params.
+
+    Mirrors ``sample`` op for op, with the static python branches turned
+    into masks (``top_k == 0`` / ``top_p == 1.0`` / ``temp <= 0`` select
+    the untouched logits or the argmax), so the fused sampler is
+    token-for-token equivalent to the host path it replaces."""
+    V = logits.shape[-1]
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temp > 0.0, temp, 1.0)
+    sl = logits / safe_t
+    # one descending sort serves both filters: top-k thresholds at the
+    # k-th largest, and masking values below it touches only a SUFFIX of
+    # the sorted row — so the filtered row is still sorted and top-p can
+    # reuse it without a second sort
+    desc = jnp.sort(sl)[::-1]
+    kth = desc[jnp.clip(top_k - 1, 0, V - 1)]
+    sl = jnp.where((top_k > 0) & (sl < kth), -jnp.inf, sl)
+    sd = jnp.where((top_k > 0) & (desc < kth), -jnp.inf, desc)
+    # top-p over the (already top-k-filtered) logits
+    probs = jax.nn.softmax(sd)
+    cutoff_idx = jnp.sum(jnp.cumsum(probs) < top_p)
+    cutoff = sd[jnp.clip(cutoff_idx, 0, V - 1)]
+    sl = jnp.where((top_p < 1.0) & (sl < cutoff), -jnp.inf, sl)
+    # same draw the host path makes: categorical over a (1, V) row
+    tok = jax.random.categorical(key, sl[None], axis=-1)[0].astype(jnp.int32)
+    return jnp.where(temp > 0.0, tok, greedy_tok)
+
+
+def sample_rows(logits: jnp.ndarray, temps: jnp.ndarray, top_ks: jnp.ndarray,
+                top_ps: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sampling over a batch: logits (B, V), temps/top_ks/top_ps
+    (B,), keys (B, 2) per-row PRNG keys -> (B,) int32. Greedy rows
+    (temp <= 0) never consume their key.
+
+    An all-greedy batch (the common serving case) short-circuits to one
+    argmax under ``lax.cond`` — the sort/cumsum machinery of the
+    stochastic path never executes, keeping the fused decode step as
+    cheap as a pure-greedy sampler when nothing draws."""
+    def stochastic(_):
+        return jax.vmap(_sample_row)(logits, temps, top_ks, top_ps, keys)
+
+    def all_greedy(_):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return jax.lax.cond(jnp.any(temps > 0.0), stochastic, all_greedy,
+                        operand=None)

@@ -1,0 +1,282 @@
+"""Device-resident decode hot path: fused sample-in-step, decode bursts,
+and the transfer/retrace guards.
+
+The acceptance bar: the fused in-step sampler draws token-for-token what
+the host-side per-request sampler drew (greedy + seeded stochastic,
+across batch compositions), a K-deep decode burst emits exactly the
+stepwise token streams, the steady-state decode step moves ONLY token
+ids across the host boundary (no logits materialization), and ``step()``
+never silently retraces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.models import init_model
+from repro.serving import (InferenceEngine, PagedInferenceEngine, Request,
+                           SamplingParams, get_backend)
+from repro.serving.sampling import sample, sample_rows
+
+SMOL = "smollm-360m"
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = reduced_f32(SMOL)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params, get_backend("trt")
+
+
+def _reqs(cfg, lengths, max_new=6, seed=3, **kw):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i, tokens=list(rng.randint(0, cfg.vocab_size, L)),
+                    sampling=SamplingParams(max_new_tokens=max_new, **kw))
+            for i, L in enumerate(lengths)]
+
+
+# ---------------------------------------------------------------------------
+# fused sampler == host sampler (the PR-4 per-request path)
+
+
+def test_sample_rows_matches_host_sampler_per_row():
+    # every row of one fused dispatch must draw exactly the token the
+    # host-side sample(logits_row[None], sp, key) path drew — greedy and
+    # stochastic rows mixed, top-k/top-p on and off
+    rng = np.random.RandomState(0)
+    sps = [SamplingParams(),
+           SamplingParams(temperature=1.0),
+           SamplingParams(temperature=0.7, top_k=5),
+           SamplingParams(temperature=1.3, top_p=0.8),
+           SamplingParams(temperature=1.0, top_k=8, top_p=0.9),
+           SamplingParams(temperature=0.0, top_k=4),
+           SamplingParams(temperature=2.0, top_k=1),
+           SamplingParams(temperature=0.5, top_p=0.5)]
+    logits = jnp.asarray(rng.randn(len(sps), 41).astype(np.float32) * 3)
+    base = jax.random.PRNGKey(7)
+    keys = jnp.stack([jax.random.fold_in(base, i) for i in range(len(sps))])
+    host = [int(sample(logits[i][None], sp, keys[i])[0])
+            for i, sp in enumerate(sps)]
+    fused = sample_rows(
+        logits,
+        jnp.asarray([sp.temperature for sp in sps], jnp.float32),
+        jnp.asarray([sp.top_k for sp in sps], jnp.int32),
+        jnp.asarray([sp.top_p for sp in sps], jnp.float32), keys)
+    assert host == list(np.asarray(fused))
+
+
+def test_fused_streams_independent_of_batch_composition(stack):
+    # the fused sampler keeps the per-uid PRNG stream contract: same
+    # request, same seed -> same tokens whether it runs alone or packed
+    # with different neighbours (and regardless of its slot row)
+    cfg, params, bk = stack
+    sp = SamplingParams(temperature=1.0, top_k=8, max_new_tokens=8)
+    rng = np.random.RandomState(9)
+    pa = list(rng.randint(0, cfg.vocab_size, 16))
+    pb = list(rng.randint(0, cfg.vocab_size, 16))
+    alone = InferenceEngine(cfg, params, bk, max_seq=96).run(
+        [Request(uid=0, tokens=pa, sampling=sp)])[0]
+    batched = {r.uid: r for r in InferenceEngine(
+        cfg, params, bk, max_seq=96).run(
+        [Request(uid=5, tokens=pb,
+                 sampling=SamplingParams(temperature=9.0, max_new_tokens=8)),
+         Request(uid=0, tokens=pa, sampling=sp),
+         Request(uid=7, tokens=pb, sampling=SamplingParams(max_new_tokens=8))]
+    )}
+    assert alone.new_tokens == batched[0].new_tokens
+
+
+# ---------------------------------------------------------------------------
+# burst == stepwise, token for token
+
+
+LENGTHS = [5, 8, 16, 32, 7]
+
+
+def _run(cls, cfg, params, bk, burst, reqs, **kw):
+    eng = cls(cfg, params, bk, max_seq=96, chunk_tokens=8,
+              decode_burst=burst, **kw)
+    return {r.uid: r.new_tokens for r in eng.run(reqs)}, eng
+
+
+@pytest.mark.parametrize("cls,kw", [(InferenceEngine, {}),
+                                    (PagedInferenceEngine,
+                                     {"block_size": 16})])
+def test_burst_matches_stepwise_greedy(stack, cls, kw):
+    cfg, params, bk = stack
+    step, _ = _run(cls, cfg, params, bk, 1, _reqs(cfg, LENGTHS, max_new=10),
+                   **kw)
+    burst, eng = _run(cls, cfg, params, bk, 4,
+                      _reqs(cfg, LENGTHS, max_new=10), **kw)
+    assert step == burst
+    assert eng.fns.trace_counts["fused_burst"] >= 1   # the burst path ran
+
+
+def test_burst_matches_stepwise_seeded_stochastic(stack):
+    cfg, params, bk = stack
+    mk = lambda: _reqs(cfg, LENGTHS, max_new=9, temperature=1.0, top_k=8)
+    step, _ = _run(InferenceEngine, cfg, params, bk, 1, mk())
+    burst, _ = _run(InferenceEngine, cfg, params, bk, 8, mk())
+    assert step == burst
+
+
+def test_burst_respects_eos_on_device(stack):
+    # pick a token the greedy stream emits mid-stream, replay with it as
+    # eos_id: both modes must truncate at the same point and complete
+    cfg, params, bk = stack
+    probe, _ = _run(InferenceEngine, cfg, params, bk, 1,
+                    _reqs(cfg, [16], max_new=10))
+    eos = probe[0][3]
+    cut = probe[0].index(eos)
+    step, _ = _run(InferenceEngine, cfg, params, bk, 1,
+                   _reqs(cfg, [16], max_new=10, eos_id=eos))
+    burst, eng = _run(InferenceEngine, cfg, params, bk, 8,
+                      _reqs(cfg, [16], max_new=10, eos_id=eos))
+    assert step == burst
+    assert len(burst[0]) == cut + 1 and burst[0][-1] == eos
+
+
+def test_burst_deltas_flush_per_burst(stack):
+    # one burst step streams K tokens per active slot through the delta
+    # buffer (the per-step streaming contract, K-deep)
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                          decode_burst=4)
+    for r in _reqs(cfg, [8, 8], max_new=9):
+        eng.submit(r)
+    while eng.has_work():
+        eng.step()
+        deltas = eng.drain_deltas()
+        per_uid = {}
+        for uid, _t in deltas:
+            per_uid[uid] = per_uid.get(uid, 0) + 1
+        assert all(n <= 4 + 1 for n in per_uid.values())  # K (+first token)
+        if per_uid and max(per_uid.values()) > 1:
+            break
+    else:
+        pytest.fail("no burst step produced multi-token deltas")
+    eng.run([])
+
+
+# ---------------------------------------------------------------------------
+# transfer guard: decode moves token ids, never logits
+
+
+def test_decode_step_moves_only_token_ids(stack, monkeypatch):
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8)
+    for r in _reqs(cfg, [16, 8, 5], max_new=16):
+        eng.submit(r)
+    while any(s.prefilling for s in eng._slots) or eng._queue:
+        eng.step()                       # admission + prefill off-guard
+    assert any(not s.done for s in eng._slots)
+
+    pulled = []
+    real_get = jax.device_get
+
+    def spy_get(x):
+        jax.tree_util.tree_map(lambda a: pulled.append(a), x)
+        return real_get(x)
+
+    monkeypatch.setattr(jax, "device_get", spy_get)
+    # any implicit device->host transfer (e.g. np.asarray on the logits)
+    # raises under the guard; the engine's explicit token pull is exempt
+    with jax.transfer_guard_device_to_host("disallow"):
+        with jax.transfer_guard_host_to_device("disallow"):
+            for _ in range(3):
+                eng.step()
+    monkeypatch.undo()
+    assert pulled, "decode steps pulled nothing?"
+    for arr in pulled:
+        assert np.asarray(arr).dtype == np.int32
+        assert np.asarray(arr).size <= eng.max_batch
+    eng.run([])
+
+
+# ---------------------------------------------------------------------------
+# compile-count regression guard: step() must not retrace per step
+
+
+def test_decode_step_does_not_retrace(stack):
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8)
+    eng.run(_reqs(cfg, [8, 5], max_new=12, seed=1))          # warm
+    n0 = eng.fns.trace_counts["fused_step"]
+    assert n0 >= 1
+    # wildly different batch compositions, lengths and sampling params
+    # must all hit the same executable
+    eng.run(_reqs(cfg, [5, 7, 16, 32, 8], max_new=4, seed=2))
+    eng.run(_reqs(cfg, [16], max_new=20, seed=3, temperature=1.0, top_k=4))
+    assert eng.fns.trace_counts["fused_step"] == n0
+
+
+def test_burst_retrace_bounded_per_k(stack):
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                          decode_burst=4)
+    eng.run(_reqs(cfg, [8, 5], max_new=12, seed=1))
+    n0 = eng.fns.trace_counts["fused_burst"]
+    eng.run(_reqs(cfg, [5, 7, 16], max_new=9, seed=2))
+    assert eng.fns.trace_counts["fused_burst"] == n0         # one trace per K
+
+
+# ---------------------------------------------------------------------------
+# batched first-token sampling (the _sample_one slow path is gone)
+
+
+def test_first_tokens_batched_one_dispatch(stack):
+    cfg, params, bk = stack
+    assert not hasattr(InferenceEngine, "_sample_one")
+    assert not hasattr(InferenceEngine, "_sample_batch")
+    # several prompts completing prefill in the SAME step still respect
+    # limits: max_new_tokens=1 returns exactly one token each
+    eng = InferenceEngine(cfg, params, bk, max_seq=96)
+    res = eng.run(_reqs(cfg, [8, 8, 8, 8], max_new=1))
+    assert all(len(r.new_tokens) == 1 and r.completed for r in res)
+
+
+# ---------------------------------------------------------------------------
+# O(1) cancel index
+
+
+def test_cancel_queued_is_tombstoned_o1(stack):
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96)
+    reqs = _reqs(cfg, [8] * (eng.max_batch + 4), max_new=12)
+    for r in reqs:
+        eng.submit(r)
+    victim = reqs[-2]                    # deep in the queue: no deque scan
+    res = eng.cancel(victim.uid)
+    assert res is not None and res.cancelled
+    assert victim.cancelled              # tombstone, swept at admission
+    assert eng.cancel(victim.uid) is None
+    # backlog accounting excludes the tombstone immediately
+    assert eng._queued() == len(reqs) - 1
+    done = {r.uid for r in eng.run([])}
+    assert victim.uid not in done
+    assert done == {r.uid for r in reqs} - {victim.uid}
+    assert not eng._by_uid               # index fully drained
+
+
+def test_cancel_inflight_via_index_frees_blocks(stack):
+    cfg, params, bk = stack
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, block_size=16,
+                               chunk_tokens=8)
+    reqs = _reqs(cfg, [32, 16], max_new=24)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(6):
+        eng.step()
+    assert isinstance(eng._by_uid[0], object) and 0 in eng._by_uid
+    res = eng.cancel(0)
+    assert res is not None and res.cancelled and not res.completed
+    eng.run([])
+    assert eng.pool.num_free + len(eng.prefix) == eng.num_blocks
+    assert not eng._by_uid
+
+
+def test_cancel_unknown_uid_returns_none(stack):
+    cfg, params, bk = stack
+    eng = InferenceEngine(cfg, params, bk, max_seq=96)
+    assert eng.cancel(12345) is None

@@ -201,3 +201,48 @@ def test_ssd_scan_matches_model_chunked():
     y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5, rtol=2e-5)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# kernel-dispatch registry: the Pallas kernels ARE the engine hot path
+
+
+def test_kernel_mode_defaults_to_reference_on_cpu():
+    assert jax.default_backend() != "tpu"
+    assert ops.kernel_mode() == "reference"
+    with ops.kernel_dispatch("interpret"):
+        assert ops.kernel_mode() == "interpret"
+    assert ops.kernel_mode() == "reference"
+    with pytest.raises(ValueError):
+        ops.set_kernel_mode("vulkan")
+
+
+def test_engine_dispatches_pallas_kernels_token_for_token():
+    """A paged engine traced under ``interpret`` dispatch runs the real
+    Pallas kernel bodies for BOTH chunk prefill and decode, and emits
+    exactly the reference trunk's greedy tokens — the contract that lets
+    TPU swap in Mosaic without touching the engine."""
+    import dataclasses
+
+    from repro.configs.registry import ARCHS
+    from repro.models import init_model
+    from repro.serving import (PagedInferenceEngine, Request, SamplingParams,
+                               get_backend)
+    cfg = dataclasses.replace(ARCHS["smollm-360m"].reduced(), dtype="float32")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    bk = get_backend("trt")
+
+    def run(mode, burst=1):
+        rng = np.random.RandomState(3)
+        reqs = [Request(uid=i, tokens=list(rng.randint(0, cfg.vocab_size, L)),
+                        sampling=SamplingParams(max_new_tokens=5))
+                for i, L in enumerate([5, 16, 33])]
+        with ops.kernel_dispatch(mode):        # read at trace time
+            eng = PagedInferenceEngine(cfg, params, bk, max_seq=96,
+                                       block_size=16, chunk_tokens=8,
+                                       decode_burst=burst)
+            return {r.uid: r.new_tokens for r in eng.run(reqs)}
+
+    reference = run("reference")
+    assert run("interpret") == reference
+    assert run("interpret", burst=4) == reference
