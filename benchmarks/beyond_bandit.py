@@ -19,9 +19,10 @@ from repro.core.policies import MultiObjectivePolicy
 from repro.core.router import CAPABILITY
 from repro.core.simulator import ClusterSimulator
 from common import model_pool
+from typing import Optional
 
 
-def run(n_prompts: int = 4000, timer: BenchTimer = None):
+def run(n_prompts: int = 4000, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=13)
     decisions = routers()["hybrid"].route_many([p.text for p in prompts])
     workload = make_workload(prompts, decisions, rate=8.0, seed=13)

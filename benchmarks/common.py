@@ -10,7 +10,7 @@ import json
 import os
 import sys
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -80,7 +80,7 @@ def make_workload(prompts, decisions, rate: float, seed: int = 0):
 
 def run_sim(policy_name: str, profile: OperatorProfile, workload,
             static: bool = False, pool=None, seed: int = 0,
-            sim_cfg: SimConfig = None):
+            sim_cfg: Optional[SimConfig] = None):
     reg = ServiceRegistry(model_pool(pool))
     cfg = sim_cfg or SimConfig(seed=seed, static=static)
     if sim_cfg is None:

@@ -14,9 +14,10 @@ import numpy as np
 
 from common import BenchTimer, corpus, routers, save_result
 from repro.data.benchmarks import TIERS
+from typing import Optional
 
 
-def run(n_prompts: int = 1500, timer: BenchTimer = None):
+def run(n_prompts: int = 1500, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=7)
     texts = [p.text for p in prompts]
     gold = Counter(p.complexity for p in prompts)

@@ -21,6 +21,7 @@ import numpy as np
 from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
                     run_sim, save_result)
 from repro.core import ServiceRegistry, SimConfig, SpinConfig
+from typing import Optional
 
 RATES = (10, 50, 100, 300, 1000)
 
@@ -36,7 +37,7 @@ def _steady(rep, span: float):
     return len(done) / (hi - lo), len(done) / len(win), lat
 
 
-def run(timer: BenchTimer = None):
+def run(timer: Optional[BenchTimer] = None):
     rt = routers()["keyword"]
     rows = []
     print("\n== Scalability: offered-load sweep (autoscaled fleet) ==")

@@ -8,11 +8,13 @@ from __future__ import annotations
 
 import time
 
+from typing import Optional
+
 from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
                     run_sim, save_result)
 
 
-def run(n_prompts: int = 1500, timer: BenchTimer = None):
+def run(n_prompts: int = 1500, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=8)
     texts = [p.text for p in prompts]
     rts = routers()

@@ -13,6 +13,8 @@ import time
 from common import ART, BenchTimer, save_result
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import get_config_for_shape
+from typing import Optional
+
 from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS, \
     analytic_memory_bytes
 
@@ -48,7 +50,7 @@ def load_rows(mesh: str = "pod16x16"):
     return rows
 
 
-def run(timer: BenchTimer = None):
+def run(timer: Optional[BenchTimer] = None):
     t0 = time.perf_counter()
     rows = load_rows()
     print("\n== Roofline baselines (single pod, 256 chips; seconds/step) ==")

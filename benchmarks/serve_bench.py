@@ -28,6 +28,7 @@ from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.scoring import PROFILES
 from repro.data.benchmarks import generate_corpus
+from repro.obs import write_metrics_dump
 
 POOL = ("smollm-360m", "phi3-medium-14b", "command-r-plus-104b")
 
@@ -104,6 +105,10 @@ def main():
     ap.add_argument("--rate", type=float, default=0.0,
                     help="open-loop arrival rate (rps); 0 = 3x serial tput")
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--metrics-dump", default="BENCH_serve_metrics.prom",
+                    help="Prometheus exposition path for the concurrent "
+                         "plane's registry ('' disables); events and "
+                         "spans land beside it as .jsonl siblings")
     args = ap.parse_args()
 
     prompts = generate_corpus(max(args.requests, 64),
@@ -150,6 +155,19 @@ def main():
         "serial": serial, "concurrent": conc, "throughput_ratio": ratio,
         "orch_scale_ups": len(ups), "orch_scale_to_zeros": len(zeros),
         "requests": len(prompts), "max_new_tokens": args.max_new_tokens}
+    if args.metrics_dump and gw.obs is not None:
+        # registry-side tails for the same run (quantiles from the
+        # log-bucketed histograms, vs the exact percentiles above)
+        reg = gw.obs.registry
+        payload["registry_quantiles"] = {
+            m: {"ttft_p95_s": reg.quantile("ttft_s", m, 0.95),
+                "itl_p95_s": reg.quantile("itl_s", m, 0.95),
+                "e2e_p95_s": reg.quantile("e2e_s", m, 0.95)}
+            for m in reg.labels("ttft_s")}
+        dumped = write_metrics_dump(args.metrics_dump, reg,
+                                    events=gw.obs.events,
+                                    tracer=gw.obs.tracer)
+        print(f"metrics dump: {', '.join(dumped)}")
     save_result("serve_bench", payload)
     path = save_bench("serve", payload)
     print(f"bench artifact: {path}")

@@ -16,11 +16,12 @@ from common import (BenchTimer, DEFAULT_MODEL, PROFILES, corpus,
                     make_workload, run_sim, save_result)
 from repro.core import KeywordRouter
 from repro.data.benchmarks import BENCHMARK_STATS
+from typing import Optional
 
 PAPER = {k: v["base_success"] for k, v in BENCHMARK_STATS.items()}
 
 
-def run(n_prompts: int = 2000, timer: BenchTimer = None):
+def run(n_prompts: int = 2000, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=1)
     decisions = KeywordRouter().route_many([p.text for p in prompts])
     workload = make_workload(prompts, decisions, rate=6.0, seed=1)

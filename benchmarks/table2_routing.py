@@ -10,11 +10,13 @@ import time
 
 import numpy as np
 
+from typing import Optional
+
 from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
                     run_sim, save_result)
 
 
-def run(n_prompts: int = 1500, timer: BenchTimer = None):
+def run(n_prompts: int = 1500, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=2)
     texts = [p.text for p in prompts]
     gold = [p.complexity for p in prompts]

@@ -12,13 +12,14 @@ import time
 from common import (BenchTimer, PROFILES, corpus, make_workload, routers,
                     run_sim, save_result)
 from repro.core import routing_efficiency
+from typing import Optional
 
 PAPER = {"random": dict(acc=78.4, lat=63.1, cost=0.020),
          "latency_only": dict(acc=82.9, lat=48.6, cost=0.017),
          "multi_objective": dict(acc=88.3, lat=42.5, cost=0.015)}
 
 
-def run(n_prompts: int = 1500, timer: BenchTimer = None):
+def run(n_prompts: int = 1500, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=3)
     decisions = routers()["hybrid"].route_many([p.text for p in prompts])
     workload = make_workload(prompts, decisions, rate=6.0, seed=3)

@@ -18,6 +18,7 @@ from common import (BenchTimer, DEFAULT_MODEL, PROFILES, corpus,
 from repro.core import SimConfig, SpinConfig
 from repro.core.costmodel import instance_cost
 from repro.serving.backend import BACKENDS
+from typing import Optional
 
 PAPER = {"static": dict(cost=0.021, recovery=45),
          "ps_base": dict(cost=0.016, recovery=12),
@@ -36,7 +37,7 @@ def _recovery_s(mode: str) -> float:
     return SpinConfig().tick_s * 0.5 + ic.warm_start_s
 
 
-def run(n_prompts: int = 1500, timer: BenchTimer = None):
+def run(n_prompts: int = 1500, timer: Optional[BenchTimer] = None):
     prompts = corpus(n_prompts, seed=4)
     decisions = routers()["hybrid"].route_many([p.text for p in prompts])
     # bursty-with-idle traffic (the regime scale-to-zero exists for):

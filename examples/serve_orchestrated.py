@@ -32,6 +32,17 @@ from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
 from repro.data.benchmarks import generate_corpus
+from repro.obs import write_metrics_dump
+
+
+def _dump(frontend, path):
+    """--metrics-dump: write the exposition + events + spans artifacts."""
+    if not path or getattr(frontend, "obs", None) is None:
+        return
+    obs = frontend.obs
+    paths = write_metrics_dump(path, obs.registry, events=obs.events,
+                               tracer=obs.tracer)
+    print(f"metrics dump: {', '.join(paths)}")
 
 
 def _smol_pool():
@@ -131,6 +142,16 @@ def smoke(args):
     assert r.completed and len(r.new_tokens) == 6 and r.cold_start_s > 0
     print(f"facade      ok: completed via {r.model}/{r.backend} "
           f"(cold_start={r.cold_start_s:.2f}s)")
+    # observability: every completed request carries a full lifecycle
+    # span, and the registry answers per-service tail quantiles live
+    reg = fe.obs.registry
+    assert reg.quantile("ttft_s", "smollm-360m", 0.95) > 0
+    done = [s for s in fe.obs.tracer.finished if s.outcome in
+            ("stop", "length")]
+    assert done and all(s.complete() for s in done)
+    print(f"obs         ok: {len(done)} complete spans, ttft p95="
+          f"{reg.quantile('ttft_s', 'smollm-360m', 0.95):.3f}s")
+    _dump(fe, args.metrics_dump)
     print("\nAPI v2 smoke: all surfaces pass")
 
 
@@ -151,6 +172,9 @@ def main():
                     help="fast CI gate over the public API surface "
                          "(streaming, sessions, priorities, cancel, "
                          "sync facade)")
+    ap.add_argument("--metrics-dump", default="",
+                    help="write Prometheus exposition to PATH plus "
+                         "PATH.events.jsonl and PATH.spans.jsonl")
     args = ap.parse_args()
 
     if args.smoke:
@@ -209,6 +233,7 @@ def main():
         print("\nlive Spin decisions (Algorithm 1 on real engines):")
         for e in gw.orch_events:
             print(f"  {e}")
+    _dump(gw, args.metrics_dump)       # Gateway proxies .obs too
 
 
 if __name__ == "__main__":

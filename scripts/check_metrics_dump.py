@@ -1,0 +1,56 @@
+"""CI gate over a --metrics-dump artifact set.
+
+Asserts the observability plane actually observed a serve run:
+
+  * the Prometheus exposition has NON-ZERO ``ttft_s`` and ``itl_s``
+    histogram counts (per-request lifecycle tracing fired);
+  * the event log records at least one capacity decision (a ``scale``
+    event from the replica pool or an ``orch`` event from Algorithm 1).
+
+Usage: python scripts/check_metrics_dump.py PATH
+       (expects PATH and PATH.events.jsonl as written by
+        ``write_metrics_dump`` / ``--metrics-dump``)
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def hist_count(text: str, metric: str) -> int:
+    """Total observations across every label of ``metric``."""
+    pat = re.compile(rf"^repro_{metric}_count(?:\{{[^}}]*\}})? (\d+)$")
+    return sum(int(m.group(1)) for ln in text.splitlines()
+               if (m := pat.match(ln)))
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    path = sys.argv[1]
+    text = open(path).read()
+    failures = []
+    for metric in ("ttft_s", "itl_s"):
+        n = hist_count(text, metric)
+        status = "ok" if n > 0 else "MISSING"
+        print(f"{metric:12s} observations: {n:6d}  [{status}]")
+        if n == 0:
+            failures.append(f"{metric} histogram is empty")
+    events = [json.loads(ln)
+              for ln in open(path + ".events.jsonl") if ln.strip()]
+    scale = [e for e in events if e["event"] in ("scale", "orch")]
+    print(f"{'scale/orch':12s} events:       {len(scale):6d}  "
+          f"[{'ok' if scale else 'MISSING'}]")
+    if not scale:
+        failures.append("no scale/orch capacity decision in the event log")
+    if failures:
+        print("FAIL: " + "; ".join(failures))
+        return 1
+    print("metrics dump: all observability gates pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

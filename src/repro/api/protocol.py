@@ -67,6 +67,10 @@ class Usage:
     completion_tokens: int = 0
     cold_start_s: float = 0.0
     prefill_chunks: int = 0
+    # lifecycle-span phase durations (from the request's trace span;
+    # 0.0 when tracing is off or the phase never happened)
+    queue_wait_s: float = 0.0
+    decode_s: float = 0.0
 
 
 @dataclass(frozen=True)

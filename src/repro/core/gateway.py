@@ -42,6 +42,7 @@ from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES, OperatorProfile
 from repro.core.telemetry import Telemetry
 from repro.data.tokenizer import ByteTokenizer
+from repro.obs import Observability
 from repro.serving import (GenResult, ReplicaPool, Request, RequestScheduler,
                            SamplingParams, SchedulerConfig)
 
@@ -82,6 +83,12 @@ class GatewayConfig:
     # admission of freshly arrived prompts by up to K-1 decode tokens.
     decode_burst: int = 1
     autoscale: bool = True                     # run Algorithm 1 inline
+    # observability plane: metrics registry + request tracing + event
+    # log, shared by the scheduler, the pool and every spun engine. All
+    # hooks are host-side bookkeeping on code paths that already ran —
+    # zero new device->host syncs (the PR-5 transfer-guard contract
+    # holds with metrics on), so the default is on.
+    metrics: bool = True
     result_retention: int = 256                # bounded finished-result buffer
     session_retention: int = 1024              # LRU bound on live sessions
 
@@ -160,7 +167,9 @@ class ServeFrontend:
         self.policy: SelectionPolicy = cfg.policy_cls(
             self.registry, cfg.seed, require_capacity=False)
         self.profile = cfg.profile
-        self.telemetry = Telemetry()
+        self.obs = Observability() if cfg.metrics else None
+        self.telemetry = Telemetry(
+            registry=self.obs.registry if self.obs is not None else None)
         self.tok = ByteTokenizer()
         self.max_seq = cfg.max_seq
         self.spin = cfg.spin or SpinConfig()
@@ -168,9 +177,10 @@ class ServeFrontend:
                                 seed=cfg.seed, paged=cfg.paged,
                                 chunk_tokens=cfg.chunk_tokens,
                                 step_token_budget=cfg.step_token_budget,
-                                decode_burst=cfg.decode_burst)
+                                decode_burst=cfg.decode_burst, obs=self.obs)
         self.scheduler = RequestScheduler(self.pool, self.registry,
-                                          self.telemetry, cfg.sched)
+                                          self.telemetry, cfg.sched,
+                                          obs=self.obs)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
                                  scale_cb=self.pool.scale)
         self.orch_events: List[OrchEvent] = []
@@ -229,6 +239,8 @@ class ServeFrontend:
             tokens = sess.tokens + tokens
         uid = self._uid
         self._uid += 1
+        if self.obs is not None:
+            self.obs.tracer.on_submit(uid, model, backend, now)
         ereq = Request(uid=uid, arrival_t=now, tokens=tokens,
                        sampling=request.sampling or
                        SamplingParams(max_new_tokens=request.max_new_tokens),
@@ -258,7 +270,12 @@ class ServeFrontend:
             before = {m: self.registry.model_replicas(m)
                       for m in self.registry.models}
             for m, target in self.orch.tick(now).items():
-                self.orch_events.append(OrchEvent(now, m, before[m], target))
+                ev = OrchEvent(now, m, before[m], target)
+                self.orch_events.append(ev)
+                if self.obs is not None:
+                    self.obs.events.append("orch", t=now, model=m,
+                                           before=ev.before,
+                                           target=ev.target, kind=ev.kind)
             self._next_tick = now + self.spin.tick_s
         finished = self.scheduler.step(now)
         for uid, token in self.scheduler.drain_deltas():
@@ -388,11 +405,18 @@ class ServeFrontend:
         cold = sum(d for label, d in
                    self.pool.cold_starts[info.cold_mark:]
                    if label.startswith(svc))
+        # every terminal resolution passes through here exactly once
+        # (shed-at-submit included), so this is where the span closes
+        span = (self.obs.tracer.on_finish(res.uid, time.perf_counter(),
+                                          reason)
+                if self.obs is not None else None)
         usage = Usage(prompt_tokens=res.prompt_len,
                       cached_tokens=res.cached_tokens,
                       completion_tokens=len(res.new_tokens),
                       cold_start_s=cold,
-                      prefill_chunks=res.prefill_chunks)
+                      prefill_chunks=res.prefill_chunks,
+                      queue_wait_s=span.queue_wait_s if span else 0.0,
+                      decode_s=span.decode_s if span else 0.0)
         return CompletionResponse(
             uid=res.uid, prompt=info.request.prompt, model=info.model,
             backend=info.backend, tier=info.tier,
@@ -434,7 +458,7 @@ class Gateway:
                  profile: OperatorProfile = PROFILES["balanced"],
                  backends: Tuple[str, ...] = ("trt",),
                  max_seq: int = 256, seed: int = 0,
-                 cost_configs: Dict[str, ModelConfig] = None,
+                 cost_configs: Optional[Dict[str, ModelConfig]] = None,
                  sched: Optional[SchedulerConfig] = None, paged="auto",
                  chunk_tokens: Optional[int] = 64,
                  step_token_budget: Optional[int] = 256,
@@ -458,6 +482,7 @@ class Gateway:
     pool = property(lambda self: self.frontend.pool)
     scheduler = property(lambda self: self.frontend.scheduler)
     cold_starts = property(lambda self: self.frontend.cold_starts)
+    obs = property(lambda self: self.frontend.obs)
 
     # -- request path ("Pick" -> serve) -------------------------------------
     def handle(self, text: str, max_new_tokens: int = 16,

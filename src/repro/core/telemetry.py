@@ -3,19 +3,32 @@
 Feeds Algorithm 1 (request rate + average latency over a window, default
 w = 5 min) and the score normalizers (historical latency/cost bounds).
 Works on either real wall-clock (gateway) or simulated time (simulator).
+
+Bridged to the observability plane (``repro.obs``): built with a
+``MetricsRegistry``, every latency sample also lands in a per-model
+``service_latency_s`` histogram and every gauge write mirrors into a
+registry gauge — so the SAME feed Algorithm 1 ticks on is exported via
+``--metrics-dump`` and queryable as quantiles.  ``latency_quantile``
+answers p50/p95/p99 over the telemetry window (exact, from the windowed
+samples), which is the signal the self-tuning control loops consume
+where ``avg_latency`` alone would hide tail collapse.
 """
 from __future__ import annotations
 
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
-from typing import Deque, Dict, Tuple
+from typing import TYPE_CHECKING, Deque, Dict, Optional, Tuple
+
+if TYPE_CHECKING:                                  # import cycle guard only
+    from repro.obs import MetricsRegistry
 
 WINDOW_S = 300.0   # paper: w = 5 min
 
 
 class Telemetry:
-    def __init__(self, window_s: float = WINDOW_S):
+    def __init__(self, window_s: float = WINDOW_S,
+                 registry: Optional["MetricsRegistry"] = None):
         self.window_s = window_s
+        self.registry = registry
         self._requests: Dict[str, Deque[float]] = defaultdict(deque)
         self._latency: Dict[str, Deque[Tuple[float, float]]] = defaultdict(deque)
         self._last_seen: Dict[str, float] = {}
@@ -25,10 +38,15 @@ class Telemetry:
     def record_request(self, model: str, t: float) -> None:
         self._requests[model].append(t)
         self._last_seen[model] = t
+        if self.registry is not None:
+            self.registry.counter("requests", model).inc()
         self._gc(model, t)
 
     def record_latency(self, model: str, t: float, latency_s: float) -> None:
         self._latency[model].append((t, latency_s))
+        if self.registry is not None:
+            self.registry.histogram("service_latency_s",
+                                    model).observe(latency_s)
         self._gc(model, t)
 
     def record_gauge(self, model: str, name: str, t: float,
@@ -36,8 +54,10 @@ class Telemetry:
         """Point-in-time service gauge (e.g. ``kv_pressure``,
         ``kv_hit_rate`` from the paged serve plane). Last write wins."""
         self._gauges[(model, name)] = (t, value)
+        if self.registry is not None:
+            self.registry.gauge(name, model).set(value, stamp=t)
 
-    def gauge(self, model: str, name: str, now: float = None,
+    def gauge(self, model: str, name: str, now: Optional[float] = None,
               default: float = 0.0) -> float:
         """Latest gauge value; stale readings (older than the telemetry
         window) fall back to ``default`` when ``now`` is given."""
@@ -75,6 +95,29 @@ class Telemetry:
         if not ql:
             return default
         return sum(v for _, v in ql) / len(ql)
+
+    def latency_quantile(self, model: str, now: float, q: float = 0.95,
+                         default: float = 1.0) -> float:
+        """Latency quantile over the telemetry window (exact, linear
+        interpolation over the windowed samples) — ``p95_latency`` is
+        the tail signal the self-tuning serve plane targets where the
+        window AVERAGE hides queueing collapse."""
+        self._gc(model, now)
+        ql = self._latency[model]
+        if not ql:
+            return default
+        vals = sorted(v for _, v in ql)
+        if len(vals) == 1:
+            return vals[0]
+        pos = q * (len(vals) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(vals) - 1)
+        return vals[lo] + (vals[hi] - vals[lo]) * (pos - lo)
+
+    def p95_latency(self, model: str, now: float,
+                    default: float = 1.0) -> float:
+        """GetP95Latency(m): the Algorithm-1-adjacent tail query."""
+        return self.latency_quantile(model, now, 0.95, default)
 
     def idle_time(self, model: str, now: float) -> float:
         """IdleTime(m): seconds since the last request."""

@@ -37,6 +37,7 @@ from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
 from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
+from repro.obs import write_metrics_dump
 from repro.serving import SchedulerConfig
 from repro.data.benchmarks import generate_corpus
 
@@ -80,6 +81,26 @@ def _print_results(results, wall, args, mode):
               f"{sum(r.completed for r in rs):3d}/{len(rs)}")
 
 
+def _dump_metrics(frontend, path: str) -> None:
+    """--metrics-dump: write the observability artifact set (Prometheus
+    exposition + decision events + request spans) and print the tail
+    quantiles the registry answers live."""
+    obs = frontend.obs
+    if not path or obs is None:
+        return
+    reg = obs.registry
+    print("\nper-service latency quantiles (from the metrics registry):")
+    for label in reg.labels("ttft_s"):
+        p50 = reg.quantile("ttft_s", label, 0.5)
+        p95 = reg.quantile("ttft_s", label, 0.95)
+        print(f"  {label:22s} ttft p50={p50:.3f}s p95={p95:.3f}s  "
+              f"itl p95={reg.quantile('itl_s', label, 0.95):.4f}s  "
+              f"e2e p95={reg.quantile('e2e_s', label, 0.95):.3f}s")
+    paths = write_metrics_dump(path, reg, events=obs.events,
+                               tracer=obs.tracer)
+    print("metrics dump: " + ", ".join(paths))
+
+
 def run_serial(pool, args) -> None:
     gw = Gateway(pool, router=build_router(args.router),
                  profile=PROFILES[args.profile], max_seq=96)
@@ -94,6 +115,7 @@ def run_serial(pool, args) -> None:
     print("\nlifecycle events (cold/warm starts):")
     for name, secs in gw.cold_starts:
         print(f"  {name:40s} {secs:6.2f}s")
+    _dump_metrics(gw.frontend, args.metrics_dump)
 
 
 def run_concurrent(pool, args) -> None:
@@ -128,6 +150,7 @@ def run_concurrent(pool, args) -> None:
     print("orchestrator decisions (Algorithm 1, live):")
     for e in gw.orch_events:
         print(f"  {e}")
+    _dump_metrics(gw, args.metrics_dump)
 
 
 def main() -> None:
@@ -158,6 +181,10 @@ def main() -> None:
                          "throughput knob for offline traffic, bounds "
                          "cancel/deadline latency by K tokens) "
                          "(--concurrent)")
+    ap.add_argument("--metrics-dump", default="",
+                    help="write Prometheus exposition to PATH plus "
+                         "PATH.events.jsonl (scale/shed/orch decisions) "
+                         "and PATH.spans.jsonl (request lifecycles)")
     args = ap.parse_args()
 
     pool = {}

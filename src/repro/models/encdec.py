@@ -74,7 +74,7 @@ def encode(params: Params, cfg: ModelConfig, src_embeds: jnp.ndarray, *,
 
 
 def encdec_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
-                   src_embeds: jnp.ndarray = None, q_chunk: int = 512,
+                   src_embeds: Optional[jnp.ndarray] = None, q_chunk: int = 512,
                    remat: bool = True, return_hidden: bool = False,
                    **_) -> Tuple[jnp.ndarray, jnp.ndarray]:
     enc = encode(params, cfg, src_embeds, q_chunk=q_chunk, remat=remat)
@@ -102,7 +102,7 @@ def encdec_forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
 
 
 def encdec_prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
-                   cache_len: int, *, src_embeds: jnp.ndarray = None,
+                   cache_len: int, *, src_embeds: Optional[jnp.ndarray] = None,
                    q_chunk: int = 512, **_) -> Tuple[jnp.ndarray, Params]:
     enc = encode(params, cfg, src_embeds, q_chunk=q_chunk, remat=False)
     h = params["embed"][tokens].astype(_adtype(cfg))

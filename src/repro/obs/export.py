@@ -1,0 +1,121 @@
+"""Exporters: Prometheus-style text exposition + JSONL event/span logs.
+
+``prometheus_text`` renders a ``MetricsRegistry`` snapshot in the
+Prometheus exposition format (counters, gauges, and histograms with
+cumulative ``le`` buckets plus ``_sum``/``_count``, labeled by model) —
+scrape-shaped, so pointing a real collector at a future HTTP frontend is
+a transport problem, not a data-model one.
+
+``EventLog`` is the serve plane's structured decision log: scale-up /
+scale-to-zero decisions from ``Orchestrator.tick()``, shed / preempt /
+cancel / expire events from the scheduler, and cold starts from
+``ReplicaPool`` — each one a dict with a wall timestamp, written out as
+JSON Lines.  This is the record that makes control-loop behavior
+debuggable after the fact.
+
+``write_metrics_dump(path, ...)`` is the one-call artifact writer behind
+``launch/serve.py --metrics-dump`` and the benchmark drivers: exposition
+text at ``path``, events at ``path + ".events.jsonl"``, finished request
+spans at ``path + ".spans.jsonl"``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+
+
+class EventLog:
+    """Bounded structured event log (newest ``maxlen`` kept)."""
+
+    def __init__(self, maxlen: int = 8192):
+        self.events: Deque[dict] = deque(maxlen=maxlen)
+
+    def append(self, event: str, t: Optional[float] = None, **fields) -> None:
+        rec = {"event": event,
+               "t": time.perf_counter() if t is None else t}
+        rec.update(fields)
+        self.events.append(rec)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def of(self, event: str) -> List[dict]:
+        return [e for e in self.events if e["event"] == event]
+
+    def to_jsonl(self) -> str:
+        return "".join(json.dumps(e) + "\n" for e in self.events)
+
+
+def _fmt(v: float) -> str:
+    if v != v:                                     # NaN
+        return "NaN"
+    if v in (float("inf"), float("-inf")):
+        return "+Inf" if v > 0 else "-Inf"
+    return repr(float(v))
+
+
+def _name(name: str) -> str:
+    return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
+
+
+def _label(model: str) -> str:
+    return f'{{model="{model}"}}' if model else ""
+
+
+def prometheus_text(snapshot: dict, prefix: str = "repro_") -> str:
+    """Render a ``MetricsRegistry.snapshot()`` (or a merge of several)
+    as Prometheus text exposition."""
+    lines: List[str] = []
+    by_name: Dict[str, list] = {}
+    for (name, label), v in sorted(snapshot.get("counters", {}).items()):
+        by_name.setdefault(("counter", name), []).append((label, v))
+    for (name, label), (_t, v) in sorted(snapshot.get("gauges", {}).items()):
+        by_name.setdefault(("gauge", name), []).append((label, v))
+    for (kind, name), rows in sorted(by_name.items()):
+        metric = prefix + _name(name)
+        lines.append(f"# TYPE {metric} {kind}")
+        for label, v in rows:
+            lines.append(f"{metric}{_label(label)} {_fmt(v)}")
+    hists = snapshot.get("histograms", {})
+    for (name, label) in sorted(hists):
+        h = hists[(name, label)]
+        metric = prefix + _name(name)
+        if not any(ln.startswith(f"# TYPE {metric} ") for ln in lines):
+            lines.append(f"# TYPE {metric} histogram")
+        lab = f'model="{label}",' if label else ""
+        acc = 0
+        for bound, c in zip(list(h["bounds"]) + [math.inf], h["counts"]):
+            acc += c
+            lines.append(f'{metric}_bucket{{{lab}le="{_fmt(bound)}"}} {acc}')
+        lines.append(f"{metric}_sum{_label(label)} {_fmt(h['sum'])}")
+        lines.append(f"{metric}_count{_label(label)} {h['count']}")
+    return "\n".join(lines) + "\n"
+
+
+def write_metrics_dump(path: str, registry: MetricsRegistry,
+                       events: Optional[EventLog] = None,
+                       tracer: Optional[Tracer] = None) -> List[str]:
+    """Write the full observability artifact set. Returns the paths
+    written: exposition text at ``path``, plus ``.events.jsonl`` /
+    ``.spans.jsonl`` siblings when an event log / tracer is given."""
+    paths = [path]
+    with open(path, "w") as f:
+        f.write(prometheus_text(registry.snapshot()))
+    if events is not None:
+        p = path + ".events.jsonl"
+        with open(p, "w") as f:
+            f.write(events.to_jsonl())
+        paths.append(p)
+    if tracer is not None:
+        p = path + ".spans.jsonl"
+        with open(p, "w") as f:
+            for rec in tracer.records():
+                f.write(json.dumps(rec) + "\n")
+        paths.append(p)
+    return paths

@@ -1,0 +1,232 @@
+"""Labeled metrics registry for the serve plane.
+
+Three instrument kinds, keyed by ``(name, label)`` where the label is
+the model/service the sample belongs to:
+
+  * ``Counter``   — monotone event count (sheds, preemptions, tokens);
+  * ``Gauge``     — last-written point-in-time value, stamped with a
+    monotonic set-time so merged snapshots keep the NEWEST write
+    (max-by-timestamp is associative, unlike raw last-write-wins);
+  * ``Histogram`` — fixed LOG-SPACED buckets over (1e-5, 1e4] with
+    p50/p95/p99 quantile queries.  ``observe`` is one ``bisect`` plus a
+    handful of float ops, cheap enough to run on the host side of every
+    engine step; quantiles log-interpolate inside the landing bucket
+    and clamp to the observed min/max, so the error is bounded by one
+    bucket ratio (``10**(1/per_decade)``).
+
+Snapshots are plain dicts of plain data and MERGE: counters and bucket
+counts add, gauges keep the newest stamp, histogram min/max fold — all
+associative and commutative, so ``ReplicaPool`` can aggregate per-engine
+snapshots in any order and a multi-process collector could do the same.
+"""
+from __future__ import annotations
+
+import math
+import time
+from bisect import bisect_left
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+def log_buckets(lo: float = 1e-5, hi: float = 1e4,
+                per_decade: int = 10) -> Tuple[float, ...]:
+    """Upper bounds of log-spaced buckets covering (lo, hi]. Values at or
+    below ``lo`` land in the first bucket; above ``hi`` in the +Inf
+    overflow bucket (implicit: one more count slot than bounds)."""
+    bounds: List[float] = []
+    n = int(round(math.log10(hi / lo) * per_decade))
+    for i in range(n + 1):
+        bounds.append(lo * 10.0 ** (i / per_decade))
+    return tuple(bounds)
+
+
+DEFAULT_BUCKETS = log_buckets()
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last write wins, with a monotonic stamp so merges are associative
+    (newest stamp survives regardless of merge order)."""
+    __slots__ = ("value", "stamp")
+
+    def __init__(self) -> None:
+        self.value = 0.0
+        self.stamp = 0.0
+
+    def set(self, v: float, stamp: Optional[float] = None) -> None:
+        self.value = float(v)
+        self.stamp = time.perf_counter() if stamp is None else stamp
+
+
+class Histogram:
+    """Fixed log-spaced buckets + running sum/count/min/max."""
+    __slots__ = ("bounds", "counts", "sum", "count", "min", "max")
+
+    def __init__(self, bounds: Tuple[float, ...] = DEFAULT_BUCKETS) -> None:
+        self.bounds = bounds
+        self.counts = [0] * (len(bounds) + 1)   # +1: +Inf overflow
+        self.sum = 0.0
+        self.count = 0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        self.counts[bisect_left(self.bounds, v)] += 1
+        self.sum += v
+        self.count += 1
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """q in [0, 1]. Log-interpolated within the landing bucket and
+        clamped to the observed [min, max]; 0.0 when empty."""
+        if not self.count:
+            return 0.0
+        return _quantile(self.bounds, self.counts, self.count, q,
+                         self.min, self.max)
+
+    def snapshot(self) -> dict:
+        return {"bounds": tuple(self.bounds), "counts": tuple(self.counts),
+                "sum": self.sum, "count": self.count,
+                "min": self.min, "max": self.max}
+
+
+def _quantile(bounds, counts, total, q, vmin, vmax) -> float:
+    target = q * total
+    acc = 0.0
+    for i, c in enumerate(counts):
+        if c == 0:
+            continue
+        if acc + c >= target:
+            # log-interpolate inside bucket i: (lo_i, hi_i]
+            hi = bounds[i] if i < len(bounds) else vmax
+            lo = bounds[i - 1] if i > 0 else min(vmin, hi)
+            frac = (target - acc) / c
+            if lo > 0 and hi > 0:
+                est = lo * (hi / lo) ** frac
+            else:                        # non-positive samples: linear
+                est = lo + (hi - lo) * frac
+            return min(max(est, vmin), vmax)
+        acc += c
+    return vmax
+
+
+def snapshot_quantile(h: dict, q: float) -> float:
+    """Quantile query over a histogram SNAPSHOT (e.g. after a merge)."""
+    if not h["count"]:
+        return 0.0
+    return _quantile(h["bounds"], h["counts"], h["count"], q,
+                     h["min"], h["max"])
+
+
+_Key = Tuple[str, str]
+
+
+class MetricsRegistry:
+    """Get-or-create instruments keyed by ``(name, label)``."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[_Key, Counter] = {}
+        self._gauges: Dict[_Key, Gauge] = {}
+        self._hists: Dict[_Key, Histogram] = {}
+
+    # -- instruments -----------------------------------------------------
+    def counter(self, name: str, label: str = "") -> Counter:
+        key = (name, label)
+        c = self._counters.get(key)
+        if c is None:
+            c = self._counters[key] = Counter()
+        return c
+
+    def gauge(self, name: str, label: str = "") -> Gauge:
+        key = (name, label)
+        g = self._gauges.get(key)
+        if g is None:
+            g = self._gauges[key] = Gauge()
+        return g
+
+    def histogram(self, name: str, label: str = "",
+                  bounds: Tuple[float, ...] = DEFAULT_BUCKETS) -> Histogram:
+        key = (name, label)
+        h = self._hists.get(key)
+        if h is None:
+            h = self._hists[key] = Histogram(bounds)
+        return h
+
+    # -- queries ---------------------------------------------------------
+    def quantile(self, name: str, label: str = "", q: float = 0.95) -> float:
+        h = self._hists.get((name, label))
+        return h.quantile(q) if h is not None else 0.0
+
+    def value(self, name: str, label: str = "") -> float:
+        """Counter or gauge value (0.0 when absent)."""
+        c = self._counters.get((name, label))
+        if c is not None:
+            return c.value
+        g = self._gauges.get((name, label))
+        return g.value if g is not None else 0.0
+
+    def labels(self, name: str) -> List[str]:
+        return sorted({lb for (n, lb) in
+                       list(self._counters) + list(self._gauges)
+                       + list(self._hists) if n == name})
+
+    # -- snapshots -------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "counters": {k: c.value for k, c in self._counters.items()},
+            "gauges": {k: (g.stamp, g.value) for k, g in self._gauges.items()},
+            "histograms": {k: h.snapshot() for k, h in self._hists.items()},
+        }
+
+    @staticmethod
+    def merge(a: dict, b: dict) -> dict:
+        """Associative + commutative snapshot merge: counters and bucket
+        counts add, gauges keep the newest (stamp, value), histogram
+        min/max fold."""
+        out = {"counters": dict(a["counters"]),
+               "gauges": dict(a["gauges"]),
+               "histograms": {k: dict(v) for k, v in a["histograms"].items()}}
+        for k, v in b["counters"].items():
+            out["counters"][k] = out["counters"].get(k, 0.0) + v
+        for k, sv in b["gauges"].items():
+            cur = out["gauges"].get(k)
+            out["gauges"][k] = sv if cur is None else max(cur, sv)
+        for k, h in b["histograms"].items():
+            cur = out["histograms"].get(k)
+            if cur is None:
+                out["histograms"][k] = dict(h)
+            else:
+                if cur["bounds"] != h["bounds"]:
+                    raise ValueError(f"bucket mismatch merging {k}")
+                out["histograms"][k] = {
+                    "bounds": cur["bounds"],
+                    "counts": tuple(x + y for x, y in
+                                    zip(cur["counts"], h["counts"])),
+                    "sum": cur["sum"] + h["sum"],
+                    "count": cur["count"] + h["count"],
+                    "min": min(cur["min"], h["min"]),
+                    "max": max(cur["max"], h["max"])}
+        return out
+
+    @classmethod
+    def merge_all(cls, snaps: Iterable[dict]) -> dict:
+        out: Optional[dict] = None
+        for s in snaps:
+            out = s if out is None else cls.merge(out, s)
+        return out if out is not None else {
+            "counters": {}, "gauges": {}, "histograms": {}}

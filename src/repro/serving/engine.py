@@ -427,12 +427,18 @@ class InferenceEngine:
                  max_seq: int = 512, seed: int = 0, fns=None,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1):
+                 decode_burst: int = 1, obs=None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
         self.max_seq = max_seq
         self.max_batch = backend.max_batch
+        # observability (repro.obs.EngineObs): shared metrics registry +
+        # request tracer + this engine's service labels. None (the
+        # default for standalone engines) keeps every hook a single
+        # attribute test — and every hook is HOST-side bookkeeping on
+        # values the step already pulled, never a new device sync.
+        self._obs = obs
         # 0 means "whole prompt" (the launcher's CLI convention); a raw 0
         # reaching the chunk sizing would stall the cursor forever
         self.chunk_tokens = max(1, chunk_tokens) if chunk_tokens else None
@@ -506,7 +512,8 @@ class InferenceEngine:
         self._queue.append(req)
         self._by_uid[req.uid] = req
 
-    def cancel(self, uid: int, now: float = None) -> Optional[GenResult]:
+    def cancel(self, uid: int, now: Optional[float] = None
+               ) -> Optional[GenResult]:
         """Abort a request wherever it is, O(1) at any occupancy via the
         uid index. Queued: tombstoned (skipped at admission) before ever
         touching a slot. In a slot (mid-prefill or mid-decode): the slot
@@ -579,6 +586,7 @@ class InferenceEngine:
 
     def step(self) -> List[GenResult]:
         """One token-budget iteration: admit, prefill chunks, decode."""
+        t0 = time.perf_counter() if self._obs is not None else 0.0
         self._deltas = []                 # this step's streaming increments
         self._pending_first = []
         # 1) admission (a paged engine may refuse — out of KV blocks — in
@@ -626,7 +634,25 @@ class InferenceEngine:
                 self._decode_burst(active)
             else:
                 self._decode_once(active)
+        if self._obs is not None:
+            self._record_step(t0)
         return self.drain_finished()
+
+    def _record_step(self, t0: float) -> None:
+        """Per-step host-side metrics: step wall time, tokens emitted
+        (decode + first tokens, i.e. this step's delta count), and the
+        fused-fn retrace total surfaced as a gauge (a climbing value
+        under steady traffic is the silent-recompile regression the
+        PR-5 trace-count guard tests for)."""
+        reg, m = self._obs.registry, self._obs.model
+        reg.histogram("engine_step_s", m).observe(time.perf_counter() - t0)
+        ntok = len(self._deltas)
+        reg.histogram("engine_tokens_per_step", m).observe(float(ntok))
+        if ntok:
+            reg.counter("engine_tokens", m).inc(ntok)
+        if self.fns.trace_counts:
+            reg.gauge("engine_retraces", m).set(
+                float(sum(self.fns.trace_counts.values())))
 
     # -- fused decode (device-resident hot path) --------------------------
     def _decode_once(self, active: List[int]) -> None:
@@ -636,12 +662,16 @@ class InferenceEngine:
             self.params, self.cache, self._dstate)
         toks = jax.device_get(nxt)
         t = time.perf_counter()
+        tracer = self._obs.tracer if self._obs is not None else None
         for i in active:
             s = self._slots[i]
             tok = int(toks[i])
+            uid = s.req.uid
             s.res.new_tokens.append(tok)
-            self._deltas.append((s.req.uid, tok))
+            self._deltas.append((uid, tok))
             s.pos += 1
+            if tracer is not None:
+                tracer.on_tokens(uid, t)
             self._maybe_finish(s, t)
 
     def _decode_burst(self, active: List[int]) -> None:
@@ -655,6 +685,7 @@ class InferenceEngine:
         toks, alive, self.cache, self._dstate = self._fused_burst(
             self.params, self.cache, self._dstate, k)
         toks, alive = jax.device_get((toks, alive))
+        counts: Dict[int, int] = {}
         for j in range(k):
             t = time.perf_counter()
             for i in active:
@@ -665,10 +696,23 @@ class InferenceEngine:
                 if s.done or not alive[j, i]:
                     continue
                 tok = int(toks[j, i])
+                uid = s.req.uid
                 s.res.new_tokens.append(tok)
-                self._deltas.append((s.req.uid, tok))
+                self._deltas.append((uid, tok))
                 s.pos += 1
+                counts[uid] = counts.get(uid, 0) + 1
                 self._maybe_finish(s, t)
+        if self._obs is not None:
+            # one tracer call per request per burst: the replay wall
+            # since the request's previous token spreads evenly over its
+            # K accepted tokens (per-iteration replay stamps would report
+            # ~0 ITL for every token after the first)
+            t = time.perf_counter()
+            tracer = self._obs.tracer
+            for uid, n in counts.items():
+                tracer.on_tokens(uid, t, n)
+            self._obs.registry.gauge("engine_burst_depth",
+                                     self._obs.model).set(float(k))
 
     def drain_finished(self) -> List[GenResult]:
         out, self._finished = self._finished, []
@@ -714,11 +758,15 @@ class InferenceEngine:
             self._stack_tables(pend, nb))
         toks = jax.device_get(toks)
         t = time.perf_counter()
+        tracer = self._obs.tracer if self._obs is not None else None
         for j, (slot, _) in enumerate(pend):
             tok = int(toks[j])
+            uid = slot.req.uid
             slot.res.new_tokens.append(tok)
-            self._deltas.append((slot.req.uid, tok))
+            self._deltas.append((uid, tok))
             slot.prefilling = False
+            if tracer is not None:
+                tracer.on_first_token(uid, t)
             self._maybe_finish(slot, t)
 
     def _stack_tables(self, pend, nb: int):
@@ -803,6 +851,13 @@ class InferenceEngine:
             np.int32(-1 if sp.eos_id is None else sp.eos_id),
             np.int32(sp.max_new_tokens), np.int32(filled))
         self._by_uid[req.uid] = slot
+        if self._obs is not None:
+            # admit event: queue wait ends here (a span opens lazily for
+            # requests that never passed a frontend submit)
+            self._obs.tracer.on_admit(req.uid, time.perf_counter(),
+                                      arrival_t=req.arrival_t,
+                                      model=self._obs.model,
+                                      backend=self._obs.backend)
 
     def _begin(self, slot_id: int, req: Request) -> bool:
         prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
@@ -841,6 +896,10 @@ class InferenceEngine:
         slot.filled += n
         slot.pos = slot.filled
         res.prefill_chunks += 1
+        if self._obs is not None:
+            self._obs.tracer.on_chunk(req.uid, time.perf_counter(), n)
+            self._obs.registry.counter("engine_prefill_chunks",
+                                       self._obs.model).inc()
         if rem is not None:
             rem -= n
         if slot.filled >= len(slot.prompt):
@@ -948,7 +1007,7 @@ class PagedInferenceEngine(InferenceEngine):
                  prefix_cache: bool = True,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1):
+                 decode_burst: int = 1, obs=None):
         if not supports_paged(cfg):
             raise ValueError(f"{cfg.name}: family/attention has no paged path")
         if max_seq % block_size:
@@ -966,7 +1025,7 @@ class PagedInferenceEngine(InferenceEngine):
         super().__init__(cfg, params, backend, max_seq, seed, fns,
                          chunk_tokens=chunk_tokens,
                          step_token_budget=step_token_budget,
-                         decode_burst=decode_burst)
+                         decode_burst=decode_burst, obs=obs)
 
     # -- hooks ----------------------------------------------------------
     def _make_slot(self) -> _PagedSlot:

@@ -60,8 +60,9 @@ class ReplicaPool:
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1):
+                 decode_burst: int = 1, obs=None):
         self.models = models
+        self.obs = obs                # Observability bundle (optional)
         self.reg = registry
         self.max_seq = max_seq
         self.seed = seed
@@ -177,7 +178,7 @@ class ReplicaPool:
 
     # -- lifecycle (Orchestrator scale_cb target) -----------------------------
     def scale(self, model: str, backend: str, replicas: int,
-              now: float = None) -> int:
+              now: Optional[float] = None) -> int:
         """Bring the service to ``replicas`` live engines (blocking; real
         spin-up cost is paid inline and measured). Returns the achieved
         replica count — scale-down skips replicas with in-flight work."""
@@ -220,7 +221,9 @@ class ReplicaPool:
                   fns=self._code[key],
                   chunk_tokens=self.chunk_tokens,
                   step_token_budget=self.step_token_budget,
-                  decode_burst=self.decode_burst)
+                  decode_burst=self.decode_burst,
+                  obs=(self.obs.engine_obs(model, backend)
+                       if self.obs is not None else None))
         if use_paged:
             eng = PagedInferenceEngine(cfg, self._params[model],
                                        BACKENDS[backend],
@@ -229,9 +232,13 @@ class ReplicaPool:
             eng = InferenceEngine(cfg, self._params[model], BACKENDS[backend],
                                   **kw)
         # trigger compile/execute of the step functions before the replica
-        # counts as live (the dominant real cold-start cost when cold)
+        # counts as live (the dominant real cold-start cost when cold) —
+        # with obs muted, so compile-bound probe steps never land in the
+        # engine step-duration histograms
+        probe_obs, eng._obs = eng._obs, None
         eng.run([Request(uid=-1, tokens=[1, 2, 3],
                          sampling=SamplingParams(max_new_tokens=2))])
+        eng._obs = probe_obs
         dur = time.perf_counter() - t0
         reps.append(eng)
         entry = self.reg.entry(model, backend)
@@ -242,6 +249,14 @@ class ReplicaPool:
                                       len(reps), kind, dur))
         self.cold_starts.append(
             (f"{model}/{backend}/{'warm' if warm else 'cold'}", dur))
+        if self.obs is not None:
+            self.obs.registry.histogram(
+                "cold_start_s" if not warm else "warm_start_s",
+                model).observe(dur)
+            self.obs.events.append("scale", t=now, model=model,
+                                   backend=backend, before=len(reps) - 1,
+                                   after=len(reps), kind=kind,
+                                   duration_s=dur)
 
     def _spin_down(self, model: str, backend: str, target: int,
                    now: float) -> None:
@@ -261,3 +276,8 @@ class ReplicaPool:
             kind = "zero" if not reps else "down"
             self.events.append(ScaleEvent(now, model, backend, before,
                                           len(reps), kind, 0.0))
+            if self.obs is not None:
+                self.obs.events.append("scale", t=now, model=model,
+                                       backend=backend, before=before,
+                                       after=len(reps), kind=kind,
+                                       duration_s=0.0)

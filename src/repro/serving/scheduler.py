@@ -81,11 +81,12 @@ class SchedStats:
 
 class RequestScheduler:
     def __init__(self, pool: ReplicaPool, registry, telemetry,
-                 cfg: Optional[SchedulerConfig] = None):
+                 cfg: Optional[SchedulerConfig] = None, obs=None):
         self.pool = pool
         self.reg = registry
         self.tel = telemetry
         self.cfg = cfg or SchedulerConfig()
+        self._obs = obs               # Observability bundle (optional)
         self._queues: Dict[_Key, Deque[Request]] = {
             key: deque() for key in pool._replicas}
         # requests resolved OFF the engines (deadline-expired, priority-
@@ -95,9 +96,19 @@ class RequestScheduler:
         self._deltas: List[Tuple[int, int]] = []
         self.stats = SchedStats()
 
+    def _note(self, event: str, model: str, now: Optional[float],
+              **fields) -> None:
+        """Structured decision record: every shed / preempt / expire /
+        cancel lands in the event log AND a per-model counter, so
+        control-loop behavior is reconstructable after the fact."""
+        if self._obs is None:
+            return
+        self._obs.registry.counter("sched_" + event, model).inc()
+        self._obs.events.append(event, t=now, model=model, **fields)
+
     # -- admission ----------------------------------------------------------
     def enqueue(self, model: str, backend: str, req: Request,
-                now: float = None) -> bool:
+                now: Optional[float] = None) -> bool:
         """Admit a routed request. Returns False if shed (queue full and
         nothing of lower priority to evict). When the queue is full but
         holds a LOWER-priority request, that one is evicted instead
@@ -107,7 +118,7 @@ class RequestScheduler:
         self.stats.submitted += 1
         # fast path: nothing waiting and a free slot -> straight in
         if not q and self.pool.free_slots(model, backend) > 0:
-            self._to_engine(key, req)
+            self._to_engine(key, req, now)
             self.stats.dispatched += 1
             return True
         over_tokens = (self.cfg.max_queue_tokens is not None and q and
@@ -117,12 +128,16 @@ class RequestScheduler:
             victims = self._shed_victims(model, backend, q, req)
             if victims is None:
                 self.stats.shed += 1
+                reason = "queue_full"
                 if over_tokens:
                     self.stats.shed_tokens += 1
+                    reason = "queue_tokens"
                 # block-pressure shed = the TIGHTENED bound did it (an
                 # ordinary queue-full shed at max depth is not the pool's)
                 elif len(q) < self.cfg.max_queue_depth:
                     self.stats.shed_blocks += 1
+                    reason = "block_pressure"
+                self._note("shed", model, now, uid=req.uid, reason=reason)
                 return False
             now = time.perf_counter() if now is None else now
             entry = self.reg.entry(model, backend)
@@ -134,6 +149,8 @@ class RequestScheduler:
                 self._reaped.append((key, res))
                 self.stats.shed += 1
                 self.stats.preempted += 1
+                self._note("preempt", model, now, uid=victim.uid,
+                           by=req.uid)
             q.append(req)
             entry.queued = max(0, entry.queued - len(victims) + 1)
             return True
@@ -224,7 +241,7 @@ class RequestScheduler:
 
     # -- cancellation ---------------------------------------------------
     def cancel(self, model: str, backend: str, uid: int,
-               now: float = None) -> Optional[GenResult]:
+               now: Optional[float] = None) -> Optional[GenResult]:
         """Abort ``uid`` on the given service: removed from the admission
         queue, or cancelled mid-flight on whichever replica holds it
         (slot + KV blocks freed immediately). Returns the partial
@@ -241,12 +258,14 @@ class RequestScheduler:
                                 cancelled=True)
                 res.latency = now - r.arrival_t
                 self.stats.cancelled += 1
+                self._note("cancel", model, now, uid=uid, where="queue")
                 return res
         for eng in self.pool.replicas(*key):
             res = eng.cancel(uid, now)
             if res is not None:
                 entry.active_requests = max(0, entry.active_requests - 1)
                 self.stats.cancelled += 1
+                self._note("cancel", model, now, uid=uid, where="engine")
                 return res
         return None
 
@@ -291,7 +310,7 @@ class RequestScheduler:
             while q and self.pool.free_slots(model, backend) > 0:
                 req = q.popleft()
                 entry.queued = max(0, entry.queued - 1)
-                self._to_engine(key, req)
+                self._to_engine(key, req, now)
                 self.stats.dispatched += 1
                 moved += 1
         return moved
@@ -304,9 +323,10 @@ class RequestScheduler:
         res.latency = now - req.arrival_t
         self._reaped.append((key, res))
         self.stats.expired += 1
+        self._note("expire", key[0], now, uid=req.uid)
         return True
 
-    def step(self, now: float = None) -> List[Tuple[_Key, GenResult]]:
+    def step(self, now: Optional[float] = None) -> List[Tuple[_Key, GenResult]]:
         """One serve-loop iteration over the whole pool: admit queued work,
         run ONE batched decode on every engine with work, reap finished."""
         now = time.perf_counter() if now is None else now
@@ -321,8 +341,9 @@ class RequestScheduler:
             entry = self.reg.entry(*key)
             for res in eng.step():
                 entry.active_requests = max(0, entry.active_requests - 1)
-                self.tel.record_latency(key[0], time.perf_counter(),
-                                        res.latency)
+                # stamp with the step's OWN clock: mixing perf_counter
+                # into a simulated `now` skewed the telemetry window
+                self.tel.record_latency(key[0], now, res.latency)
                 self.stats.completed += 1
                 out.append((key, res))
             self._deltas.extend(eng.drain_deltas())
@@ -351,7 +372,13 @@ class RequestScheduler:
         return out
 
     # -- internals -------------------------------------------------------
-    def _to_engine(self, key: _Key, req: Request) -> None:
+    def _to_engine(self, key: _Key, req: Request,
+                   now: Optional[float] = None) -> None:
+        if self._obs is not None:
+            t = time.perf_counter() if now is None else now
+            self._obs.registry.histogram(
+                "sched_queue_wait_s",
+                key[0]).observe(max(0.0, t - req.arrival_t))
         # cache-affine, token-aware, pack-first placement: prefer the
         # replica whose radix cache already holds this request's prefix
         # (its prefill mostly vanishes), then the one with the smallest

@@ -1,14 +1,14 @@
 """Training losses: next-token cross entropy (+ z-loss) + MoE aux."""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
 def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
-                  mask: jnp.ndarray = None, z_loss: float = 0.0
+                  mask: Optional[jnp.ndarray] = None, z_loss: float = 0.0
                   ) -> Tuple[jnp.ndarray, dict]:
     """logits: (B, S, V) f32; labels: (B, S) int32; mask: (B, S) {0,1}."""
     logits = logits.astype(jnp.float32)

@@ -15,6 +15,7 @@ import pytest
 
 from conftest import reduced_f32
 from repro.models import init_model
+from repro.obs import Observability
 from repro.serving import (InferenceEngine, PagedInferenceEngine, Request,
                            SamplingParams, get_backend)
 from repro.serving.sampling import sample, sample_rows
@@ -163,9 +164,17 @@ def test_burst_deltas_flush_per_burst(stack):
 # transfer guard: decode moves token ids, never logits
 
 
-def test_decode_step_moves_only_token_ids(stack, monkeypatch):
+@pytest.mark.parametrize("instrumented", [False, True],
+                         ids=["plain", "with-obs"])
+def test_decode_step_moves_only_token_ids(stack, monkeypatch, instrumented):
+    # with-obs: the PR-6 observability hooks (metrics registry +
+    # lifecycle tracer) are host-side bookkeeping on the existing replay
+    # path — tracing ON must not add a single device->host transfer
     cfg, params, bk = stack
-    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8)
+    obs = (Observability().engine_obs(SMOL, "trt") if instrumented
+           else None)
+    eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                          obs=obs)
     for r in _reqs(cfg, [16, 8, 5], max_new=16):
         eng.submit(r)
     while any(s.prefilling for s in eng._slots) or eng._queue:
@@ -191,6 +200,11 @@ def test_decode_step_moves_only_token_ids(stack, monkeypatch):
     for arr in pulled:
         assert np.asarray(arr).dtype == np.int32
         assert np.asarray(arr).size <= eng.max_batch
+    if instrumented:
+        # the guarded steps really were traced (ITL per decode token,
+        # step-duration histogram) — from host stamps only
+        assert obs.registry.histogram("itl_s", SMOL).count > 0
+        assert obs.registry.histogram("engine_step_s", SMOL).count >= 3
     eng.run([])
 
 

@@ -1,0 +1,487 @@
+"""Observability plane: quantile registry, snapshot merges, lifecycle
+tracing, exporters, and the telemetry bridge.
+
+Pure host-side tests (no jax, no engines): the numeric contracts are
+checked against numpy oracles — histogram quantiles within one log-bucket
+ratio of ``np.percentile``, merged snapshots exactly equal to the
+histogram fed the concatenated stream, telemetry's windowed quantiles
+exact. Plus the PR-6 satellite regressions: the scheduler stamps
+telemetry with the step's OWN clock under simulated time, and every
+terminal resolution closes a span.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.telemetry import Telemetry
+from repro.obs import (DEFAULT_BUCKETS, EventLog, Histogram, MetricsRegistry,
+                       Observability, Tracer, log_buckets, prometheus_text,
+                       snapshot_quantile, write_metrics_dump)
+from repro.serving.engine import GenResult, Request
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import RequestScheduler, SchedulerConfig
+
+# one log-spaced bucket spans this ratio; quantile error is bounded by it
+BUCKET_RATIO = 10 ** (1 / 10)
+
+
+# ---------------------------------------------------------------------------
+# histogram quantiles vs the numpy oracle
+
+
+def test_log_buckets_cover_decades():
+    b = log_buckets(1e-5, 1e4, 10)
+    assert b[0] == pytest.approx(1e-5) and b[-1] == pytest.approx(1e4)
+    assert len(b) == 91
+    ratios = [b[i + 1] / b[i] for i in range(len(b) - 1)]
+    assert all(r == pytest.approx(BUCKET_RATIO, rel=1e-9) for r in ratios)
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "bimodal"])
+@pytest.mark.parametrize("q", [0.5, 0.95, 0.99])
+def test_quantile_within_one_bucket_of_numpy(dist, q):
+    seeds = {"lognormal": 100, "uniform": 200, "bimodal": 300}
+    rng = np.random.RandomState(seeds[dist] + int(q * 100))
+    if dist == "lognormal":
+        xs = rng.lognormal(mean=-3.0, sigma=1.2, size=4000)
+    elif dist == "uniform":
+        xs = rng.uniform(1e-3, 2.0, size=4000)
+    else:
+        # unequal modes so no tested quantile falls in the density gap
+        # between them (where any bucketed estimate is ill-defined)
+        xs = np.concatenate([rng.lognormal(-5, 0.3, 2600),
+                             rng.lognormal(0, 0.3, 1400)])
+    h = Histogram()
+    for x in xs:
+        h.observe(float(x))
+    oracle = float(np.percentile(xs, 100 * q))
+    est = h.quantile(q)
+    # log-interpolation inside the landing bucket: within one bucket
+    # ratio of the exact percentile (small slack for interpolation)
+    assert oracle / (BUCKET_RATIO * 1.05) <= est <= \
+        oracle * BUCKET_RATIO * 1.05
+
+
+def test_quantile_clamps_to_observed_range():
+    h = Histogram()
+    for v in (0.2, 0.21, 0.22):
+        h.observe(v)
+    assert h.quantile(0.0) >= 0.2
+    assert h.quantile(1.0) <= 0.22
+    assert h.min == 0.2 and h.max == 0.22
+
+
+def test_quantile_empty_and_overflow():
+    h = Histogram()
+    assert h.quantile(0.95) == 0.0
+    h.observe(1e6)                        # beyond the last bound -> +Inf slot
+    assert h.counts[-1] == 1
+    assert h.quantile(0.5) == 1e6         # clamped to observed max
+
+
+def test_histogram_mean_and_count():
+    h = Histogram()
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    assert h.count == 3
+    assert h.mean == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# snapshot merge: associative, commutative, equal to the combined stream
+
+
+def _filled_registry(seed, n=300):
+    rng = np.random.RandomState(seed)
+    r = MetricsRegistry()
+    for m in ("a", "b"):
+        r.counter("reqs", m).inc(int(rng.randint(1, 50)))
+        r.gauge("load", m).set(float(rng.rand()), stamp=float(rng.rand()))
+        h = r.histogram("lat", m)
+        for x in rng.lognormal(-2, 1, n):
+            h.observe(float(x))
+    return r
+
+
+def _assert_snap_equal(a, b):
+    """Snapshot equality up to float-addition rounding in histogram
+    ``sum`` (counters and bucket counts are integers-in-floats and must
+    match exactly; gauges must match exactly)."""
+    assert a["counters"] == b["counters"]
+    assert a["gauges"] == b["gauges"]
+    assert a["histograms"].keys() == b["histograms"].keys()
+    for k, ha in a["histograms"].items():
+        hb = b["histograms"][k]
+        for f in ("bounds", "counts", "count", "min", "max"):
+            assert ha[f] == hb[f], (k, f)
+        assert ha["sum"] == pytest.approx(hb["sum"])
+
+
+def test_merge_associative_and_commutative():
+    s1, s2, s3 = (_filled_registry(i).snapshot() for i in (1, 2, 3))
+    left = MetricsRegistry.merge(MetricsRegistry.merge(s1, s2), s3)
+    right = MetricsRegistry.merge(s1, MetricsRegistry.merge(s2, s3))
+    _assert_snap_equal(left, right)
+    _assert_snap_equal(MetricsRegistry.merge(s1, s2),
+                       MetricsRegistry.merge(s2, s1))
+    _assert_snap_equal(MetricsRegistry.merge_all([s1, s2, s3]), left)
+
+
+def test_merge_equals_combined_stream():
+    rng = np.random.RandomState(7)
+    xs = rng.lognormal(-2, 1, 500)
+    ha, hb, hall = Histogram(), Histogram(), Histogram()
+    for i, x in enumerate(xs):
+        (ha if i % 2 else hb).observe(float(x))
+        hall.observe(float(x))
+    sa = {"counters": {}, "gauges": {}, "histograms": {("l", "m"):
+                                                       ha.snapshot()}}
+    sb = {"counters": {}, "gauges": {}, "histograms": {("l", "m"):
+                                                       hb.snapshot()}}
+    merged = MetricsRegistry.merge(sa, sb)["histograms"][("l", "m")]
+    full = hall.snapshot()
+    for f in ("bounds", "counts", "count", "min", "max"):
+        assert merged[f] == full[f]
+    assert merged["sum"] == pytest.approx(full["sum"])
+    for q in (0.5, 0.95, 0.99):
+        assert snapshot_quantile(merged, q) == hall.quantile(q)
+
+
+def test_merge_gauge_keeps_newest_stamp():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.gauge("g", "m").set(1.0, stamp=10.0)
+    b.gauge("g", "m").set(2.0, stamp=5.0)           # older write
+    merged = MetricsRegistry.merge(a.snapshot(), b.snapshot())
+    assert merged["gauges"][("g", "m")] == (10.0, 1.0)
+
+
+def test_merge_bucket_mismatch_raises():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.histogram("h", "m").observe(0.1)
+    b.histogram("h", "m", bounds=log_buckets(per_decade=5)).observe(0.1)
+    with pytest.raises(ValueError, match="bucket mismatch"):
+        MetricsRegistry.merge(a.snapshot(), b.snapshot())
+
+
+def test_registry_queries():
+    r = _filled_registry(11)
+    assert r.value("reqs", "a") > 0
+    assert r.value("missing", "a") == 0.0
+    assert r.labels("lat") == ["a", "b"]
+    assert r.quantile("lat", "a", 0.95) > 0
+    assert r.quantile("lat", "zzz", 0.95) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# lifecycle tracing
+
+
+def test_span_full_lifecycle_and_derived_phases():
+    tr = Tracer(MetricsRegistry())
+    tr.on_submit(1, "m", "trt", t=100.0)
+    tr.on_admit(1, t=100.5)
+    tr.on_chunk(1, t=100.6, n=32)
+    tr.on_chunk(1, t=100.7, n=16)
+    tr.on_first_token(1, t=100.8)
+    tr.on_tokens(1, t=101.0, n=2)
+    span = tr.on_finish(1, t=101.2, outcome="length")
+    assert span.complete()
+    assert span.queue_wait_s == pytest.approx(0.5)
+    assert span.prefill_s == pytest.approx(0.3)
+    assert span.ttft_s == pytest.approx(0.8)
+    assert span.decode_s == pytest.approx(0.4)
+    assert span.e2e_s == pytest.approx(1.2)
+    assert span.chunks == 2 and span.chunk_tokens == 48
+    assert span.decode_tokens == 3
+    kinds = [e[0] for e in span.events]
+    assert kinds == ["submit", "admit", "chunk", "chunk", "first_token",
+                     "decode", "finish"]
+    reg = tr.registry
+    assert reg.histogram("queue_wait_s", "m").count == 1
+    assert reg.histogram("ttft_s", "m").count == 1
+    assert reg.histogram("e2e_s", "m").count == 1
+
+
+def test_burst_itl_spread_over_k_tokens():
+    reg = MetricsRegistry()
+    tr = Tracer(reg)
+    tr.on_submit(1, "m", "trt", t=0.0)
+    tr.on_admit(1, t=0.0)
+    tr.on_first_token(1, t=1.0)
+    tr.on_tokens(1, t=1.4, n=4)            # one burst replay: 0.4s wall
+    h = reg.histogram("itl_s", "m")
+    assert h.count == 4                    # K observations...
+    assert h.mean == pytest.approx(0.1)    # ...each the per-token share
+
+
+def test_shed_before_admit_span_incomplete():
+    tr = Tracer(MetricsRegistry())
+    tr.on_submit(2, "m", "trt", t=5.0)
+    span = tr.on_finish(2, t=5.1, outcome="shed")
+    assert span is not None and not span.complete()
+    assert span.queue_wait_s == 0.0 and span.ttft_s == 0.0
+    assert span.e2e_s == pytest.approx(0.1)
+
+
+def test_tracer_ignores_warmup_probes_and_bounds_ring():
+    tr = Tracer(max_spans=4)
+    tr.on_submit(-1, "m", "trt", t=0.0)
+    tr.on_admit(-1, t=0.0)
+    assert tr.on_finish(-1, t=1.0, outcome="length") is None
+    for uid in range(8):
+        tr.on_submit(uid, "m", "trt", t=float(uid))
+        tr.on_finish(uid, t=uid + 0.5, outcome="length")
+    assert len(tr) == 4                    # ring keeps the newest
+    assert [s.uid for s in tr.finished] == [4, 5, 6, 7]
+
+
+def test_tracer_lazy_open_at_admit():
+    # standalone engines (no frontend) open spans at admission
+    tr = Tracer(MetricsRegistry())
+    tr.on_admit(9, t=2.0, arrival_t=1.5, model="m", backend="trt")
+    span = tr.on_finish(9, t=3.0, outcome="length")
+    assert span.queue_wait_s == pytest.approx(0.5)
+    assert span.model == "m"
+
+
+# ---------------------------------------------------------------------------
+# exporters
+
+
+def test_prometheus_text_cumulative_buckets():
+    r = MetricsRegistry()
+    r.counter("requests", "m").inc(3)
+    r.gauge("load", "m").set(0.5, stamp=1.0)
+    h = r.histogram("lat", "m")
+    for v in (0.01, 0.02, 5000.0):
+        h.observe(v)
+    text = prometheus_text(r.snapshot())
+    assert '# TYPE repro_requests counter' in text
+    assert 'repro_requests{model="m"} 3.0' in text
+    assert 'repro_load{model="m"} 0.5' in text
+    assert '# TYPE repro_lat histogram' in text
+    assert 'repro_lat_bucket{model="m",le="+Inf"} 3' in text
+    assert 'repro_lat_count{model="m"} 3' in text
+    # bucket counts are CUMULATIVE and non-decreasing
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+              if ln.startswith("repro_lat_bucket")]
+    assert counts == sorted(counts) and counts[-1] == 3
+    assert f'repro_lat_sum{{model="m"}} {repr(5000.03)}' in text
+
+
+def test_event_log_bounded_and_jsonl():
+    log = EventLog(maxlen=3)
+    for i in range(5):
+        log.append("shed", t=float(i), model="m", uid=i)
+    assert len(log) == 3
+    assert [e["uid"] for e in log.of("shed")] == [2, 3, 4]
+    lines = [json.loads(ln) for ln in log.to_jsonl().splitlines()]
+    assert lines[0] == {"event": "shed", "t": 2.0, "model": "m", "uid": 2}
+
+
+def test_write_metrics_dump_artifacts(tmp_path):
+    obs = Observability()
+    obs.registry.histogram("ttft_s", "m").observe(0.1)
+    obs.events.append("scale", t=1.0, model="m", kind="spin-cold")
+    obs.tracer.on_submit(1, "m", "trt", t=0.0)
+    obs.tracer.on_finish(1, t=1.0, outcome="length")
+    path = str(tmp_path / "metrics.prom")
+    paths = write_metrics_dump(path, obs.registry, events=obs.events,
+                               tracer=obs.tracer)
+    assert paths == [path, path + ".events.jsonl", path + ".spans.jsonl"]
+    assert "repro_ttft_s_bucket" in open(path).read()
+    events = [json.loads(ln) for ln in open(paths[1])]
+    assert events[0]["kind"] == "spin-cold"
+    spans = [json.loads(ln) for ln in open(paths[2])]
+    assert spans[0]["uid"] == 1 and spans[0]["outcome"] == "length"
+
+
+# ---------------------------------------------------------------------------
+# telemetry bridge + windowed quantiles
+
+
+def test_telemetry_latency_quantile_exact():
+    tel = Telemetry(window_s=100.0)
+    rng = np.random.RandomState(3)
+    xs = rng.lognormal(-1, 0.7, 200)
+    for i, x in enumerate(xs):
+        tel.record_latency("m", float(i) * 0.1, float(x))
+    now = 20.0
+    for q in (0.5, 0.95, 0.99):
+        assert tel.latency_quantile("m", now, q) == \
+            pytest.approx(float(np.percentile(xs, 100 * q)))
+    assert tel.p95_latency("m", now) == tel.latency_quantile("m", now, 0.95)
+    assert tel.latency_quantile("zzz", now) == 1.0        # default
+
+
+def test_telemetry_quantile_windowed():
+    tel = Telemetry(window_s=10.0)
+    tel.record_latency("m", 0.0, 100.0)          # will age out
+    tel.record_latency("m", 50.0, 1.0)
+    assert tel.latency_quantile("m", 51.0, 0.99) == 1.0
+
+
+def test_telemetry_mirrors_into_registry():
+    reg = MetricsRegistry()
+    tel = Telemetry(registry=reg)
+    tel.record_request("m", 1.0)
+    tel.record_latency("m", 1.5, 0.25)
+    tel.record_gauge("m", "kv_pressure", 2.0, 0.7)
+    assert reg.value("requests", "m") == 1.0
+    assert reg.histogram("service_latency_s", "m").count == 1
+    assert reg.value("kv_pressure", "m") == 0.7
+    assert reg.gauge("kv_pressure", "m").stamp == 2.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler clock + event instrumentation (stub plane, no engines)
+
+
+class _Entry:
+    def __init__(self):
+        self.queued = 0
+        self.active_requests = 0
+
+
+class _Reg:
+    backends = ("trt",)
+
+    def __init__(self):
+        self._e = {}
+
+    def entry(self, m, b):
+        return self._e.setdefault((m, b), _Entry())
+
+
+class _Eng:
+    paged = False
+
+    def __init__(self, results=()):
+        self._results = list(results)
+
+    def has_work(self):
+        return bool(self._results)
+
+    def step(self):
+        out, self._results = self._results, []
+        return out
+
+    def drain_deltas(self):
+        return []
+
+    def free_slots(self):
+        return 4
+
+    def pending_tokens(self):
+        return 0
+
+    def prefix_peek(self, req):
+        return 0
+
+    def submit(self, req):
+        pass
+
+    def cancel(self, uid, now=None):
+        return None
+
+
+class _Pool:
+    max_seq = 256
+
+    def __init__(self, eng):
+        self._replicas = {("m", "trt"): [eng]}
+
+    def free_slots(self, m, b):
+        return sum(e.free_slots() for e in self._replicas[(m, b)])
+
+    def replicas(self, m, b):
+        return self._replicas[(m, b)]
+
+    def engines(self):
+        for k, reps in self._replicas.items():
+            for e in reps:
+                yield k, e
+
+    def paged_replicas(self, m, b):
+        return []
+
+    def kv_stats(self, m):
+        return None
+
+    def backlog_tokens(self, m):
+        return 0
+
+    def kv_free_frac(self, m, b):
+        return 1.0
+
+    def kv_bound(self, m, b):
+        return False
+
+    def scale(self, m, b, n, now=None):
+        return n
+
+
+def _req(uid, priority=1, arrival_t=0.0, n_tokens=4):
+    return Request(uid=uid, arrival_t=arrival_t,
+                   tokens=list(range(1, n_tokens + 1)),
+                   sampling=SamplingParams(max_new_tokens=4),
+                   priority=priority)
+
+
+def test_scheduler_latency_stamped_with_simulated_now():
+    # the PR-6 mixed-clock fix: a finish reported during step(now=SIM)
+    # must land in telemetry at SIM, not at time.perf_counter() — the
+    # simulated-time window otherwise never contains its own samples
+    res = GenResult(uid=0, prompt_len=3)
+    res.latency = 0.5
+    tel = Telemetry(window_s=10.0)
+    sched = RequestScheduler(_Pool(_Eng([res])), _Reg(), tel)
+    sim_now = 1_000_000.0                 # far from any real perf_counter
+    sched.step(now=sim_now)
+    t, lat = tel._latency["m"][0]
+    assert t == sim_now and lat == 0.5
+    # and the window query AT simulated time sees the sample
+    assert tel.avg_latency("m", sim_now) == 0.5
+
+
+def test_scheduler_queue_wait_and_shed_instrumented():
+    obs = Observability()
+    eng = _Eng()
+    sched = RequestScheduler(
+        _Pool(eng), _Reg(), Telemetry(),
+        cfg=SchedulerConfig(max_queue_depth=1, spin_on_demand=False),
+        obs=obs)
+    # fast path: free slot -> dispatched at now, queue wait = now-arrival
+    assert sched.enqueue("m", "trt", _req(0, arrival_t=4.0), now=5.0)
+    h = obs.registry.histogram("sched_queue_wait_s", "m")
+    assert h.count == 1 and h.mean == pytest.approx(1.0)
+    eng.free_slots = lambda: 0            # no slots: next ones queue
+    assert sched.enqueue("m", "trt", _req(1), now=5.1)
+    # queue full, equal priority -> shed, counted + logged
+    assert not sched.enqueue("m", "trt", _req(2), now=5.2)
+    assert obs.registry.value("sched_shed", "m") == 1
+    assert obs.events.of("shed")[0]["reason"] == "queue_full"
+    # higher priority evicts the queued low one -> preempt event
+    assert sched.enqueue("m", "trt", _req(3, priority=2), now=5.3)
+    assert obs.registry.value("sched_preempt", "m") == 1
+    assert obs.events.of("preempt")[0] == {
+        "event": "preempt", "t": 5.3, "model": "m", "uid": 1, "by": 3}
+    assert sched.stats.preempted == 1
+
+
+def test_scheduler_expire_event_logged():
+    obs = Observability()
+    eng = _Eng()
+    eng.free_slots = lambda: 0
+    sched = RequestScheduler(
+        _Pool(eng), _Reg(), Telemetry(),
+        cfg=SchedulerConfig(spin_on_demand=False), obs=obs)
+    r = _req(0, arrival_t=0.0)
+    r.deadline_s = 1.0
+    assert sched.enqueue("m", "trt", r, now=0.0)
+    sched.step(now=100.0)                 # way past the deadline
+    assert obs.registry.value("sched_expire", "m") == 1
+    assert obs.events.of("expire")[0]["uid"] == 0
+    assert sched.stats.expired == 1
