@@ -171,8 +171,17 @@ def decode_run(arch: str = "smollm-360m", burst: int = 16,
 
     def mk(c, db, instrumented=False):
         def make():
-            obs = (Observability().engine_obs(cfg.name, backend)
-                   if instrumented else None)
+            obs = None
+            if instrumented:
+                # full bundle: registry + tracer + chip-second ledger +
+                # flight recorder, with a live replica meter attached so
+                # the per-step cost-attribution hook is on the measured
+                # path (same wiring the replica pool performs)
+                bundle = Observability()
+                obs = bundle.engine_obs(cfg.name, backend)
+                obs.meter = bundle.ledger.replica_up(
+                    cfg.name, backend, chips=1, cold_s=0.0,
+                    t=time.perf_counter())
             return c(cfg, params, bk, decode_burst=db, obs=obs, **kw)
         return make
 

@@ -26,7 +26,11 @@ from repro.api import CompletionRequest
 from repro.configs.registry import ARCHS
 from repro.core.gateway import Gateway, ServeFrontend
 from repro.core.orchestrator import SpinConfig
+from repro.core.policies import MultiObjectivePolicy
+from repro.core.registry import ServiceRegistry
+from repro.core.router import KeywordRouter
 from repro.core.scoring import PROFILES
+from repro.core.simulator import ClusterSimulator, SimConfig
 from repro.data.benchmarks import generate_corpus
 from repro.obs import write_metrics_dump
 
@@ -95,7 +99,31 @@ def run_concurrent(prompts, max_new: int, rate: float, seed: int = 0):
                                  default=0),
                orch_events=[str(e) for e in gw.orch_events],
                pool_events=[str(e) for e in gw.pool.events])
-    return out, gw
+    # measured attribution from the chip-second ledger: every completed
+    # response carries its metered slice of device time (Usage.cost_usd)
+    if done and gw.obs is not None:
+        out["cost_per_query_usd"] = float(
+            np.mean([r.usage.cost_usd for r in done]))
+        out["chip_seconds_total"] = float(
+            sum(r.usage.chip_seconds for r in done))
+        out["ledger_conservation_err"] = gw.obs.ledger.conservation_error()
+    return out, gw, arrivals
+
+
+def simulate_cost(prompts, arrivals, seed: int):
+    """Replay the concurrent plane's exact trace through the discrete-event
+    ClusterSimulator and return its cost prediction, so BENCH_serve.json
+    carries measured cost_per_query_usd next to the simulated figure the
+    capacity-planning plane would have quoted for the same workload."""
+    reg = ServiceRegistry({m: ARCHS[m] for m in POOL}, ("trt",))
+    policy = MultiObjectivePolicy(reg, seed=seed, require_capacity=False)
+    router = KeywordRouter()
+    workload = [(float(t), p, router.route(p.text))
+                for t, p in zip(arrivals, prompts)]
+    sim = ClusterSimulator(reg, policy, PROFILES["balanced"],
+                           SimConfig(seed=seed))
+    rep = sim.run(workload)
+    return rep.summary()
 
 
 def main():
@@ -127,7 +155,8 @@ def main():
     rate = args.rate or 3.0 * serial["throughput_rps"]
     print(f"\n-- concurrent plane (ServeFrontend, open-loop Poisson "
           f"@ {rate:.1f} rps) --")
-    conc, gw = run_concurrent(prompts, args.max_new_tokens, rate, args.seed)
+    conc, gw, arrivals = run_concurrent(prompts, args.max_new_tokens, rate,
+                                        args.seed)
     print(f"wall={conc['wall_s']:.1f}s  tput={conc['throughput_rps']:.2f} "
           f"rps  mean_ttft={conc['mean_ttft_s']:.3f}s  "
           f"p95_lat={conc['p95_latency_s']:.3f}s  "
@@ -155,6 +184,22 @@ def main():
         "serial": serial, "concurrent": conc, "throughput_ratio": ratio,
         "orch_scale_ups": len(ups), "orch_scale_to_zeros": len(zeros),
         "requests": len(prompts), "max_new_tokens": args.max_new_tokens}
+
+    # measured vs simulated cost/query for the SAME arrival trace: the
+    # live ledger's attribution next to the planner's prediction
+    sim = simulate_cost(prompts, arrivals, args.seed)
+    measured = conc.get("cost_per_query_usd")
+    payload["cost_attribution"] = {
+        "measured_cost_per_query_usd": measured,
+        "simulated_cost_per_query_usd": sim["attr_cost_per_query_usd"],
+        "ledger_conservation_err": conc.get("ledger_conservation_err"),
+        "simulator": {k: v for k, v in sim.items()
+                      if isinstance(v, (int, float))}}
+    if measured is not None:
+        print(f"\ncost attribution: measured ${measured:.6f}/query "
+              f"(ledger, conservation err "
+              f"{conc.get('ledger_conservation_err', 0.0):.2%}) vs "
+              f"simulated ${sim['attr_cost_per_query_usd']:.6f}/query")
     if args.metrics_dump and gw.obs is not None:
         # registry-side tails for the same run (quantiles from the
         # log-bucketed histograms, vs the exact percentiles above)

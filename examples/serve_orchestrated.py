@@ -95,7 +95,8 @@ def smoke(args):
     Exits non-zero if any contract breaks."""
     fe = ServeFrontend(_smol_pool(), router=KeywordRouter(), max_seq=96,
                        spin=SpinConfig(tick_s=3600.0, max_replicas=1),
-                       paged=True)
+                       paged=True,
+                       flight_record=args.flight_record or None)
     # streaming: token events reproduce the final sequence exactly
     h = fe.submit("sum the numbers 3 5 8", max_new_tokens=6)
     streamed = [ev.token for ev in h.tokens() if ev.kind == "token"]
@@ -151,7 +152,19 @@ def smoke(args):
     assert done and all(s.complete() for s in done)
     print(f"obs         ok: {len(done)} complete spans, ttft p95="
           f"{reg.quantile('ttft_s', 'smollm-360m', 0.95):.3f}s")
+    # cost attribution: every served request carries measured chip-
+    # seconds and the ledger conserves them against the metered pool
+    cost = reg.value("cost_per_query_usd", "smollm-360m")
+    assert cost > 0, "no measured cost per query"
+    assert r2.usage.chip_seconds > 0 and r2.usage.kv_peak_bytes > 0, r2
+    err = fe.obs.ledger.conservation_error()
+    assert err < 0.01, f"chip-second conservation broken: {err:.2%}"
+    print(f"cost        ok: ${cost:.6f}/query measured, "
+          f"conservation err {err:.3%}")
     _dump(fe, args.metrics_dump)
+    if args.flight_record:
+        p = fe.obs.flight.dump("on-demand", t=time.perf_counter())
+        print(f"flight record: {p} ({len(fe.obs.flight.dumps)} dump(s))")
     print("\nAPI v2 smoke: all surfaces pass")
 
 
@@ -175,6 +188,9 @@ def main():
     ap.add_argument("--metrics-dump", default="",
                     help="write Prometheus exposition to PATH plus "
                          "PATH.events.jsonl and PATH.spans.jsonl")
+    ap.add_argument("--flight-record", default="",
+                    help="flight-recorder JSONL sink (anomaly dumps + "
+                         "one on-demand dump at smoke exit)")
     args = ap.parse_args()
 
     if args.smoke:

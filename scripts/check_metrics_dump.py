@@ -5,11 +5,19 @@ Asserts the observability plane actually observed a serve run:
   * the Prometheus exposition has NON-ZERO ``ttft_s`` and ``itl_s``
     histogram counts (per-request lifecycle tracing fired);
   * the event log records at least one capacity decision (a ``scale``
-    event from the replica pool or an ``orch`` event from Algorithm 1).
+    event from the replica pool or an ``orch`` event from Algorithm 1);
+  * the cost attribution plane fired: a nonzero ``cost_per_query_usd``
+    gauge (the chip-second ledger closed at least one request) and
+    nonzero ``kv_pool_bytes`` gauges (resident-memory accounting);
+  * optionally, a flight-record JSONL (second argument) parses and
+    follows the recorder schema: every line is a ``dump`` / ``step`` /
+    ``event`` record with a timestamp, and at least one dump header
+    exists.
 
-Usage: python scripts/check_metrics_dump.py PATH
+Usage: python scripts/check_metrics_dump.py PATH [FLIGHT_JSONL]
        (expects PATH and PATH.events.jsonl as written by
-        ``write_metrics_dump`` / ``--metrics-dump``)
+        ``write_metrics_dump`` / ``--metrics-dump``; FLIGHT_JSONL as
+        written by ``--flight-record``)
 """
 from __future__ import annotations
 
@@ -25,8 +33,47 @@ def hist_count(text: str, metric: str) -> int:
                if (m := pat.match(ln)))
 
 
+def gauge_values(text: str, metric: str) -> list:
+    """Every sample value of a gauge/counter ``metric`` (any labels)."""
+    pat = re.compile(rf"^repro_{metric}(?:\{{[^}}]*\}})? (\S+)$")
+    return [float(m.group(1)) for ln in text.splitlines()
+            if (m := pat.match(ln))]
+
+
+def check_flight(path: str, failures: list) -> None:
+    kinds = {"dump": 0, "step": 0, "event": 0}
+    for i, ln in enumerate(open(path), 1):
+        if not ln.strip():
+            continue
+        try:
+            rec = json.loads(ln)
+        except json.JSONDecodeError:
+            failures.append(f"flight line {i}: not valid JSON")
+            return
+        kind = rec.get("record")
+        if kind not in kinds:
+            failures.append(f"flight line {i}: unknown record {kind!r}")
+            return
+        if not isinstance(rec.get("t"), (int, float)):
+            failures.append(f"flight line {i}: missing timestamp")
+            return
+        if kind == "dump" and "reason" not in rec:
+            failures.append(f"flight line {i}: dump without reason")
+            return
+        if kind == "event" and "event" not in rec:
+            failures.append(f"flight line {i}: event without name")
+            return
+        kinds[kind] += 1
+    print(f"{'flight':12s} records:      "
+          f"{kinds['dump']:3d} dumps / {kinds['step']} steps / "
+          f"{kinds['event']} events  "
+          f"[{'ok' if kinds['dump'] else 'MISSING'}]")
+    if not kinds["dump"]:
+        failures.append("flight record has no dump header")
+
+
 def main() -> int:
-    if len(sys.argv) != 2:
+    if len(sys.argv) not in (2, 3):
         print(__doc__)
         return 2
     path = sys.argv[1]
@@ -38,6 +85,17 @@ def main() -> int:
         print(f"{metric:12s} observations: {n:6d}  [{status}]")
         if n == 0:
             failures.append(f"{metric} histogram is empty")
+    cost = gauge_values(text, "cost_per_query_usd")
+    print(f"{'cost/query':12s} gauges:       {len(cost):6d}  "
+          f"[{'ok' if any(v > 0 for v in cost) else 'MISSING'}]")
+    if not any(v > 0 for v in cost):
+        failures.append("no nonzero cost_per_query_usd gauge "
+                        "(chip-second ledger never closed a request)")
+    kv = gauge_values(text, "kv_pool_bytes")
+    print(f"{'kv bytes':12s} gauges:       {len(kv):6d}  "
+          f"[{'ok' if sum(kv) > 0 else 'MISSING'}]")
+    if sum(kv) <= 0:
+        failures.append("kv_pool_bytes gauges missing or all zero")
     events = [json.loads(ln)
               for ln in open(path + ".events.jsonl") if ln.strip()]
     scale = [e for e in events if e["event"] in ("scale", "orch")]
@@ -45,6 +103,8 @@ def main() -> int:
           f"[{'ok' if scale else 'MISSING'}]")
     if not scale:
         failures.append("no scale/orch capacity decision in the event log")
+    if len(sys.argv) == 3:
+        check_flight(sys.argv[2], failures)
     if failures:
         print("FAIL: " + "; ".join(failures))
         return 1

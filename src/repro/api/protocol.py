@@ -71,6 +71,15 @@ class Usage:
     # 0.0 when tracing is off or the phase never happened)
     queue_wait_s: float = 0.0
     decode_s: float = 0.0
+    # measured cost attribution (chip-second ledger): this request's
+    # share of the engine-step chip-seconds it rode in, priced at
+    # USD_PER_CHIP_HOUR; 0.0 when metrics are off or the request was
+    # shed before ever sharing a step
+    chip_seconds: float = 0.0
+    cost_usd: float = 0.0
+    # peak KV bytes the request held (dense: its slot's cache share;
+    # paged: leased blocks x block nbytes, at quantized width for int8)
+    kv_peak_bytes: int = 0
 
 
 @dataclass(frozen=True)

@@ -37,6 +37,12 @@ MFU_PREFILL = 0.45           # achievable prefill efficiency
 MBU_DECODE = 0.60            # achievable decode memory-bandwidth util
 
 
+def chip_seconds_usd(chip_seconds: float) -> float:
+    """USD for metered chip-seconds at the on-demand rate — the pricing
+    the live ledger (``repro.obs.cost``) and the simulator share."""
+    return chip_seconds * USD_PER_CHIP_HOUR / 3600.0
+
+
 @dataclass(frozen=True)
 class InstanceCost:
     arch: str

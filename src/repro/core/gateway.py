@@ -89,6 +89,11 @@ class GatewayConfig:
     # zero new device->host syncs (the PR-5 transfer-guard contract
     # holds with metrics on), so the default is on.
     metrics: bool = True
+    # anomaly flight recorder JSONL sink: when set, automatic dumps
+    # (shed storm / expiry burst / engine exception) and on-demand
+    # ``obs.flight.dump()`` calls append there. None keeps the ring
+    # in-memory only.
+    flight_record: Optional[str] = None
     result_retention: int = 256                # bounded finished-result buffer
     session_retention: int = 1024              # LRU bound on live sessions
 
@@ -168,6 +173,8 @@ class ServeFrontend:
             self.registry, cfg.seed, require_capacity=False)
         self.profile = cfg.profile
         self.obs = Observability() if cfg.metrics else None
+        if self.obs is not None and cfg.flight_record:
+            self.obs.flight.config.path = cfg.flight_record
         self.telemetry = Telemetry(
             registry=self.obs.registry if self.obs is not None else None)
         self.tok = ByteTokenizer()
@@ -410,13 +417,26 @@ class ServeFrontend:
         span = (self.obs.tracer.on_finish(res.uid, time.perf_counter(),
                                           reason)
                 if self.obs is not None else None)
+        # settle the chip-second ledger: the request's attributed share
+        # becomes its measured cost (None = it never shared a step)
+        chip_s = cost_usd = 0.0
+        if self.obs is not None:
+            closed = self.obs.ledger.close_request(
+                res.uid, info.model,
+                t=span.finish_t if span else time.perf_counter())
+            if closed is not None:
+                chip_s, cost_usd = closed
+            if span is not None:
+                span.chip_seconds, span.cost_usd = chip_s, cost_usd
         usage = Usage(prompt_tokens=res.prompt_len,
                       cached_tokens=res.cached_tokens,
                       completion_tokens=len(res.new_tokens),
                       cold_start_s=cold,
                       prefill_chunks=res.prefill_chunks,
                       queue_wait_s=span.queue_wait_s if span else 0.0,
-                      decode_s=span.decode_s if span else 0.0)
+                      decode_s=span.decode_s if span else 0.0,
+                      chip_seconds=chip_s, cost_usd=cost_usd,
+                      kv_peak_bytes=res.kv_bytes)
         return CompletionResponse(
             uid=res.uid, prompt=info.request.prompt, model=info.model,
             backend=info.backend, tier=info.tier,

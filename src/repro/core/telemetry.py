@@ -124,3 +124,13 @@ class Telemetry:
         if model not in self._last_seen:
             return float("inf")
         return now - self._last_seen[model]
+
+    def cost_per_query(self, model: str) -> float:
+        """Measured mean $/query for ``model`` from the chip-second
+        ledger's registry gauge — the live counterpart of the paper's
+        attributed-cost column, available to the same control loops
+        that read the latency quantiles. 0.0 until a request closes
+        (or when metrics are off)."""
+        if self.registry is None:
+            return 0.0
+        return self.registry.value("cost_per_query_usd", model)

@@ -99,6 +99,11 @@ def _dump_metrics(frontend, path: str) -> None:
     paths = write_metrics_dump(path, reg, events=obs.events,
                                tracer=obs.tracer)
     print("metrics dump: " + ", ".join(paths))
+    for label in reg.labels("cost_per_query_usd"):
+        print(f"  {label:22s} measured cost/query "
+              f"${reg.value('cost_per_query_usd', label):.6f}  "
+              f"(conservation err "
+              f"{obs.ledger.conservation_error():.2%})")
 
 
 def run_serial(pool, args) -> None:
@@ -126,6 +131,7 @@ def run_concurrent(pool, args) -> None:
                        chunk_tokens=args.chunk_tokens or None,
                        step_token_budget=args.step_token_budget or None,
                        decode_burst=args.decode_burst,
+                       flight_record=args.flight_record or None,
                        sched=SchedulerConfig(
                            max_queue_depth=args.max_queue_depth))
     prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
@@ -151,6 +157,12 @@ def run_concurrent(pool, args) -> None:
     for e in gw.orch_events:
         print(f"  {e}")
     _dump_metrics(gw, args.metrics_dump)
+    if args.flight_record and gw.obs is not None:
+        # on-demand dump: the run's final step ring + event tail joins
+        # whatever automatic anomaly dumps already landed in the file
+        p = gw.obs.flight.dump("on-demand", t=time.perf_counter())
+        print(f"flight record: {p} "
+              f"({len(gw.obs.flight.dumps)} dump(s))")
 
 
 def main() -> None:
@@ -185,6 +197,11 @@ def main() -> None:
                     help="write Prometheus exposition to PATH plus "
                          "PATH.events.jsonl (scale/shed/orch decisions) "
                          "and PATH.spans.jsonl (request lifecycles)")
+    ap.add_argument("--flight-record", default="",
+                    help="flight-recorder JSONL sink: automatic anomaly "
+                         "dumps (shed storm, expiry burst, engine "
+                         "exception) plus one on-demand dump at exit "
+                         "(--concurrent)")
     args = ap.parse_args()
 
     pool = {}

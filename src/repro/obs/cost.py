@@ -1,0 +1,181 @@
+"""Chip-second ledger: measured per-request cost attribution.
+
+The simulator (``core/simulator.py``) *predicts* cost per query by
+splitting each engine's busy time evenly across the requests sharing its
+batch.  This module is the measured twin for the live serve plane: the
+``ReplicaPool`` opens a ``ReplicaMeter`` per replica it spins up, every
+``engine.step()`` reports its wall interval plus the uids active that
+step, and the ledger
+
+  * attributes the step's chip-seconds (wall seconds x ``chips``) evenly
+    across the active requests — the simulator's shared-batch cost
+    split, now measured;
+  * accrues the gaps between steps (and trailing time until
+    scale-to-zero retires the replica) as **idle** chip-seconds;
+  * counts the measured spin-up window (param build + warm-up probes)
+    as **cold** chip-seconds.
+
+Conservation invariant (enforced in tier-1): for every ledger,
+
+    attributed + idle + cold == total metered pool chip-seconds
+
+where the right-hand side is computed *independently* from replica
+lifetime wall-stamps, so a missed gap or double-counted step breaks it.
+
+Hot-path discipline: ``on_step`` is pure-python accumulation into the
+meter/ledger dicts — no registry writes, no device syncs.  Registry
+metrics (``cost_per_query_usd`` gauge, ``request_chip_seconds``
+histogram) are published from ``close_request``, which runs on the
+gateway's response path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.obs.metrics import MetricsRegistry, log_buckets
+
+# byte-scale histogram bounds (1 KiB .. 1 TB, 3 per decade) — the default
+# registry buckets are latency-shaped and would funnel KV sizes into +Inf
+KV_BYTE_BUCKETS = log_buckets(1024.0, 1e12, per_decade=3)
+
+# dtype string -> bytes per element, for config-derived resident sizes.
+DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "fp32": 4,
+    "bfloat16": 2, "bf16": 2, "float16": 2, "f16": 2, "fp16": 2,
+    "int8": 1, "uint8": 1, "fp8": 1,
+}
+
+
+def dtype_nbytes(dtype: str) -> int:
+    return DTYPE_BYTES.get(dtype, 2)
+
+
+def param_bytes(cfg) -> int:
+    """Resident parameter bytes from the config's own accounting
+    (``param_count()`` x dtype width) — the production-shape figure the
+    cost model prices, independent of any reduced test arch."""
+    return int(cfg.param_count()) * dtype_nbytes(getattr(cfg, "dtype", "bfloat16"))
+
+
+@dataclass
+class ReplicaMeter:
+    """Busy/idle/cold chip-second accumulator for one live replica."""
+    model: str
+    backend: str
+    chips: int
+    live_t: float                 # wall stamp when the replica went live
+    cold_s: float = 0.0           # measured spin-up wall seconds
+    busy_chip_s: float = 0.0
+    idle_chip_s: float = 0.0
+    mark: float = 0.0             # end of the last accounted interval
+    down_t: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        self.mark = self.live_t
+
+
+class CostLedger:
+    """Pool-wide chip-second ledger with per-request attribution."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 usd_per_chip_hour: Optional[float] = None):
+        if usd_per_chip_hour is None:
+            from repro.core.costmodel import USD_PER_CHIP_HOUR
+            usd_per_chip_hour = USD_PER_CHIP_HOUR
+        self.registry = registry
+        self.usd_per_chip_hour = usd_per_chip_hour
+        self.meters: List[ReplicaMeter] = []
+        self.attributed_chip_s = 0.0          # running total, never decremented
+        self._live: Dict[int, float] = {}     # uid -> chip-seconds so far
+        self._model_usd: Dict[str, float] = {}
+        self._model_n: Dict[str, int] = {}
+
+    # -- replica lifecycle ----------------------------------------------
+    def replica_up(self, model: str, backend: str, chips: int,
+                   cold_s: float, t: float) -> ReplicaMeter:
+        m = ReplicaMeter(model=model, backend=backend, chips=chips,
+                         live_t=t, cold_s=cold_s)
+        self.meters.append(m)
+        return m
+
+    def replica_down(self, meter: ReplicaMeter, t: float) -> None:
+        if meter.down_t is not None:
+            return
+        tail = max(0.0, t - meter.mark)
+        meter.idle_chip_s += tail * meter.chips
+        meter.mark = meter.down_t = max(t, meter.mark)
+
+    # -- hot path --------------------------------------------------------
+    def on_step(self, meter: ReplicaMeter, t0: float, t1: float,
+                uids: Sequence[int]) -> None:
+        """Account one engine step over wall interval [t0, t1] with
+        ``uids`` active.  The gap since the previous step is idle."""
+        gap = t0 - meter.mark
+        if gap > 0.0:
+            meter.idle_chip_s += gap * meter.chips
+        chip_s = max(0.0, t1 - t0) * meter.chips
+        if uids:
+            meter.busy_chip_s += chip_s
+            share = chip_s / len(uids)
+            live = self._live
+            for u in uids:
+                live[u] = live.get(u, 0.0) + share
+            self.attributed_chip_s += chip_s
+        else:
+            meter.idle_chip_s += chip_s
+        if t1 > meter.mark:
+            meter.mark = t1
+
+    # -- response path ---------------------------------------------------
+    def close_request(self, uid: int, model: str,
+                      t: Optional[float] = None) -> Optional[Tuple[float, float]]:
+        """Finalize a request's attribution: returns ``(chip_seconds,
+        cost_usd)``, or None if the uid never ran a step (shed before
+        admission)."""
+        chip_s = self._live.pop(uid, None)
+        if chip_s is None:
+            return None
+        usd = chip_s * self.usd_per_chip_hour / 3600.0
+        self._model_usd[model] = self._model_usd.get(model, 0.0) + usd
+        self._model_n[model] = self._model_n.get(model, 0) + 1
+        if self.registry is not None:
+            mean = self._model_usd[model] / self._model_n[model]
+            self.registry.gauge("cost_per_query_usd", model).set(mean, stamp=t)
+            self.registry.histogram("request_chip_seconds",
+                                    model).observe(chip_s)
+        return chip_s, usd
+
+    # -- accounting queries ----------------------------------------------
+    def totals(self, now: Optional[float] = None) -> Dict[str, float]:
+        """Ledger totals.  ``total`` is recomputed from replica lifetime
+        wall-stamps — NOT from the busy/idle accumulators — so it is an
+        independent check on the interval chaining."""
+        if now is None:
+            import time
+            now = time.perf_counter()
+        busy = idle = cold = total = 0.0
+        for m in self.meters:
+            end = m.down_t if m.down_t is not None else now
+            busy += m.busy_chip_s
+            idle += m.idle_chip_s
+            if m.down_t is None:
+                idle += max(0.0, end - m.mark) * m.chips   # pending gap
+            cold += m.cold_s * m.chips
+            total += (max(0.0, end - m.live_t) + m.cold_s) * m.chips
+        return {"busy_chip_s": busy, "idle_chip_s": idle,
+                "cold_chip_s": cold, "total_chip_s": total,
+                "attributed_chip_s": self.attributed_chip_s,
+                "inflight_chip_s": sum(self._live.values())}
+
+    def conservation_error(self, now: Optional[float] = None) -> float:
+        """|attributed + idle + cold - total| / total (0.0 when empty)."""
+        t = self.totals(now)
+        if t["total_chip_s"] <= 0.0:
+            return 0.0
+        lhs = t["attributed_chip_s"] + t["idle_chip_s"] + t["cold_chip_s"]
+        return abs(lhs - t["total_chip_s"]) / t["total_chip_s"]
+
+    def cost_per_query_usd(self, model: str) -> float:
+        n = self._model_n.get(model, 0)
+        return self._model_usd.get(model, 0.0) / n if n else 0.0

@@ -64,14 +64,40 @@ def _name(name: str) -> str:
     return "".join(c if c.isalnum() or c == "_" else "_" for c in name)
 
 
-def _label(model: str) -> str:
-    return f'{{model="{model}"}}' if model else ""
+def _esc(v: str) -> str:
+    """Escape a label VALUE per the Prometheus exposition spec:
+    backslash, double-quote and newline."""
+    return (v.replace("\\", "\\\\").replace('"', '\\"')
+             .replace("\n", "\\n"))
+
+
+def _label_pairs(label: str) -> List[tuple]:
+    """Registry labels are either a bare model name or a composite
+    ``model|k=v|k2=v2`` (e.g. ``kv_pool_bytes``'s ``mdl|state=used``).
+    Returns ``(key, value)`` pairs in exposition order."""
+    if not label:
+        return []
+    parts = label.split("|")
+    pairs = [("model", parts[0])] if parts[0] else []
+    for p in parts[1:]:
+        k, _, v = p.partition("=")
+        pairs.append((_name(k), v))
+    return pairs
+
+
+def _label(label: str) -> str:
+    pairs = _label_pairs(label)
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{_esc(v)}"' for k, v in pairs)
+    return "{" + body + "}"
 
 
 def prometheus_text(snapshot: dict, prefix: str = "repro_") -> str:
     """Render a ``MetricsRegistry.snapshot()`` (or a merge of several)
     as Prometheus text exposition."""
     lines: List[str] = []
+    typed: set = set()       # metric names with a # TYPE line already out
     by_name: Dict[str, list] = {}
     for (name, label), v in sorted(snapshot.get("counters", {}).items()):
         by_name.setdefault(("counter", name), []).append((label, v))
@@ -79,16 +105,20 @@ def prometheus_text(snapshot: dict, prefix: str = "repro_") -> str:
         by_name.setdefault(("gauge", name), []).append((label, v))
     for (kind, name), rows in sorted(by_name.items()):
         metric = prefix + _name(name)
-        lines.append(f"# TYPE {metric} {kind}")
+        if metric not in typed:
+            lines.append(f"# TYPE {metric} {kind}")
+            typed.add(metric)
         for label, v in rows:
             lines.append(f"{metric}{_label(label)} {_fmt(v)}")
     hists = snapshot.get("histograms", {})
     for (name, label) in sorted(hists):
         h = hists[(name, label)]
         metric = prefix + _name(name)
-        if not any(ln.startswith(f"# TYPE {metric} ") for ln in lines):
+        if metric not in typed:
             lines.append(f"# TYPE {metric} histogram")
-        lab = f'model="{label}",' if label else ""
+            typed.add(metric)
+        pairs = _label_pairs(label)
+        lab = "".join(f'{k}="{_esc(v)}",' for k, v in pairs)
         acc = 0
         for bound, c in zip(list(h["bounds"]) + [math.inf], h["counts"]):
             acc += c

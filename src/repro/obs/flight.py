@@ -1,0 +1,118 @@
+"""Anomaly flight recorder: bounded ring of per-step engine snapshots.
+
+Always-on when metrics are on: every ``engine.step()`` appends one small
+host-side dict (active slots, pending tokens, free blocks, budget spent,
+burst depth) to a bounded ring.  When an anomaly trips — shed rate over
+threshold across a trailing admission window, a deadline-expiry burst,
+or an engine exception — the ring plus the tail of the ``EventLog`` is
+dumped to JSONL so the minutes *before* the incident survive it.  A dump
+can also be forced on demand (``--flight-record PATH``).
+
+JSONL schema (one object per line, appended per dump):
+
+    {"record": "dump",  "reason": ..., "t": ..., "steps": N, "events": M}
+    {"record": "step",  "model": ..., "t": ..., "active": ..., ...}
+    {"record": "event", "event": ..., "t": ..., ...}
+
+Triggers honor a cooldown so a sustained storm produces one dump per
+window, not one per request.  All timestamps are threaded from callers
+(the scheduler's clock — wall or simulated), never sampled here.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional
+
+from repro.obs.export import EventLog
+
+
+@dataclass
+class FlightConfig:
+    capacity: int = 512           # step snapshots retained
+    event_tail: int = 256         # EventLog entries included per dump
+    shed_window: int = 64         # trailing admissions considered
+    shed_rate: float = 0.5        # trip when >= this fraction shed ...
+    min_admissions: int = 16      # ... over at least this many arrivals
+    expiry_window_s: float = 10.0
+    expiry_burst: int = 8         # deadline expiries within the window
+    cooldown_s: float = 5.0       # min spacing between automatic dumps
+    path: Optional[str] = None    # JSONL sink; None = in-memory only
+
+
+class FlightRecorder:
+    def __init__(self, config: Optional[FlightConfig] = None,
+                 events: Optional[EventLog] = None):
+        self.config = config or FlightConfig()
+        self.events = events
+        self.steps: Deque[Dict] = deque(maxlen=self.config.capacity)
+        self.dumps: List[Dict] = []          # dump metadata, for tests/CLI
+        self._admits: Deque[int] = deque(maxlen=self.config.shed_window)
+        self._expiries: Deque[float] = deque()
+        self._last_dump_t: Optional[float] = None
+
+    # -- ring ------------------------------------------------------------
+    def record_step(self, model: str, t: float, **snapshot) -> None:
+        """One engine step.  Host-side dict append only — never called
+        with device values."""
+        self.steps.append({"record": "step", "model": model,
+                           "t": t, **snapshot})
+
+    # -- anomaly triggers --------------------------------------------------
+    def note_admission(self, shed: bool, t: float) -> None:
+        self._admits.append(1 if shed else 0)
+        n = len(self._admits)
+        if n < self.config.min_admissions:
+            return
+        rate = sum(self._admits) / n
+        if rate >= self.config.shed_rate:
+            if self.trigger("shed_storm", t, shed_rate=round(rate, 4),
+                            window=n):
+                self._admits.clear()        # re-arm on a fresh window
+
+    def note_expiry(self, t: float) -> None:
+        self._expiries.append(t)
+        cut = t - self.config.expiry_window_s
+        while self._expiries and self._expiries[0] < cut:
+            self._expiries.popleft()
+        if len(self._expiries) >= self.config.expiry_burst:
+            if self.trigger("expiry_burst", t, expiries=len(self._expiries)):
+                self._expiries.clear()
+
+    def note_exception(self, model: str, err: BaseException, t: float) -> None:
+        self.trigger("engine_exception", t, model=model,
+                     error=f"{type(err).__name__}: {err}")
+
+    # -- dumping -----------------------------------------------------------
+    def trigger(self, reason: str, t: float, **fields) -> bool:
+        """Automatic dump, rate-limited by the cooldown.  Returns True
+        if a dump was taken."""
+        if (self._last_dump_t is not None
+                and t - self._last_dump_t < self.config.cooldown_s):
+            return False
+        self._last_dump_t = t
+        self.dump(reason, t=t, **fields)
+        return True
+
+    def dump(self, reason: str = "on-demand", t: float = 0.0,
+             path: Optional[str] = None, **fields) -> Optional[str]:
+        """Write the ring + event tail as JSONL (append).  Returns the
+        path written, or None when no sink is configured (the dump is
+        still recorded in ``self.dumps``)."""
+        tail = []
+        if self.events is not None:
+            tail = list(self.events.events)[-self.config.event_tail:]
+        meta = {"record": "dump", "reason": reason, "t": t,
+                "steps": len(self.steps), "events": len(tail), **fields}
+        self.dumps.append(meta)
+        sink = path or self.config.path
+        if sink is None:
+            return None
+        with open(sink, "a") as f:
+            f.write(json.dumps(meta) + "\n")
+            for s in self.steps:
+                f.write(json.dumps(s) + "\n")
+            for e in tail:
+                f.write(json.dumps({"record": "event", **e}) + "\n")
+        return sink

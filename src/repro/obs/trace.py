@@ -41,6 +41,8 @@ class Span:
     chunk_tokens: int = 0             # prompt tokens actually prefilled
     decode_tokens: int = 0            # tokens sampled (incl. first)
     outcome: str = ""                 # stop|length|shed|cancelled|timeout
+    chip_seconds: float = 0.0         # attributed device-seconds x chips
+    cost_usd: float = 0.0             # chip_seconds at USD_PER_CHIP_HOUR
     # (event, t, value) in order: submit/admit/chunk/first_token/
     # decode (one entry per drain, value = tokens)/finish
     events: List[Tuple[str, float, float]] = field(default_factory=list)
@@ -89,6 +91,7 @@ class Span:
             "ttft_s": self.ttft_s, "e2e_s": self.e2e_s,
             "chunks": self.chunks, "chunk_tokens": self.chunk_tokens,
             "decode_tokens": self.decode_tokens,
+            "chip_seconds": self.chip_seconds, "cost_usd": self.cost_usd,
             "events": [list(e) for e in self.events],
         }
 

@@ -105,6 +105,7 @@ class GenResult:
     shed: bool = False                            # evicted at admission
     cached_tokens: int = 0                        # prompt tokens from prefix cache
     prefill_chunks: int = 0                       # prefill passes the prompt took
+    kv_bytes: int = 0                             # peak KV bytes held (at release)
 
 
 @dataclass
@@ -456,6 +457,12 @@ class InferenceEngine:
         self._order = 0
         self._kv_dtype = jnp.bfloat16 if backend.kv_dtype == "bfloat16" else jnp.float32
         self.cache = self._init_cache()
+        # resident KV bytes from the pool tensors' own shape metadata —
+        # int8 quantized pools (k/v int8 + f32 scales) land at their true
+        # width. Shape inspection only: no device sync.
+        self._cache_bytes = int(sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(self.cache)))
+        self._register_cache_bytes()
         self._dstate = self._init_dstate()
         self._finished: List[GenResult] = []
         # (uid, token) streaming deltas of the CURRENT step — cleared at
@@ -503,8 +510,40 @@ class InferenceEngine:
         """Chunk-append available AND requested for this engine."""
         return self.chunk_tokens is not None and self.fns.chunk_prefill is not None
 
+    def _register_cache_bytes(self) -> None:
+        """Hook: publish cache geometry (paged sets bytes_per_block)."""
+
+    def _slot_kv_bytes(self, slot: "_Slot") -> int:
+        """KV bytes a slot holds at release — dense: its fixed share of
+        the pre-allocated (max_batch, max_seq) cache."""
+        return self._cache_bytes // self.max_batch
+
     def _release(self, slot: "_Slot", register_prefix: bool = True) -> None:
-        """Reap hook: free per-request cache resources (no-op dense)."""
+        """Reap hook: account the request's peak KV footprint, then free
+        per-request cache resources (nothing to free on dense). Paged
+        overrides MUST call super() before dropping block leases."""
+        if slot.res is not None:
+            b = self._slot_kv_bytes(slot)
+            slot.res.kv_bytes = b
+            if self._obs is not None:
+                from repro.obs.cost import KV_BYTE_BUCKETS
+                self._obs.registry.histogram(
+                    "kv_bytes_per_request", self._obs.model,
+                    bounds=KV_BYTE_BUCKETS).observe(float(b))
+
+    # -- resident-memory accounting --------------------------------------
+    def resident_bytes(self) -> int:
+        """HBM this replica pins: params (config param count x dtype
+        width) + the KV cache/pool tensors."""
+        from repro.obs.cost import param_bytes
+        return param_bytes(self.cfg) + self._cache_bytes
+
+    def kv_pool_bytes(self) -> Tuple[int, int]:
+        """(used, free) KV bytes — dense: occupied-slot shares of the
+        pre-allocated cache."""
+        share = self._cache_bytes // self.max_batch
+        busy = sum(1 for s in self._slots if not s.done)
+        return busy * share, (self.max_batch - busy) * share
 
     # -- public API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -602,6 +641,12 @@ class InferenceEngine:
                 if not self._begin(slot.idx, self._queue[0]):
                     break
                 self._queue.popleft()
+        # requests sharing this step's batch — the cost ledger splits the
+        # step's wall duration evenly across them (host-side list of ids
+        # already in slot state; no device traffic)
+        step_uids = ([s.req.uid for s in self._slots if not s.done]
+                     if self._obs is not None and self._obs.meter is not None
+                     else None)
         # 2) budget: decode tokens are committed first — in-flight decodes
         #    must never stall behind prefill (that's the whole point);
         #    the remainder throttles prefill chunks. Slots whose LAST
@@ -635,17 +680,20 @@ class InferenceEngine:
             else:
                 self._decode_once(active)
         if self._obs is not None:
-            self._record_step(t0)
+            self._record_step(t0, step_uids, rem)
         return self.drain_finished()
 
-    def _record_step(self, t0: float) -> None:
+    def _record_step(self, t0: float, step_uids=None, rem=None) -> None:
         """Per-step host-side metrics: step wall time, tokens emitted
         (decode + first tokens, i.e. this step's delta count), and the
         fused-fn retrace total surfaced as a gauge (a climbing value
         under steady traffic is the silent-recompile regression the
-        PR-5 trace-count guard tests for)."""
+        PR-5 trace-count guard tests for).  Also feeds the chip-second
+        ledger (wall interval split across ``step_uids``) and the flight
+        recorder's snapshot ring — both pure host-side appends."""
         reg, m = self._obs.registry, self._obs.model
-        reg.histogram("engine_step_s", m).observe(time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        reg.histogram("engine_step_s", m).observe(t1 - t0)
         ntok = len(self._deltas)
         reg.histogram("engine_tokens_per_step", m).observe(float(ntok))
         if ntok:
@@ -653,6 +701,21 @@ class InferenceEngine:
         if self.fns.trace_counts:
             reg.gauge("engine_retraces", m).set(
                 float(sum(self.fns.trace_counts.values())))
+        meter = self._obs.meter
+        if meter is not None:
+            self._obs.cost.on_step(meter, t0, t1, step_uids or ())
+        fl = self._obs.flight
+        if fl is not None:
+            spent = (self.step_token_budget - rem
+                     if self.step_token_budget is not None and rem is not None
+                     else ntok)
+            fl.record_step(
+                m, t1,
+                active=sum(1 for s in self._slots if not s.done),
+                pending_tokens=self.pending_tokens(),
+                free_blocks=getattr(getattr(self, "pool", None),
+                                    "num_free", -1),
+                tokens=ntok, budget_spent=spent, burst=self.decode_burst)
 
     # -- fused decode (device-resident hot path) --------------------------
     def _decode_once(self, active: List[int]) -> None:
@@ -1035,6 +1098,11 @@ class PagedInferenceEngine(InferenceEngine):
         return init_paged_cache(self.cfg, self.num_blocks, self.block_size,
                                 self._kv_dtype)
 
+    def _register_cache_bytes(self) -> None:
+        # measured block width: pool tensor bytes / population — int8
+        # pools (quantized k/v + f32 scales) come out at true width
+        self.pool.bytes_per_block = self._cache_bytes // self.num_blocks
+
     def _init_dstate(self):
         # per-row block tables ride in the device state so the fused
         # decode never re-stages them from host
@@ -1077,6 +1145,14 @@ class PagedInferenceEngine(InferenceEngine):
 
     def kv_used_frac(self) -> float:
         return self.pool.used_frac
+
+    def _slot_kv_bytes(self, slot: _PagedSlot) -> int:
+        return len(slot.blocks) * self.pool.bytes_per_block
+
+    def kv_pool_bytes(self) -> Tuple[int, int]:
+        """(used, free) bytes over the block population; evictable
+        prefix-cache blocks count as used until actually reclaimed."""
+        return self.pool.used_bytes, self.pool.free_bytes
 
     def prefix_hit_rate(self) -> float:
         return self.hit_tokens / self.prompt_tokens if self.prompt_tokens else 0.0
@@ -1249,6 +1325,7 @@ class PagedInferenceEngine(InferenceEngine):
     def _release(self, slot: _PagedSlot, register_prefix: bool = True) -> None:
         if slot.table is None:
             return
+        super()._release(slot, register_prefix)   # account KV bytes first
         if register_prefix and self.prefix is not None and slot.res is not None:
             # everything written (prompt + generated-but-last) is valid
             # KV; register its full blocks for future prefix hits

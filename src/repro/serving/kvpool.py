@@ -45,6 +45,10 @@ class BlockPool:
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
         self._ref = [0] * num_blocks
         self.version = 0               # bumped on every refcount change
+        # actual device bytes one block occupies across the engine's pool
+        # arrays (k + v + int8 scales), set by the owning engine from the
+        # pool tensors' nbytes — int8 pools land at quantized width.
+        self.bytes_per_block: int = 0
 
     # -- inspection ----------------------------------------------------------
     @property
@@ -54,6 +58,18 @@ class BlockPool:
     @property
     def used_frac(self) -> float:
         return 1.0 - len(self._free) / self.num_blocks
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.num_blocks * self.bytes_per_block
+
+    @property
+    def used_bytes(self) -> int:
+        return (self.num_blocks - len(self._free)) * self.bytes_per_block
+
+    @property
+    def free_bytes(self) -> int:
+        return len(self._free) * self.bytes_per_block
 
     def refcount(self, bid: int) -> int:
         return self._ref[bid]

@@ -154,10 +154,23 @@ class ReplicaPool:
             return None
         hit = sum(e.hit_tokens for e in reps)
         seen = sum(e.prompt_tokens for e in reps)
+
+        def pressure(e) -> float:
+            # bytes-grounded: fraction of the replica's KV-pool BYTES
+            # that cannot back a new sequence (evictable prefix-cache
+            # bytes are reclaimable, so they count as headroom)
+            cap = e.pool.capacity_bytes
+            if cap <= 0:
+                return 1.0 - e.kv_free_frac()     # geometry not published
+            free = e.pool.num_free
+            if e.prefix:
+                free += e.prefix.evictable_blocks()
+            return 1.0 - (free * e.pool.bytes_per_block) / cap
+
         return {
             # pressure: headroom of the LEAST-squeezed replica — high
-            # only when every replica is out of allocatable blocks
-            "kv_pressure": min(1.0 - e.kv_free_frac() for e in reps),
+            # only when every replica is out of allocatable KV bytes
+            "kv_pressure": min(pressure(e) for e in reps),
             "kv_occupancy": max(e.kv_used_frac() for e in reps),
             "kv_hit_rate": hit / seen if seen else 0.0,
             "kv_free_blocks": float(sum(e.pool.num_free for e in reps)),
@@ -257,6 +270,14 @@ class ReplicaPool:
                                    backend=backend, before=len(reps) - 1,
                                    after=len(reps), kind=kind,
                                    duration_s=dur)
+            # open this replica's chip-second meter: the spin window
+            # (param build + compile + probes) is COLD chip-seconds; the
+            # metered clock starts now. perf_counter domain throughout —
+            # the same clock engine.step() stamps with.
+            eng._obs.meter = self.obs.ledger.replica_up(
+                model, backend, chips=entry.cost.chips, cold_s=dur,
+                t=time.perf_counter())
+            self._update_memory_gauges(model)
 
     def _spin_down(self, model: str, backend: str, target: int,
                    now: float) -> None:
@@ -269,6 +290,12 @@ class ReplicaPool:
         idle = [e for e in reps if not e.has_work()]
         for eng in idle[:max(0, before - target)]:
             reps.remove(eng)
+            if (self.obs is not None and eng._obs is not None
+                    and eng._obs.meter is not None):
+                # close the meter: trailing idle accrues until here, the
+                # reclaim point scale-to-zero exists to reach
+                self.obs.ledger.replica_down(eng._obs.meter,
+                                             time.perf_counter())
         entry = self.reg.entry(model, backend)
         entry.replicas = len(reps)
         entry.warm = 1 if (not reps and model in self._params) else 0
@@ -281,3 +308,26 @@ class ReplicaPool:
                                        backend=backend, before=before,
                                        after=len(reps), kind=kind,
                                        duration_s=0.0)
+                self._update_memory_gauges(model)
+
+    def _update_memory_gauges(self, model: str) -> None:
+        """Refresh ``hbm_resident_bytes`` for ``model``: params + KV
+        tensors summed over every live replica (all backends). Cheap —
+        shape metadata only — and called on scale transitions, not per
+        step."""
+        if self.obs is None:
+            return
+        total = float(sum(e.resident_bytes() for b in self.reg.backends
+                          for e in self._replicas[(model, b)]))
+        self.obs.registry.gauge("hbm_resident_bytes", model).set(
+            total, stamp=time.perf_counter())
+
+    def kv_bytes(self, model: str) -> Optional[Tuple[int, int]]:
+        """(used, free) KV-pool bytes over every live replica of
+        ``model``; None with no live replicas."""
+        reps = [e for b in self.reg.backends
+                for e in self._replicas[(model, b)]]
+        if not reps:
+            return None
+        pairs = [e.kv_pool_bytes() for e in reps]
+        return sum(u for u, _ in pairs), sum(f for _, f in pairs)

@@ -116,10 +116,15 @@ class RequestScheduler:
         key = (model, backend)
         q = self._queues[key]
         self.stats.submitted += 1
+        # resolve the clock ONCE, up front: a shed below this point must
+        # log the caller's (possibly simulated) timestamp, not a stray
+        # perf_counter interleaved into sim time (the PR-6 bug class)
+        now = time.perf_counter() if now is None else now
         # fast path: nothing waiting and a free slot -> straight in
         if not q and self.pool.free_slots(model, backend) > 0:
             self._to_engine(key, req, now)
             self.stats.dispatched += 1
+            self._flight_admit(False, now)
             return True
         over_tokens = (self.cfg.max_queue_tokens is not None and q and
                        self._queue_tokens(q) + self._req_tokens(req)
@@ -138,8 +143,8 @@ class RequestScheduler:
                     self.stats.shed_blocks += 1
                     reason = "block_pressure"
                 self._note("shed", model, now, uid=req.uid, reason=reason)
+                self._flight_admit(True, now)
                 return False
-            now = time.perf_counter() if now is None else now
             entry = self.reg.entry(model, backend)
             for victim in victims:
                 q.remove(victim)
@@ -153,10 +158,17 @@ class RequestScheduler:
                            by=req.uid)
             q.append(req)
             entry.queued = max(0, entry.queued - len(victims) + 1)
+            self._flight_admit(False, now)
             return True
         q.append(req)
         self.reg.entry(model, backend).queued += 1
+        self._flight_admit(False, now)
         return True
+
+    def _flight_admit(self, shed: bool, now: float) -> None:
+        """Feed the flight recorder's shed-storm trigger."""
+        if self._obs is not None and self._obs.flight is not None:
+            self._obs.flight.note_admission(shed, now)
 
     def _shed_victims(self, model: str, backend: str, q: Deque[Request],
                       req: Request) -> Optional[List[Request]]:
@@ -324,6 +336,8 @@ class RequestScheduler:
         self._reaped.append((key, res))
         self.stats.expired += 1
         self._note("expire", key[0], now, uid=req.uid)
+        if self._obs is not None and self._obs.flight is not None:
+            self._obs.flight.note_expiry(now)
         return True
 
     def step(self, now: Optional[float] = None) -> List[Tuple[_Key, GenResult]]:
@@ -335,16 +349,27 @@ class RequestScheduler:
         out: List[Tuple[_Key, GenResult]]
         out, self._reaped = self._reaped, []
         self._deltas = []
+        flight = self._obs.flight if self._obs is not None else None
         for key, eng in self.pool.engines():
             if not eng.has_work():
                 continue
             entry = self.reg.entry(*key)
-            for res in eng.step():
+            try:
+                results = eng.step()
+            except Exception as exc:
+                # the flight ring holds the steps leading INTO the crash;
+                # dump before the exception unwinds the serve loop
+                if flight is not None:
+                    flight.note_exception(key[0], exc, now)
+                raise
+            for res in results:
                 entry.active_requests = max(0, entry.active_requests - 1)
                 # stamp with the step's OWN clock: mixing perf_counter
                 # into a simulated `now` skewed the telemetry window
                 self.tel.record_latency(key[0], now, res.latency)
                 self.stats.completed += 1
+                if res.timed_out and flight is not None:
+                    flight.note_expiry(now)
                 out.append((key, res))
             self._deltas.extend(eng.drain_deltas())
         # paged-plane gauges: pool pressure / occupancy / prefix hit-rate
@@ -363,6 +388,20 @@ class RequestScheduler:
             self.tel.record_gauge(model, "queue_tokens", now, float(qtok))
             self.tel.record_gauge(model, "backlog_tokens", now,
                                   float(qtok + self.pool.backlog_tokens(model)))
+            # resident KV bytes, labeled by occupancy state (composite
+            # label -> kv_pool_bytes{model=...,state=used|free} in the
+            # exposition)
+            if self._obs is not None:
+                # getattr: stub pools in tests duck-type ReplicaPool
+                kv_bytes = getattr(self.pool, "kv_bytes", None)
+                kb = kv_bytes(model) if kv_bytes is not None else None
+                if kb is not None:
+                    used, free = kb
+                    reg = self._obs.registry
+                    reg.gauge("kv_pool_bytes",
+                              f"{model}|state=used").set(float(used), now)
+                    reg.gauge("kv_pool_bytes",
+                              f"{model}|state=free").set(float(free), now)
         return out
 
     def drain_deltas(self) -> List[Tuple[int, int]]:

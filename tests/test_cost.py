@@ -1,0 +1,286 @@
+"""Cost & capacity attribution plane: chip-second ledger, HBM/KV byte
+accounting, and the anomaly flight recorder.
+
+Two tiers of tests:
+
+  * pure host-side units (no jax): ledger interval chaining, the
+    shared-batch attribution split, the conservation identity on a
+    hand-built timeline, and the flight recorder's triggers/cooldown;
+  * live-plane integration (real reduced engines through the full
+    ``ServeFrontend`` path): every completed response carries a metered
+    ``Usage.chip_seconds``/``cost_usd``, the pool-wide conservation
+    invariant holds within 1%, resident-memory gauges are grounded in
+    real array bytes, and an induced shed storm lands an automatic
+    flight dump (schema-valid JSONL) without being asked.
+"""
+import json
+
+import pytest
+
+from conftest import reduced_f32
+from repro.core.costmodel import USD_PER_CHIP_HOUR, chip_seconds_usd
+from repro.core.gateway import ServeFrontend
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+from repro.obs import (CostLedger, EventLog, FlightConfig, FlightRecorder,
+                       MetricsRegistry, Observability, dtype_nbytes,
+                       param_bytes)
+
+SMOL = "smollm-360m"
+KEY = (SMOL, "trt")
+
+
+# ---------------------------------------------------------------------------
+# ledger units: attribution math on a hand-built timeline (no jax)
+
+
+def _ledger(registry=None, rate=3600.0):
+    # rate 3600 $/chip-hour => 1 $/chip-second: costs readable by eye
+    return CostLedger(registry=registry, usd_per_chip_hour=rate)
+
+
+def test_step_attribution_splits_evenly_across_batch():
+    led = _ledger()
+    m = led.replica_up("m", "trt", chips=2, cold_s=1.0, t=0.0)
+    led.on_step(m, 0.0, 1.0, [1, 2])       # 1s x 2 chips shared by 2 uids
+    assert m.busy_chip_s == pytest.approx(2.0)
+    assert led._live == {1: pytest.approx(1.0), 2: pytest.approx(1.0)}
+    led.on_step(m, 2.0, 3.0, [1])          # gap [1,2] is idle; uid 1 solo
+    assert m.idle_chip_s == pytest.approx(2.0)
+    assert led.attributed_chip_s == pytest.approx(4.0)
+    chip_s, usd = led.close_request(1, "m")
+    assert chip_s == pytest.approx(3.0)
+    assert usd == pytest.approx(3.0)                  # 1 $/chip-second
+    assert led.close_request(99, "m") is None         # never ran a step
+    assert led.cost_per_query_usd("m") == pytest.approx(3.0)
+
+
+def test_empty_step_accrues_idle_not_busy():
+    led = _ledger()
+    m = led.replica_up("m", "trt", chips=1, cold_s=0.0, t=0.0)
+    led.on_step(m, 0.0, 0.5, [])
+    assert m.busy_chip_s == 0.0 and m.idle_chip_s == pytest.approx(0.5)
+    assert led.attributed_chip_s == 0.0
+
+
+def test_conservation_identity_exact_on_hand_timeline():
+    led = _ledger()
+    m = led.replica_up("m", "trt", chips=2, cold_s=1.0, t=0.0)
+    led.on_step(m, 0.0, 1.0, [1, 2])
+    led.on_step(m, 2.0, 3.0, [1])
+    t = led.totals(now=5.0)
+    # total recomputed from lifetime stamps: (5-0 + cold 1.0) x 2 chips
+    assert t["total_chip_s"] == pytest.approx(12.0)
+    assert t["cold_chip_s"] == pytest.approx(2.0)
+    # idle = inter-step gap (2 chip-s) + pending tail [3,5] (4 chip-s)
+    assert t["idle_chip_s"] == pytest.approx(6.0)
+    assert led.conservation_error(now=5.0) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_replica_down_closes_tail_idempotently():
+    led = _ledger()
+    m = led.replica_up("m", "trt", chips=1, cold_s=0.0, t=0.0)
+    led.on_step(m, 0.0, 1.0, [7])
+    led.replica_down(m, 4.0)
+    assert m.down_t == 4.0
+    assert m.idle_chip_s == pytest.approx(3.0)        # tail [1,4]
+    led.replica_down(m, 9.0)                          # no-op: already down
+    assert m.down_t == 4.0 and m.idle_chip_s == pytest.approx(3.0)
+    # retired replicas stop accruing in totals() regardless of `now`
+    assert led.conservation_error(now=100.0) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_close_request_publishes_registry_metrics():
+    reg = MetricsRegistry()
+    led = _ledger(registry=reg)
+    m = led.replica_up("m", "trt", chips=1, cold_s=0.0, t=0.0)
+    led.on_step(m, 0.0, 2.0, [1])
+    led.on_step(m, 2.0, 4.0, [2])
+    led.close_request(1, "m", t=4.0)
+    led.close_request(2, "m", t=4.0)
+    assert reg.value("cost_per_query_usd", "m") == pytest.approx(2.0)
+    assert reg.histogram("request_chip_seconds", "m").count == 2
+
+
+def test_usd_conversion_matches_costmodel():
+    led = CostLedger(registry=None)                  # pick up the real rate
+    m = led.replica_up("m", "trt", chips=1, cold_s=0.0, t=0.0)
+    led.on_step(m, 0.0, 7.2, [1])
+    _, usd = led.close_request(1, "m")
+    assert usd == pytest.approx(chip_seconds_usd(7.2))
+    assert usd == pytest.approx(7.2 * USD_PER_CHIP_HOUR / 3600.0)
+
+
+def test_param_bytes_from_config_accounting():
+    cfg = reduced_f32(SMOL)
+    assert dtype_nbytes("float32") == 4 and dtype_nbytes("int8") == 1
+    assert param_bytes(cfg) == cfg.param_count() * 4
+    # narrower resident dtype -> proportionally smaller footprint
+    import dataclasses
+    assert param_bytes(dataclasses.replace(cfg, dtype="bfloat16")) \
+        == cfg.param_count() * 2
+
+
+# ---------------------------------------------------------------------------
+# flight recorder units
+
+
+def test_shed_storm_trigger_and_cooldown(tmp_path):
+    path = str(tmp_path / "flight.jsonl")
+    events = EventLog()
+    fl = FlightRecorder(FlightConfig(min_admissions=8, shed_rate=0.5,
+                                     cooldown_s=100.0, path=path),
+                        events=events)
+    fl.record_step("m", t=0.5, active=3, pending_tokens=12)
+    events.append("shed", t=0.9, model="m", uid=1)
+    for i in range(7):
+        fl.note_admission(shed=True, t=1.0 + i * 0.01)
+    assert not fl.dumps                       # below min_admissions
+    fl.note_admission(shed=True, t=2.0)       # 8/8 shed -> storm
+    assert len(fl.dumps) == 1
+    assert fl.dumps[0]["reason"] == "shed_storm"
+    assert fl.dumps[0]["shed_rate"] == pytest.approx(1.0)
+    # window cleared on dump + cooldown: an immediate repeat is silent
+    for i in range(8):
+        fl.note_admission(shed=True, t=2.1 + i * 0.01)
+    assert len(fl.dumps) == 1
+    # the JSONL sink holds the dump header, the ring, and the event tail
+    recs = [json.loads(ln) for ln in open(path)]
+    kinds = [r["record"] for r in recs]
+    assert kinds == ["dump", "step", "event"]
+    assert recs[1]["active"] == 3 and recs[2]["event"] == "shed"
+
+
+def test_expiry_burst_trigger_windowed():
+    fl = FlightRecorder(FlightConfig(expiry_burst=3, expiry_window_s=1.0,
+                                     cooldown_s=0.0))
+    fl.note_expiry(0.0)
+    fl.note_expiry(10.0)                      # first one aged out
+    fl.note_expiry(10.1)
+    assert not fl.dumps
+    fl.note_expiry(10.2)                      # 3 within the window
+    assert [d["reason"] for d in fl.dumps] == ["expiry_burst"]
+
+
+def test_engine_exception_always_dumps():
+    fl = FlightRecorder(FlightConfig(cooldown_s=0.0))
+    fl.note_exception("m", RuntimeError("boom"), t=3.0)
+    assert fl.dumps[0]["reason"] == "engine_exception"
+    assert "RuntimeError: boom" in fl.dumps[0]["error"]
+
+
+def test_step_ring_is_bounded():
+    fl = FlightRecorder(FlightConfig(capacity=4))
+    for i in range(10):
+        fl.record_step("m", t=float(i))
+    assert len(fl.steps) == 4
+    assert [s["t"] for s in fl.steps] == [6.0, 7.0, 8.0, 9.0]
+
+
+# ---------------------------------------------------------------------------
+# scheduler clock regression (stub plane): the shed path must stamp the
+# caller's simulated clock, not fall back to perf_counter mid-call
+
+
+def test_shed_event_stamped_with_simulated_now():
+    from test_obs import _Pool, _Reg, _Eng, _req
+    from repro.core.telemetry import Telemetry
+    from repro.serving.scheduler import RequestScheduler, SchedulerConfig
+    obs = Observability()
+    eng = _Eng()
+    eng.free_slots = lambda: 0
+    sched = RequestScheduler(
+        _Pool(eng), _Reg(), Telemetry(),
+        cfg=SchedulerConfig(max_queue_depth=0, spin_on_demand=False),
+        obs=obs)
+    assert not sched.enqueue("m", "trt", _req(0), now=123.0)
+    shed = obs.events.of("shed")[0]
+    assert shed["t"] == 123.0                 # sim clock, not perf_counter
+
+
+# ---------------------------------------------------------------------------
+# live plane: real engines through the full frontend
+
+
+@pytest.fixture(scope="module")
+def fe():
+    spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=0.5,
+                      tick_s=3600.0, max_replicas=2,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    return ServeFrontend({SMOL: reduced_f32(SMOL)},
+                         profile=PROFILES["balanced"], max_seq=96, spin=spin)
+
+
+def test_live_requests_carry_measured_cost(fe):
+    handles = [fe.submit(f"sum the numbers {i}", max_new_tokens=6)
+               for i in range(3)]
+    fe.serve_all()
+    for h in handles:
+        u = h.response.usage
+        assert u.chip_seconds > 0.0
+        assert u.cost_usd == pytest.approx(chip_seconds_usd(u.chip_seconds))
+        assert u.kv_peak_bytes > 0
+    assert fe.obs.registry.value("cost_per_query_usd", SMOL) > 0.0
+    # the span mirrors the settled attribution
+    span = fe.obs.tracer.finished[-1]
+    assert span.chip_seconds > 0.0 and span.cost_usd > 0.0
+
+
+def test_live_conservation_within_one_percent(fe):
+    fe.serve_all()
+    totals = fe.obs.ledger.totals()
+    assert totals["total_chip_s"] > 0.0
+    assert totals["attributed_chip_s"] > 0.0
+    assert fe.obs.ledger.conservation_error() < 0.01
+
+
+def test_memory_gauges_grounded_in_real_bytes(fe):
+    fe.serve_all()
+    fe.pool.scale(*KEY, 1)
+    reg = fe.obs.registry
+    eng = fe.pool.replicas(*KEY)[0]
+    # hbm gauge == the live replica's params + KV cache (real array bytes)
+    assert reg.value("hbm_resident_bytes", SMOL) == eng.resident_bytes()
+    assert eng.resident_bytes() > eng._cache_bytes > 0
+    used, free = fe.pool.kv_bytes(SMOL)
+    assert used + free > 0
+    # the scheduler publishes the same split as composite-label gauges
+    h = fe.submit("sum the numbers", max_new_tokens=2)
+    fe.serve_all()
+    assert h.response.completed
+    state_used = reg.value("kv_pool_bytes", f"{SMOL}|state=used")
+    state_free = reg.value("kv_pool_bytes", f"{SMOL}|state=free")
+    assert state_used + state_free > 0
+    # scale-to-zero retires the bytes from the resident gauge
+    fe.pool.scale(*KEY, 0)
+    assert reg.value("hbm_resident_bytes", SMOL) == 0.0
+    fe.pool.scale(*KEY, 1)
+
+
+def test_shed_storm_triggers_automatic_flight_dump(fe, tmp_path):
+    fe.serve_all()
+    path = str(tmp_path / "flight.jsonl")
+    fl = fe.obs.flight
+    fl.config.path = path
+    fl._last_dump_t = None                    # isolate from prior tests
+    n_dumps = len(fl.dumps)
+    assert len(fl.steps) > 0                  # serve loop fed the ring
+    depth0 = fe.scheduler.cfg.max_queue_depth
+    fe.scheduler.cfg.max_queue_depth = 0
+    try:
+        # saturate the slots, then flood: every admission past capacity
+        # sheds, tripping the storm trigger without any manual dump call
+        handles = [fe.submit(f"count items {i}", max_new_tokens=4)
+                   for i in range(fl.config.min_admissions + 8)]
+    finally:
+        fe.scheduler.cfg.max_queue_depth = depth0
+    assert sum(h.shed for h in handles) >= fl.config.min_admissions
+    assert len(fl.dumps) == n_dumps + 1
+    assert fl.dumps[-1]["reason"] == "shed_storm"
+    recs = [json.loads(ln) for ln in open(path)]
+    kinds = {r["record"] for r in recs}
+    assert kinds == {"dump", "step", "event"}
+    assert any(r["record"] == "step" and r["model"] == SMOL for r in recs)
+    assert any(r["record"] == "event" and r["event"] == "shed"
+               for r in recs)
+    fe.serve_all()                            # drain the survivors

@@ -171,8 +171,17 @@ def test_decode_step_moves_only_token_ids(stack, monkeypatch, instrumented):
     # lifecycle tracer) are host-side bookkeeping on the existing replay
     # path — tracing ON must not add a single device->host transfer
     cfg, params, bk = stack
-    obs = (Observability().engine_obs(SMOL, "trt") if instrumented
-           else None)
+    obs = bundle = None
+    if instrumented:
+        # full PR-7 plane: registry + tracer + chip-second ledger (live
+        # meter attached, as the replica pool wires it) + flight ring —
+        # the whole stack must stay host-side under the guard
+        import time
+        bundle = Observability()
+        obs = bundle.engine_obs(SMOL, "trt")
+        obs.meter = bundle.ledger.replica_up(SMOL, "trt", chips=1,
+                                             cold_s=0.0,
+                                             t=time.perf_counter())
     eng = InferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
                           obs=obs)
     for r in _reqs(cfg, [16, 8, 5], max_new=16):
@@ -205,6 +214,12 @@ def test_decode_step_moves_only_token_ids(stack, monkeypatch, instrumented):
         # step-duration histogram) — from host stamps only
         assert obs.registry.histogram("itl_s", SMOL).count > 0
         assert obs.registry.histogram("engine_step_s", SMOL).count >= 3
+        # ...and metered: the ledger attributed chip-seconds to the
+        # active uids and the flight ring snapshotted each guarded step,
+        # without tripping the transfer guard (zero new syncs)
+        assert bundle.ledger.attributed_chip_s > 0.0
+        assert len(bundle.flight.steps) >= 3
+        assert all(s["model"] == SMOL for s in bundle.flight.steps)
     eng.run([])
 
 

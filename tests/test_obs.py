@@ -271,6 +271,72 @@ def test_prometheus_text_cumulative_buckets():
     assert f'repro_lat_sum{{model="m"}} {repr(5000.03)}' in text
 
 
+def test_prometheus_label_values_escaped():
+    # label VALUES must be escaped per the exposition spec (backslash,
+    # double-quote, newline) — an unescaped quote breaks every scraper
+    r = MetricsRegistry()
+    weird = 'mo"del\\v1\n'
+    r.gauge("load", weird).set(1.0, stamp=1.0)
+    r.histogram("lat", weird).observe(0.1)
+    text = prometheus_text(r.snapshot())
+    esc = 'model="mo\\"del\\\\v1\\n"'
+    assert f"repro_load{{{esc}}} 1.0" in text
+    assert f'repro_lat_bucket{{{esc},le="+Inf"}} 1' in text
+    assert f"repro_lat_count{{{esc}}} 1" in text
+    # composite labels escape each value independently
+    r2 = MetricsRegistry()
+    r2.gauge("kv_pool_bytes", 'm|state=u"sed').set(2.0, stamp=1.0)
+    assert 'repro_kv_pool_bytes{model="m",state="u\\"sed"} 2.0' in \
+        prometheus_text(r2.snapshot())
+
+
+def test_prometheus_single_type_line_per_metric():
+    # one # TYPE line per metric NAME, no matter how many labels carry
+    # it — scrapers reject duplicate metadata
+    r = MetricsRegistry()
+    for m in ("a", "b", "c"):
+        r.gauge("load", m).set(1.0, stamp=1.0)
+        r.histogram("lat", m).observe(0.1)
+    text = prometheus_text(r.snapshot())
+    lines = text.splitlines()
+    assert lines.count("# TYPE repro_load gauge") == 1
+    assert lines.count("# TYPE repro_lat histogram") == 1
+
+
+def test_empty_histogram_exposition_well_formed():
+    # a histogram that was created but never observed still renders a
+    # full cumulative bucket ladder with zero counts and _sum/_count 0
+    r = MetricsRegistry()
+    r.histogram("lat", "m")
+    text = prometheus_text(r.snapshot())
+    counts = [int(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+              if ln.startswith("repro_lat_bucket")]
+    assert counts and all(c == 0 for c in counts)
+    assert 'repro_lat_bucket{model="m",le="+Inf"} 0' in text
+    assert 'repro_lat_sum{model="m"} 0.0' in text
+    assert 'repro_lat_count{model="m"} 0' in text
+
+
+def test_merge_disjoint_label_sets_is_union():
+    # two replica snapshots that saw DIFFERENT models merge to the union
+    # with every series intact (no key intersection assumed)
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("reqs", "only-a").inc(2)
+    a.histogram("lat", "only-a").observe(0.1)
+    b.counter("reqs", "only-b").inc(3)
+    b.histogram("lat", "only-b").observe(0.2)
+    b.gauge("load", "only-b").set(0.5, stamp=1.0)
+    merged = MetricsRegistry.merge(a.snapshot(), b.snapshot())
+    assert merged["counters"][("reqs", "only-a")] == 2
+    assert merged["counters"][("reqs", "only-b")] == 3
+    assert merged["gauges"][("load", "only-b")] == (1.0, 0.5)
+    assert merged["histograms"][("lat", "only-a")]["count"] == 1
+    assert merged["histograms"][("lat", "only-b")]["count"] == 1
+    for q in (0.5, 0.95):
+        assert snapshot_quantile(merged["histograms"][("lat", "only-a")],
+                                 q) > 0
+
+
 def test_event_log_bounded_and_jsonl():
     log = EventLog(maxlen=3)
     for i in range(5):
