@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Run servelint from a checkout without installing the package:
+
+    python scripts/servelint.py src tests benchmarks examples scripts
+
+Thin wrapper over ``python -m repro.analysis`` that puts ``src/`` on
+sys.path; keeps working on a bare interpreter (no jax required).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""servelint: repo-specific static analysis for the serve plane.
+
+The serve plane's hardest-won invariants — clock discipline under
+simulated time, host-sync hygiene on the decode hot path, retrace and
+donation safety around the jitted step functions, bounded metric-label
+cardinality — were enforced only at runtime (the transfer-guard test,
+the ``trace_counts`` assertion) until they produced real bugs (the PR-6
+mixed-clock stamp, the PR-7 double-``now`` resolution).  This package
+moves those checks to lint time: an AST pass over every file of every
+PR, wired as a CI gate.
+
+Usage::
+
+    python scripts/servelint.py src tests benchmarks examples scripts
+    python -m repro.analysis --config servelint.toml src
+
+Rules (see ``repro/analysis/rules.py``):
+
+  SL001 clock-discipline     — wall-clock calls inside clock-param
+                               functions / sim-time modules
+  SL002 host-sync-hygiene    — device->host syncs in decode hot-path
+                               functions
+  SL003 retrace-hazard       — missing donation on state-first jitted
+                               fns; varying scalars in static positions
+  SL004 donation-hazard      — use-after-donate of buffers passed to
+                               donating CompiledFns entries
+  SL005 metric-cardinality   — uid-derived metric labels; inconsistent
+                               label shapes across call sites
+
+Suppress a reviewed finding inline (the reason string is mandatory)::
+
+    x = time.perf_counter()  # servelint: disable=SL001 -- real interval
+
+IMPORTANT: this package must stay importable without jax/numpy — the CI
+lint job runs it on a bare Python install.
+"""
+from repro.analysis.core import (Config, Finding, Project, load_config,
+                                 run_paths, run_source)
+from repro.analysis.rules import ALL_RULES
+
+__all__ = ["Config", "Finding", "Project", "load_config", "run_paths",
+           "run_source", "ALL_RULES"]

@@ -1,0 +1,57 @@
+"""CLI: ``python -m repro.analysis [--config servelint.toml] PATHS...``
+
+Exit codes: 0 clean, 1 unsuppressed findings, 2 usage/parse failure.
+``--report out.json`` writes the full report (findings + reviewed
+suppressions with their reasons) for the CI artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.core import load_config, run_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="servelint",
+        description="repo-specific static analysis for the serve plane")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to analyse")
+    ap.add_argument("--config", default=None,
+                    help="servelint.toml (default: ./servelint.toml "
+                         "when present)")
+    ap.add_argument("--root", default=".",
+                    help="repo root findings are reported relative to")
+    ap.add_argument("--report", default=None,
+                    help="write a JSON report here (CI artifact)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="summary line only")
+    args = ap.parse_args(argv)
+
+    try:
+        config = load_config(args.config, root=args.root)
+    except (OSError, ValueError) as e:
+        print(f"servelint: {e}", file=sys.stderr)
+        return 2
+
+    report = run_paths(args.paths, config=config)
+
+    if args.report:
+        os.makedirs(os.path.dirname(args.report) or ".", exist_ok=True)
+        with open(args.report, "w", encoding="utf-8") as f:
+            json.dump(report.to_json(), f, indent=2)
+
+    if not args.quiet:
+        for finding in report.findings:
+            print(finding.render())
+    n = len(report.findings)
+    print(f"servelint: {report.n_files} files, {n} finding"
+          f"{'s' if n != 1 else ''}, {len(report.suppressed)} suppressed")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,531 @@
+"""servelint framework: config, AST file context, suppressions, runner.
+
+Deliberately dependency-free (stdlib only — the CI lint job runs on a
+bare Python without jax), and pyproject-free: configuration lives in
+``servelint.toml`` at the repo root, parsed by a minimal TOML-subset
+reader (3.10 has no ``tomllib``; ``tomllib`` is used when available).
+
+The moving parts:
+
+  * ``Config``        — parsed ``servelint.toml`` with per-rule tables
+    and built-in defaults, so the tool is useful with no config at all;
+  * ``FileCtx``       — one parsed file: AST, source lines, resolved
+    import aliases (``jnp`` -> ``jax.numpy``, ``from time import
+    perf_counter`` -> ``time.perf_counter``), and every function with
+    its dotted qualname (``Class.method``) for pattern-scoped rules;
+  * suppressions      — ``# servelint: disable=SL001 -- reason`` on the
+    flagged line (or alone on the line above).  A directive WITHOUT a
+    reason is itself a finding (SL000): every suppression is a reviewed
+    decision, and the review is the reason string;
+  * ``Project``       — cross-file state for rules that need the whole
+    run (SL005 label-shape consistency), via the ``finalize`` hook;
+  * ``run_paths``     — collect files (honouring ``exclude`` globs),
+    run every rule, apply suppressions, return the report.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# findings
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic: rule id + location + message + fix hint."""
+    rule: str
+    path: str                     # repo-relative posix path
+    line: int
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}: {self.rule} {self.message}"
+        if self.hint:
+            s += f"  [{self.hint}]"
+        return s
+
+    def sort_key(self) -> Tuple[str, int, str]:
+        return (self.path, self.line, self.rule)
+
+
+# ---------------------------------------------------------------------------
+# minimal TOML-subset parser (sections, dotted sections, strings, ints,
+# floats, bools, flat arrays — everything servelint.toml needs)
+
+
+def _strip_comment(line: str) -> str:
+    out, quote = [], None
+    for ch in line:
+        if quote:
+            out.append(ch)
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            out.append(ch)
+        elif ch == "#":
+            break
+        else:
+            out.append(ch)
+    return "".join(out).strip()
+
+
+def _parse_scalar(tok: str):
+    tok = tok.strip()
+    if len(tok) >= 2 and tok[0] in "\"'" and tok[-1] == tok[0]:
+        return tok[1:-1]
+    if tok == "true":
+        return True
+    if tok == "false":
+        return False
+    try:
+        return int(tok)
+    except ValueError:
+        pass
+    try:
+        return float(tok)
+    except ValueError:
+        pass
+    raise ValueError(f"servelint.toml: cannot parse value {tok!r}")
+
+
+def _parse_array(body: str) -> list:
+    items, depth, cur, quote = [], 0, [], None
+    for ch in body:
+        if quote:
+            cur.append(ch)
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+            cur.append(ch)
+        elif ch == "[":
+            depth += 1
+            if depth > 1:
+                cur.append(ch)
+        elif ch == "]":
+            depth -= 1
+            if depth >= 1:
+                cur.append(ch)
+        elif ch == "," and depth == 1:
+            tok = "".join(cur).strip()
+            if tok:
+                items.append(_parse_scalar(tok))
+            cur = []
+        else:
+            cur.append(ch)
+    tok = "".join(cur).strip()
+    if tok:
+        items.append(_parse_scalar(tok))
+    return items
+
+
+def parse_toml(text: str) -> dict:
+    """Parse the TOML subset servelint uses.  Uses the stdlib parser
+    when available (3.11+) so quoting edge cases behave identically."""
+    try:
+        import tomllib
+        return tomllib.loads(text)
+    except ImportError:
+        pass
+    root: dict = {}
+    table = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i])
+        i += 1
+        if not line:
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            table = root
+            for part in line[1:-1].split("."):
+                part = part.strip().strip("\"'")
+                table = table.setdefault(part, {})
+            continue
+        if "=" not in line:
+            raise ValueError(f"servelint.toml: bad line {line!r}")
+        key, _, val = line.partition("=")
+        key = key.strip().strip("\"'")
+        val = val.strip()
+        if val.startswith("["):
+            # arrays may span lines: accumulate until brackets balance
+            while val.count("[") > val.count("]"):
+                if i >= len(lines):
+                    raise ValueError("servelint.toml: unterminated array")
+                val += " " + _strip_comment(lines[i])
+                i += 1
+            table[key] = _parse_array(val)
+        else:
+            table[key] = _parse_scalar(val)
+    return root
+
+
+# ---------------------------------------------------------------------------
+# config
+
+
+def _defaults() -> dict:
+    return {
+        "exclude": [],
+        "SL001": {
+            "clock_params": ["now", "clock", "stamp"],
+            "clock_modules": [],
+            "wall_calls": ["time.perf_counter", "time.time",
+                           "time.monotonic"],
+        },
+        "SL002": {
+            "hot_functions": [],
+            "device_fns": ["fused_step", "fused_burst", "first_tokens",
+                           "_fused_step", "_fused_burst", "_first_fn",
+                           "sample_rows"],
+        },
+        "SL003": {
+            "donated_state_params": ["cache", "state", "dstate", "pool"],
+            "static_positions": {"fused_burst": [3], "_fused_burst": [3]},
+        },
+        "SL004": {
+            "donated": {
+                "fused_step": [1, 2], "_fused_step": [1, 2],
+                "fused_burst": [1, 2], "_fused_burst": [1, 2],
+                "first_tokens": [0], "_first_fn": [0],
+                "occupy": [0], "_occupy_fn": [0],
+                "deactivate": [0], "_deactivate_fn": [0],
+                "scatter": [0], "_scatter": [0],
+                "scatter_slot": [0], "_scatter_slot": [0],
+                "copy": [0], "_copy": [0],
+                "insert": [0], "_insert": [0],
+            },
+        },
+        "SL005": {
+            "uid_label_names": ["uid", "request_id", "req_id"],
+        },
+    }
+
+
+def _merge(base: dict, over: dict) -> dict:
+    out = dict(base)
+    for k, v in over.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _merge(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+@dataclass
+class Config:
+    data: dict = field(default_factory=_defaults)
+    root: str = "."               # paths in findings are relative to this
+
+    def rule(self, rule_id: str) -> dict:
+        return self.data.get(rule_id, {})
+
+    @property
+    def exclude(self) -> List[str]:
+        return list(self.data.get("exclude", []))
+
+    def excluded(self, relpath: str) -> bool:
+        for pat in self.exclude:
+            if fnmatch.fnmatch(relpath, pat) or \
+                    relpath.startswith(pat.rstrip("*/") + "/"):
+                return True
+        return False
+
+
+def load_config(path: Optional[str] = None, root: str = ".") -> Config:
+    """Load ``servelint.toml`` (defaults merged under it). ``path=None``
+    looks for ``<root>/servelint.toml`` and falls back to defaults."""
+    data = _defaults()
+    if path is None:
+        cand = os.path.join(root, "servelint.toml")
+        path = cand if os.path.exists(cand) else None
+    if path is not None:
+        with open(path, encoding="utf-8") as f:
+            raw = parse_toml(f.read())
+        data = _merge(data, raw.get("servelint", raw))
+    return Config(data=data, root=root)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+_DIRECTIVE = re.compile(
+    r"#\s*servelint:\s*disable=([A-Za-z0-9_,\s]+?|all)"
+    r"\s*(?:--\s*(.*?))?\s*$")
+
+
+@dataclass
+class Suppression:
+    line: int                     # source line the directive sits on
+    applies_to: int               # line it suppresses
+    rules: Optional[frozenset]    # None == all
+    reason: str
+
+
+def scan_suppressions(source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    for i, raw in enumerate(source.splitlines(), start=1):
+        m = _DIRECTIVE.search(raw)
+        if not m:
+            continue
+        rules_s, reason = m.group(1), (m.group(2) or "").strip()
+        rules = (None if rules_s.strip() == "all" else
+                 frozenset(r.strip() for r in rules_s.split(",") if r.strip()))
+        code = raw[:m.start()].strip()
+        # a standalone directive line suppresses the NEXT line
+        target = i if code else i + 1
+        out.append(Suppression(i, target, rules, reason))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# file context
+
+
+def _import_aliases(tree: ast.AST) -> Dict[str, str]:
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+@dataclass
+class FuncInfo:
+    node: ast.AST                 # FunctionDef | AsyncFunctionDef
+    qualname: str                 # Class.method / outer.<locals>.inner
+    params: List[str]
+
+
+class FileCtx:
+    """One parsed file plus everything the rules share."""
+
+    def __init__(self, relpath: str, source: str, config: Config):
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.config = config
+        self.tree = ast.parse(source, filename=relpath)
+        self.imports = _import_aliases(self.tree)
+        self.functions: List[FuncInfo] = []
+        self._collect_functions(self.tree, "")
+
+    def _collect_functions(self, node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qn = f"{prefix}{child.name}"
+                args = child.args
+                params = ([a.arg for a in args.posonlyargs]
+                          + [a.arg for a in args.args]
+                          + [a.arg for a in args.kwonlyargs])
+                self.functions.append(FuncInfo(child, qn, params))
+                self._collect_functions(child, f"{qn}.<locals>.")
+            elif isinstance(child, ast.ClassDef):
+                self._collect_functions(child, f"{prefix}{child.name}.")
+            else:
+                self._collect_functions(child, prefix)
+
+    # -- name resolution --------------------------------------------------
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Dotted path of a Name/Attribute chain (``self.cache`` ->
+        "self.cache"); None for anything else."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if isinstance(node, ast.Name):
+            parts.append(node.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted path with the ROOT name resolved through imports:
+        ``jnp.asarray`` -> "jax.numpy.asarray", a bare ``perf_counter``
+        from ``from time import perf_counter`` -> "time.perf_counter"."""
+        path = self.dotted(node)
+        if path is None:
+            return None
+        head, _, rest = path.partition(".")
+        head = self.imports.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def terminal(self, node: ast.AST) -> Optional[str]:
+        """Last component of a callee chain: ``self._fused_step`` ->
+        "_fused_step", ``fns.occupy`` -> "occupy"."""
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        if isinstance(node, ast.Name):
+            return node.id
+        return None
+
+
+# ---------------------------------------------------------------------------
+# runner
+
+
+@dataclass
+class Project:
+    """Whole-run state shared by finalize-phase rules."""
+    config: Config
+    files: List[FileCtx] = field(default_factory=list)
+    state: dict = field(default_factory=dict)
+
+
+@dataclass
+class Report:
+    findings: List[Finding]       # unsuppressed — these fail the gate
+    suppressed: List[Tuple[Finding, Suppression]]
+    n_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {
+            "files": self.n_files,
+            "findings": [vars(f) for f in self.findings],
+            "suppressed": [
+                {**vars(f), "reason": s.reason, "directive_line": s.line}
+                for f, s in self.suppressed],
+        }
+
+
+def _collect_files(paths: Sequence[str], config: Config) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        ap = os.path.join(config.root, p) if not os.path.isabs(p) else p
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+    seen, files = set(), []
+    for ap in out:
+        rel = os.path.relpath(ap, config.root).replace(os.sep, "/")
+        if rel in seen or config.excluded(rel):
+            continue
+        seen.add(rel)
+        files.append(ap)
+    return files
+
+
+def _apply_suppressions(findings: List[Finding], source: str
+                        ) -> Tuple[List[Finding], List[Tuple[Finding,
+                                                             Suppression]]]:
+    sups = scan_suppressions(source)
+    by_line: Dict[int, List[Suppression]] = {}
+    for s in sups:
+        by_line.setdefault(s.applies_to, []).append(s)
+    live: List[Finding] = []
+    quiet: List[Tuple[Finding, Suppression]] = []
+    for f in findings:
+        hit = None
+        for s in by_line.get(f.line, []):
+            if s.rules is None or f.rule in s.rules:
+                hit = s
+                break
+        if hit is None:
+            live.append(f)
+        else:
+            quiet.append((f, hit))
+    # suppression hygiene: a directive with no reason is itself a
+    # finding — every suppression must be a reviewed, explained decision
+    for s in sups:
+        if not s.reason:
+            live.append(Finding(
+                "SL000", "", s.line,
+                "suppression directive without a reason string",
+                "append `-- <why this is safe>` to the directive"))
+    return live, quiet
+
+
+def run_source(relpath: str, source: str, config: Optional[Config] = None,
+               rules=None) -> List[Finding]:
+    """Analyse ONE source blob (tests use this); suppressions applied,
+    cross-file finalize rules run against just this file."""
+    config = config or Config()
+    from repro.analysis.rules import ALL_RULES
+    rules = rules if rules is not None else ALL_RULES
+    project = Project(config=config)
+    ctx = FileCtx(relpath, source, config)
+    project.files.append(ctx)
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check_file(ctx, project))
+    for rule in rules:
+        fin = getattr(rule, "finalize", None)
+        if fin is not None:
+            findings.extend(fin(project))
+    live, _quiet = _apply_suppressions(
+        [f for f in findings], source)
+    out = [Finding(f.rule, relpath, f.line, f.message, f.hint)
+           if not f.path else f for f in live]
+    return sorted(out, key=Finding.sort_key)
+
+
+def run_paths(paths: Sequence[str], config: Optional[Config] = None,
+              rules=None) -> Report:
+    """Analyse files/directories and return the gate report."""
+    config = config or Config()
+    from repro.analysis.rules import ALL_RULES
+    rules = rules if rules is not None else ALL_RULES
+    files = _collect_files(paths, config)
+    project = Project(config=config)
+    per_file: List[Tuple[FileCtx, List[Finding]]] = []
+    for ap in files:
+        rel = os.path.relpath(ap, config.root).replace(os.sep, "/")
+        with open(ap, encoding="utf-8") as f:
+            source = f.read()
+        try:
+            ctx = FileCtx(rel, source, config)
+        except SyntaxError as e:
+            per_file.append((None, [Finding(
+                "SL000", rel, e.lineno or 0,
+                f"syntax error: {e.msg}", "")]))
+            continue
+        project.files.append(ctx)
+        findings: List[Finding] = []
+        for rule in rules:
+            findings.extend(rule.check_file(ctx, project))
+        per_file.append((ctx, findings))
+    # finalize-phase (cross-file) findings attach to their own files
+    extra: Dict[str, List[Finding]] = {}
+    for rule in rules:
+        fin = getattr(rule, "finalize", None)
+        if fin is not None:
+            for f in fin(project):
+                extra.setdefault(f.path, []).append(f)
+    live_all: List[Finding] = []
+    quiet_all: List[Tuple[Finding, Suppression]] = []
+    for ctx, findings in per_file:
+        if ctx is None:               # syntax error pseudo-finding
+            live_all.extend(findings)
+            continue
+        findings = findings + extra.pop(ctx.relpath, [])
+        findings = [Finding(f.rule, ctx.relpath, f.line, f.message, f.hint)
+                    if not f.path else f for f in findings]
+        live, quiet = _apply_suppressions(findings, ctx.source)
+        live = [Finding(f.rule, ctx.relpath, f.line, f.message, f.hint)
+                if not f.path else f for f in live]
+        live_all.extend(live)
+        quiet_all.extend(quiet)
+    for leftover in extra.values():   # files not parsed this run
+        live_all.extend(leftover)
+    return Report(findings=sorted(live_all, key=Finding.sort_key),
+                  suppressed=quiet_all, n_files=len(files))

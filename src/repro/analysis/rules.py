@@ -1,0 +1,624 @@
+"""servelint rules SL001-SL005.
+
+Each rule encodes one invariant this codebase has already paid for at
+runtime (see README "Static analysis" for the origin bugs).  Rules are
+plain objects with ``id``, ``check_file(ctx, project)`` and optionally
+``finalize(project)`` for cross-file passes; ``ALL_RULES`` is the
+registry the runner and CLI use.
+
+Findings may be created with ``path=""`` — the runner fills in the
+file's relpath; finalize-phase findings must carry their own path.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.core import FileCtx, Finding, FuncInfo, Project
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def _walk_own(node: ast.AST) -> Iterator[ast.AST]:
+    """ast.walk limited to the function's own body: does not descend
+    into nested function/class definitions."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(child))
+
+
+def _fn_qual(ctx: FileCtx, fn: FuncInfo) -> str:
+    return f"{ctx.relpath}::{fn.qualname}"
+
+
+def _match_any(target: str, patterns: List[str]) -> bool:
+    return any(fnmatch.fnmatch(target, p) for p in patterns)
+
+
+# ---------------------------------------------------------------------------
+# SL001 clock-discipline
+
+
+def _is_none_check(node: ast.AST, param: str) -> Optional[bool]:
+    """``param is None`` -> True, ``param is not None`` -> False,
+    anything else -> None."""
+    if (isinstance(node, ast.Compare) and len(node.ops) == 1
+            and isinstance(node.left, ast.Name) and node.left.id == param
+            and isinstance(node.comparators[0], ast.Constant)
+            and node.comparators[0].value is None):
+        if isinstance(node.ops[0], ast.Is):
+            return True
+        if isinstance(node.ops[0], ast.IsNot):
+            return False
+    return None
+
+
+class ClockDiscipline:
+    """SL001: inside a function that takes simulated time (a
+    ``now``/``clock``/``stamp`` parameter) or lives in a configured
+    sim-time module, wall-clock reads are only legal as the single
+    entry resolution ``now = time.perf_counter() if now is None else
+    now`` (expression or if-statement form).  Anything else is the
+    PR-6 mixed-clock / PR-7 double-resolution bug class."""
+
+    id = "SL001"
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        clock_params = cfg.get("clock_params", [])
+        clock_modules = cfg.get("clock_modules", [])
+        wall_calls = set(cfg.get("wall_calls", []))
+        in_clock_module = _match_any(ctx.relpath, clock_modules)
+        out: List[Finding] = []
+        for fn in ctx.functions:
+            params = [p for p in fn.params if p in clock_params]
+            if not params and not in_clock_module:
+                continue
+            out.extend(self._check_fn(ctx, fn, params, wall_calls))
+        return out
+
+    # -- per function -----------------------------------------------------
+    def _check_fn(self, ctx: FileCtx, fn: FuncInfo, params: List[str],
+                  wall_calls) -> List[Finding]:
+        def is_wall(node: ast.AST) -> bool:
+            return (isinstance(node, ast.Call)
+                    and ctx.resolve(node.func) in wall_calls)
+
+        allowed: set = set()          # id() of wall-call nodes in resolutions
+        in_resolution: set = set()    # id() of every node inside one
+        resolutions: Dict[str, List[int]] = {p: [] for p in params}
+
+        def note_resolution(param: str, wall_node: ast.AST, line: int,
+                            *construct: ast.AST):
+            allowed.add(id(wall_node))
+            resolutions[param].append(line)
+            for c in construct:
+                for sub in ast.walk(c):
+                    in_resolution.add(id(sub))
+
+        # pass 1: find resolution sites
+        for node in _walk_own(fn.node):
+            # expression form:  x = WALL() if param is None else param
+            if isinstance(node, ast.IfExp):
+                for param in params:
+                    chk = _is_none_check(node.test, param)
+                    if chk is True and is_wall(node.body):
+                        note_resolution(param, node.body, node.lineno, node)
+                    elif chk is False and is_wall(node.orelse):
+                        note_resolution(param, node.orelse, node.lineno, node)
+            # statement form:  if param is None: param = WALL()
+            elif isinstance(node, ast.If):
+                for param in params:
+                    if _is_none_check(node.test, param) is not True:
+                        continue
+                    for stmt in node.body:
+                        if (isinstance(stmt, ast.Assign)
+                                and is_wall(stmt.value)):
+                            note_resolution(param, stmt.value, stmt.lineno,
+                                            node.test, stmt)
+            # fallback form:  x = param or WALL()
+            elif isinstance(node, ast.BoolOp) and isinstance(node.op, ast.Or):
+                vals = node.values
+                if (len(vals) == 2 and isinstance(vals[0], ast.Name)
+                        and vals[0].id in params and is_wall(vals[1])):
+                    note_resolution(vals[0].id, vals[1], node.lineno, node)
+
+        out: List[Finding] = []
+        # pass 2: double resolution
+        for param, lines in resolutions.items():
+            for line in sorted(lines)[1:]:
+                out.append(Finding(
+                    self.id, "", line,
+                    f"`{param}` resolved against the wall clock more than "
+                    f"once in `{fn.qualname}` (first at line "
+                    f"{sorted(lines)[0]})",
+                    f"resolve `{param}` exactly once at function entry"))
+        # pass 2b: resolution AFTER the param was already consumed (the
+        # PR-7 `enqueue` bug: `_note(..., now, ...)` saw None on one
+        # path while the evict branch resolved a wall stamp on another)
+        for param, lines in resolutions.items():
+            if not lines:
+                continue
+            first_res = min(lines)
+            uses = [n.lineno for n in _walk_own(fn.node)
+                    if isinstance(n, ast.Name) and n.id == param
+                    and isinstance(n.ctx, ast.Load)
+                    and id(n) not in in_resolution]
+            early = [u for u in uses if u < first_res]
+            if early:
+                out.append(Finding(
+                    self.id, "", first_res,
+                    f"`{param}` resolved here but already used at line "
+                    f"{min(early)} in `{fn.qualname}` — callers passing "
+                    "None get mixed/unresolved stamps",
+                    f"move the `{param}` resolution to function entry"))
+        # pass 3: stray wall-clock reads (the PR-6 mixed-clock bug)
+        for node in _walk_own(fn.node):
+            if is_wall(node) and id(node) not in allowed:
+                why = (f"`{fn.qualname}` takes simulated time "
+                       f"({', '.join(params)})" if params else
+                       f"`{ctx.relpath}` participates in simulated time")
+                out.append(Finding(
+                    self.id, "", node.lineno,
+                    f"direct `{ctx.resolve(node.func)}()` call — {why}",
+                    "use the resolved clock value, or suppress with a "
+                    "reason if this measures a real wall interval"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SL002 host-sync hygiene
+
+
+class HostSyncHygiene:
+    """SL002: device->host synchronisation inside the decode hot path.
+    The runtime transfer guard (PR 5) catches these when the path is
+    exercised; this catches them on every PR.  ``jax.device_get`` at a
+    designed sync point needs a reviewed suppression."""
+
+    id = "SL002"
+
+    # jnp.asarray is a host->device UPLOAD (legal in the hot path);
+    # np.asarray on a device value is the device->host direction.
+    _SYNC_CALLS = {"jax.device_get", "numpy.asarray", "numpy.array"}
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        hot = cfg.get("hot_functions", [])
+        if not hot:
+            return []
+        device_fns = set(cfg.get("device_fns", []))
+        out: List[Finding] = []
+        for fn in ctx.functions:
+            if not _match_any(_fn_qual(ctx, fn), hot):
+                continue
+            out.extend(self._check_fn(ctx, fn, device_fns))
+        return out
+
+    def _check_fn(self, ctx: FileCtx, fn: FuncInfo, device_fns
+                  ) -> List[Finding]:
+        # taint: names assigned from device-producing calls; device_get
+        # output is host-side, so it clears taint for its targets
+        tainted: set = set()
+        host: set = set()
+        for node in _walk_own(fn.node):
+            if not isinstance(node, ast.Assign):
+                continue
+            val = node.value
+            if not isinstance(val, ast.Call):
+                continue
+            resolved = ctx.resolve(val.func) or ""
+            term = ctx.terminal(val.func) or ""
+            targets: List[str] = []
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    targets.append(t.id)
+                elif isinstance(t, ast.Tuple):
+                    targets.extend(e.id for e in t.elts
+                                   if isinstance(e, ast.Name))
+            if resolved == "jax.device_get":
+                host.update(targets)
+            elif term in device_fns or resolved.startswith("jax."):
+                tainted.update(targets)
+        tainted -= host
+
+        out: List[Finding] = []
+        for node in _walk_own(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            resolved = ctx.resolve(node.func) or ""
+            if resolved in self._SYNC_CALLS:
+                out.append(Finding(
+                    self.id, "", node.lineno,
+                    f"`{resolved}` in hot-path function `{fn.qualname}` "
+                    "forces a device->host sync",
+                    "keep values on device, or suppress with a reason if "
+                    "this is a designed sync point"))
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                out.append(Finding(
+                    self.id, "", node.lineno,
+                    f"`.item()` in hot-path function `{fn.qualname}` "
+                    "forces a device->host sync",
+                    "batch the readback at the designed sync point"))
+            elif (isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and node.args and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id in tainted):
+                out.append(Finding(
+                    self.id, "", node.lineno,
+                    f"`{node.func.id}({node.args[0].id})` on a device "
+                    f"value in hot-path function `{fn.qualname}` forces "
+                    "a device->host sync",
+                    "keep the value on device or read it back at the "
+                    "designed sync point"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SL003 retrace hazards
+
+
+class RetraceHazard:
+    """SL003: (a) ``jax.jit`` on a function whose first parameter is
+    named like donated serving state but without ``donate_argnums`` —
+    every step then keeps two live copies of the cache in HBM; (b) a
+    varying Python scalar (loop variable, ``len(...)``) passed in a
+    known static position — one retrace per distinct value."""
+
+    id = "SL003"
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        state_params = cfg.get("donated_state_params", [])
+        static_pos = {k: [int(i) for i in v]
+                      for k, v in cfg.get("static_positions", {}).items()}
+        out: List[Finding] = []
+        out.extend(self._check_jit_sites(ctx, state_params))
+        out.extend(self._check_static_positions(ctx, static_pos))
+        return out
+
+    # -- (a) missing donation --------------------------------------------
+    def _first_param(self, fn: FuncInfo) -> Optional[str]:
+        for p in fn.params:
+            if p not in ("self", "cls"):
+                return p
+        return None
+
+    def _check_jit_sites(self, ctx: FileCtx, state_params) -> List[Finding]:
+        module_fns = {fn.qualname: fn for fn in ctx.functions
+                      if "." not in fn.qualname}
+        out: List[Finding] = []
+
+        def has_donate(call: ast.Call) -> bool:
+            return any(kw.arg in ("donate_argnums", "donate_argnames")
+                       for kw in call.keywords)
+
+        for node in ast.walk(ctx.tree):
+            # jax.jit(fn, ...) call form
+            if (isinstance(node, ast.Call)
+                    and ctx.resolve(node.func) == "jax.jit"
+                    and node.args and isinstance(node.args[0], ast.Name)):
+                fn = module_fns.get(node.args[0].id)
+                if fn is None:
+                    continue
+                first = self._first_param(fn)
+                if (first in state_params and not has_donate(node)):
+                    out.append(Finding(
+                        self.id, "", node.lineno,
+                        f"`jax.jit({fn.qualname})` without donate_argnums "
+                        f"— first parameter `{first}` is serving state",
+                        "add donate_argnums=(0,) (or suppress with a "
+                        "reason if the buffer is reused by the caller)"))
+            # @jax.jit decorator form
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    bare = (not isinstance(dec, ast.Call)
+                            and ctx.resolve(dec) == "jax.jit")
+                    wrapped = (isinstance(dec, ast.Call)
+                               and ctx.resolve(dec.func) == "jax.jit")
+                    if not (bare or wrapped):
+                        continue
+                    if wrapped and any(
+                            kw.arg in ("donate_argnums", "donate_argnames")
+                            for kw in dec.keywords):
+                        continue
+                    args = node.args
+                    ps = ([a.arg for a in args.posonlyargs]
+                          + [a.arg for a in args.args])
+                    first = next((p for p in ps if p not in ("self", "cls")),
+                                 None)
+                    if first in state_params:
+                        out.append(Finding(
+                            self.id, "", dec.lineno,
+                            f"`@jax.jit` on `{node.name}` without "
+                            f"donate_argnums — first parameter `{first}` "
+                            "is serving state",
+                            "add donate_argnums=(0,)"))
+        return out
+
+    # -- (b) varying scalar in static position ----------------------------
+    def _check_static_positions(self, ctx: FileCtx, static_pos
+                                ) -> List[Finding]:
+        if not static_pos:
+            return []
+        out: List[Finding] = []
+        for fn in ctx.functions:
+            loop_vars: set = set()
+            for node in _walk_own(fn.node):
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    for t in ast.walk(node.target):
+                        if isinstance(t, ast.Name):
+                            loop_vars.add(t.id)
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    for gen in node.generators:
+                        for t in ast.walk(gen.target):
+                            if isinstance(t, ast.Name):
+                                loop_vars.add(t.id)
+            for node in _walk_own(fn.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                positions = static_pos.get(ctx.terminal(node.func) or "")
+                if not positions:
+                    continue
+                for pos in positions:
+                    if pos >= len(node.args):
+                        continue
+                    arg = node.args[pos]
+                    varying = (
+                        (isinstance(arg, ast.Name) and arg.id in loop_vars)
+                        or (isinstance(arg, ast.Call)
+                            and isinstance(arg.func, ast.Name)
+                            and arg.func.id == "len"))
+                    if varying:
+                        desc = (f"loop variable `{arg.id}`"
+                                if isinstance(arg, ast.Name)
+                                else "`len(...)`")
+                        out.append(Finding(
+                            self.id, "", node.lineno,
+                            f"{desc} passed in static position {pos} of "
+                            f"`{ctx.terminal(node.func)}` — retraces on "
+                            "every distinct value",
+                            "quantise/bucket the value or hoist it out "
+                            "of the loop"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SL004 donation use-after-donate
+
+
+class DonationHazard:
+    """SL004: a buffer passed into a donating position of a
+    CompiledFns/PagedCompiledFns entry is dead after the call — jax
+    reuses its memory for the output.  Reading it afterwards (without
+    rebinding) returns garbage or raises on deleted buffers."""
+
+    id = "SL004"
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        donated = {k: [int(i) for i in v]
+                   for k, v in cfg.get("donated", {}).items()}
+        if not donated:
+            return []
+        out: List[Finding] = []
+        for fn in ctx.functions:
+            out.extend(self._check_fn(ctx, fn, donated))
+        return out
+
+    def _check_fn(self, ctx: FileCtx, fn: FuncInfo, donated
+                  ) -> List[Finding]:
+        consumed: Dict[str, Tuple[int, str]] = {}   # path -> (line, callee)
+        out: List[Finding] = []
+
+        def handle_expr(expr: ast.AST) -> None:
+            """Flag reads of consumed paths, then record new
+            consumptions from donating calls in this expression."""
+            for node in ast.walk(expr):
+                if (isinstance(node, (ast.Name, ast.Attribute))
+                        and isinstance(getattr(node, "ctx", None), ast.Load)):
+                    path = ctx.dotted(node)
+                    if path in consumed:
+                        line, callee = consumed[path]
+                        out.append(Finding(
+                            self.id, "", node.lineno,
+                            f"`{path}` read after being donated to "
+                            f"`{callee}` at line {line}",
+                            f"rebind `{path}` from the call result "
+                            "before reusing it"))
+                        del consumed[path]    # flag once per donation
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                positions = donated.get(ctx.terminal(node.func) or "")
+                if not positions:
+                    continue
+                for pos in positions:
+                    if pos >= len(node.args):
+                        continue
+                    path = ctx.dotted(node.args[pos])
+                    if path is not None:
+                        consumed[path] = (node.lineno,
+                                          ctx.terminal(node.func))
+
+        def clear_target(t: ast.AST) -> None:
+            if isinstance(t, ast.Tuple):
+                for e in t.elts:
+                    clear_target(e)
+                return
+            path = ctx.dotted(t)
+            if path is not None:
+                consumed.pop(path, None)
+
+        def handle_stmt(stmt: ast.AST) -> None:
+            if isinstance(stmt, ast.Assign):
+                handle_expr(stmt.value)
+                for t in stmt.targets:
+                    clear_target(t)
+            elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                if stmt.value is not None:
+                    handle_expr(stmt.value)
+                if isinstance(stmt, ast.AnnAssign):
+                    clear_target(stmt.target)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                if stmt.value is not None:
+                    handle_expr(stmt.value)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                handle_expr(stmt.test)
+                for s in stmt.body:
+                    handle_stmt(s)
+                for s in getattr(stmt, "orelse", []):
+                    handle_stmt(s)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                handle_expr(stmt.iter)
+                for s in stmt.body:
+                    handle_stmt(s)
+                for s in stmt.orelse:
+                    handle_stmt(s)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    handle_expr(item.context_expr)
+                for s in stmt.body:
+                    handle_stmt(s)
+            elif isinstance(stmt, ast.Try):
+                for s in (stmt.body + stmt.orelse + stmt.finalbody):
+                    handle_stmt(s)
+                for h in stmt.handlers:
+                    for s in h.body:
+                        handle_stmt(s)
+            # nested defs: fresh scope, skip
+
+        body = getattr(fn.node, "body", [])
+        for stmt in body:
+            handle_stmt(stmt)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# SL005 metric-label cardinality
+
+
+_METRIC_FACTORIES = ("counter", "gauge", "histogram")
+
+
+def _shape_from_template(s: str):
+    """Label shape: plain string vs composite ``base|k=v|...`` — the
+    shape is the sorted tuple of composite keys."""
+    if "|" not in s:
+        return ("plain",)
+    keys = []
+    for part in s.split("|")[1:]:
+        k = part.split("=", 1)[0].strip()
+        if k:
+            keys.append(k)
+    return ("composite", tuple(sorted(keys)))
+
+
+def _label_shape(node: Optional[ast.AST]):
+    if node is None:
+        return ("plain",)          # label defaults to ""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return _shape_from_template(node.value)
+    if isinstance(node, ast.JoinedStr):
+        const = "".join(v.value for v in node.values
+                        if isinstance(v, ast.Constant)
+                        and isinstance(v.value, str))
+        if "|" in const:
+            return _shape_from_template("x" + const if
+                                        const.startswith("|") else const)
+        return ("plain",)
+    return None                    # dynamic — unknown shape, skip
+
+
+def _shape_str(shape) -> str:
+    if shape == ("plain",):
+        return "plain label"
+    return "composite label with keys {%s}" % ", ".join(shape[1])
+
+
+class MetricCardinality:
+    """SL005: (a) metric labels derived from per-request identifiers —
+    unbounded series cardinality; (b) the same metric name registered
+    with structurally different label shapes at different call sites
+    (plain vs ``base|k=v`` composite, or different composite keys)."""
+
+    id = "SL005"
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        uid_names = set(cfg.get("uid_label_names", []))
+        sites = project.state.setdefault("SL005.sites", [])
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _METRIC_FACTORIES
+                    and node.args):
+                continue
+            name_node = node.args[0]
+            label = node.args[1] if len(node.args) > 1 else None
+            if label is None:
+                for kw in node.keywords:
+                    if kw.arg == "label":
+                        label = kw.value
+            # (a) uid-derived labels
+            if label is not None:
+                for sub in ast.walk(label):
+                    leaf = None
+                    if isinstance(sub, ast.Name) and sub.id in uid_names:
+                        leaf = sub.id
+                    elif (isinstance(sub, ast.Attribute)
+                            and sub.attr in uid_names):
+                        leaf = sub.attr
+                    if leaf is not None:
+                        out.append(Finding(
+                            self.id, "", node.lineno,
+                            f"metric label derived from `{leaf}` — one "
+                            "series per request, unbounded cardinality",
+                            "aggregate per model/replica; put request "
+                            "ids in the trace, not in metric labels"))
+                        break
+            # (b) collect shape for the cross-file pass (literal names
+            # only — computed names like "sched_" + event are skipped)
+            if (isinstance(name_node, ast.Constant)
+                    and isinstance(name_node.value, str)):
+                shape = _label_shape(label)
+                if shape is not None:
+                    sites.append((name_node.value, shape, ctx.relpath,
+                                  node.lineno))
+        return out
+
+    def finalize(self, project: Project) -> List[Finding]:
+        sites = project.state.get("SL005.sites", [])
+        by_name: Dict[str, List[Tuple]] = {}
+        for name, shape, path, line in sites:
+            by_name.setdefault(name, []).append((shape, path, line))
+        out: List[Finding] = []
+        for name, entries in by_name.items():
+            shapes = {s for s, _, _ in entries}
+            if len(shapes) < 2:
+                continue
+            counts: Dict[Tuple, int] = {}
+            for s, _, _ in entries:
+                counts[s] = counts.get(s, 0) + 1
+            majority = max(counts, key=lambda s: counts[s])
+            for s, path, line in entries:
+                if s != majority:
+                    out.append(Finding(
+                        self.id, path, line,
+                        f"metric `{name}` registered with {_shape_str(s)} "
+                        f"here but {_shape_str(majority)} elsewhere",
+                        "use one label shape per metric name"))
+        return out
+
+
+ALL_RULES = [ClockDiscipline(), HostSyncHygiene(), RetraceHazard(),
+             DonationHazard(), MetricCardinality()]

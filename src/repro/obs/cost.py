@@ -150,10 +150,16 @@ class CostLedger:
     def totals(self, now: Optional[float] = None) -> Dict[str, float]:
         """Ledger totals.  ``total`` is recomputed from replica lifetime
         wall-stamps — NOT from the busy/idle accumulators — so it is an
-        independent check on the interval chaining."""
+        independent check on the interval chaining.
+
+        With ``now=None`` the ledger falls back to the newest timestamp
+        it has itself observed (marks and down stamps), NOT the wall
+        clock: the ledger's time domain is whatever its callers stamp
+        with, and a ``time.perf_counter()`` fallback silently corrupts
+        totals for simulated-clock drivers."""
         if now is None:
-            import time
-            now = time.perf_counter()
+            now = max((m.down_t if m.down_t is not None else m.mark
+                       for m in self.meters), default=0.0)
         busy = idle = cold = total = 0.0
         for m in self.meters:
             end = m.down_t if m.down_t is not None else now

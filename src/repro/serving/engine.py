@@ -352,7 +352,8 @@ def compile_fns(cfg: ModelConfig, backend: BackendProfile,
             chunk_prefill=jax.jit(_chunk),
             scatter_slot=jax.jit(dense_scatter_slot, donate_argnums=(0,)))
     return CompiledFns(prefill=jax.jit(_prefill), decode=jax.jit(_decode),
-                       insert=jax.jit(_insert_impl), **extra)
+                       insert=jax.jit(_insert_impl, donate_argnums=(0,)),
+                       **extra)
 
 
 @dataclass(frozen=True)
@@ -723,6 +724,7 @@ class InferenceEngine:
         traffic is the (max_batch,) int32 vector of sampled token ids."""
         nxt, self.cache, self._dstate = self._fused_step(
             self.params, self.cache, self._dstate)
+        # servelint: disable=SL002 -- the designed per-step sync point
         toks = jax.device_get(nxt)
         t = time.perf_counter()
         tracer = self._obs.tracer if self._obs is not None else None
@@ -747,6 +749,7 @@ class InferenceEngine:
         k = self.decode_burst
         toks, alive, self.cache, self._dstate = self._fused_burst(
             self.params, self.cache, self._dstate, k)
+        # servelint: disable=SL002 -- the designed per-burst sync point
         toks, alive = jax.device_get((toks, alive))
         counts: Dict[int, int] = {}
         for j in range(k):
@@ -819,6 +822,7 @@ class InferenceEngine:
         toks, self._dstate = self._first_fn(
             self._dstate, stacked, jnp.asarray(idx), jnp.asarray(pos_vals),
             self._stack_tables(pend, nb))
+        # servelint: disable=SL002 -- first-token ids must reach the host here
         toks = jax.device_get(toks)
         t = time.perf_counter()
         tracer = self._obs.tracer if self._obs is not None else None

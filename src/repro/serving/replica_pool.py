@@ -218,6 +218,7 @@ class ReplicaPool:
     def _spin_up(self, model: str, backend: str, now: float) -> None:
         key = (model, backend)
         reps = self._replicas[key]
+        # servelint: disable=SL001 -- real wall interval: spin-up duration
         t0 = time.perf_counter()
         cfg = self.models[model]
         warm = model in self._params and key in self._code
@@ -252,6 +253,7 @@ class ReplicaPool:
         eng.run([Request(uid=-1, tokens=[1, 2, 3],
                          sampling=SamplingParams(max_new_tokens=2))])
         eng._obs = probe_obs
+        # servelint: disable=SL001 -- real wall interval: spin-up duration
         dur = time.perf_counter() - t0
         reps.append(eng)
         entry = self.reg.entry(model, backend)
@@ -276,8 +278,8 @@ class ReplicaPool:
             # the same clock engine.step() stamps with.
             eng._obs.meter = self.obs.ledger.replica_up(
                 model, backend, chips=entry.cost.chips, cold_s=dur,
-                t=time.perf_counter())
-            self._update_memory_gauges(model)
+                t=time.perf_counter())  # servelint: disable=SL001 -- ledger is perf_counter domain (engine.step stamps feed it)
+            self._update_memory_gauges(model, now)
 
     def _spin_down(self, model: str, backend: str, target: int,
                    now: float) -> None:
@@ -294,8 +296,9 @@ class ReplicaPool:
                     and eng._obs.meter is not None):
                 # close the meter: trailing idle accrues until here, the
                 # reclaim point scale-to-zero exists to reach
-                self.obs.ledger.replica_down(eng._obs.meter,
-                                             time.perf_counter())
+                self.obs.ledger.replica_down(
+                    eng._obs.meter,
+                    time.perf_counter())  # servelint: disable=SL001 -- ledger is perf_counter domain (engine.step stamps feed it)
         entry = self.reg.entry(model, backend)
         entry.replicas = len(reps)
         entry.warm = 1 if (not reps and model in self._params) else 0
@@ -308,19 +311,20 @@ class ReplicaPool:
                                        backend=backend, before=before,
                                        after=len(reps), kind=kind,
                                        duration_s=0.0)
-                self._update_memory_gauges(model)
+                self._update_memory_gauges(model, now)
 
-    def _update_memory_gauges(self, model: str) -> None:
+    def _update_memory_gauges(self, model: str, now: float) -> None:
         """Refresh ``hbm_resident_bytes`` for ``model``: params + KV
         tensors summed over every live replica (all backends). Cheap —
         shape metadata only — and called on scale transitions, not per
-        step."""
+        step.  Stamped with the caller's scale clock ``now`` so
+        sim-clock drivers don't leak wall time into the gauge."""
         if self.obs is None:
             return
         total = float(sum(e.resident_bytes() for b in self.reg.backends
                           for e in self._replicas[(model, b)]))
         self.obs.registry.gauge("hbm_resident_bytes", model).set(
-            total, stamp=time.perf_counter())
+            total, stamp=now)
 
     def kv_bytes(self, model: str) -> Optional[Tuple[int, int]]:
         """(used, free) KV-pool bytes over every live replica of

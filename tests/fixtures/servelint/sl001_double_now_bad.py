@@ -1,0 +1,46 @@
+"""SL001 seed: the PR-7 double-``now`` bug, verbatim.
+
+``RequestScheduler.enqueue`` (as shipped in PR 6) forwarded ``now`` to
+``_to_engine``/``_note`` UNRESOLVED on the fast and shed paths, then
+resolved it mid-function on the evict path — one logical admission
+could observe two different wall stamps (or a raw ``None``).  Fixed in
+PR 7 by resolving once at entry.  Servelint must flag the mid-function
+resolution as coming after prior uses.
+"""
+import time
+from typing import Optional
+
+
+class Scheduler:
+    def enqueue(self, model: str, backend: str, req,
+                now: Optional[float] = None) -> bool:
+        """Admit a routed request. Returns False if shed (queue full and
+        nothing of lower priority to evict)."""
+        key = (model, backend)
+        q = self._queues[key]
+        self.stats.submitted += 1
+        # fast path: nothing waiting and a free slot -> straight in
+        if not q and self.pool.free_slots(model, backend) > 0:
+            self._to_engine(key, req, now)
+            self.stats.dispatched += 1
+            return True
+        if len(q) >= self._depth_limit(model, backend):
+            victims = self._shed_victims(model, backend, q, req)
+            if victims is None:
+                self.stats.shed += 1
+                self._note("shed", model, now, uid=req.uid,
+                           reason="queue_full")
+                return False
+            now = time.perf_counter() if now is None else now
+            entry = self.reg.entry(model, backend)
+            for victim in victims:
+                q.remove(victim)
+                self.stats.preempted += 1
+                self._note("preempt", model, now, uid=victim.uid,
+                           by=req.uid)
+            q.append(req)
+            entry.queued = max(0, entry.queued - len(victims) + 1)
+            return True
+        q.append(req)
+        self.reg.entry(model, backend).queued += 1
+        return True

@@ -1,0 +1,43 @@
+"""SL001 clean twin of ``sl001_double_now_bad.py``: the PR-7 fix — the
+clock is resolved ONCE, at function entry, before any path can consume
+it.  Servelint must stay silent."""
+import time
+from typing import Optional
+
+
+class Scheduler:
+    def enqueue(self, model: str, backend: str, req,
+                now: Optional[float] = None) -> bool:
+        """Admit a routed request. Returns False if shed (queue full and
+        nothing of lower priority to evict)."""
+        key = (model, backend)
+        q = self._queues[key]
+        self.stats.submitted += 1
+        # resolve the clock ONCE, up front: a shed below this point must
+        # log the caller's (possibly simulated) timestamp, not a stray
+        # perf_counter interleaved into sim time (the PR-6 bug class)
+        now = time.perf_counter() if now is None else now
+        # fast path: nothing waiting and a free slot -> straight in
+        if not q and self.pool.free_slots(model, backend) > 0:
+            self._to_engine(key, req, now)
+            self.stats.dispatched += 1
+            return True
+        if len(q) >= self._depth_limit(model, backend):
+            victims = self._shed_victims(model, backend, q, req)
+            if victims is None:
+                self.stats.shed += 1
+                self._note("shed", model, now, uid=req.uid,
+                           reason="queue_full")
+                return False
+            entry = self.reg.entry(model, backend)
+            for victim in victims:
+                q.remove(victim)
+                self.stats.preempted += 1
+                self._note("preempt", model, now, uid=victim.uid,
+                           by=req.uid)
+            q.append(req)
+            entry.queued = max(0, entry.queued - len(victims) + 1)
+            return True
+        q.append(req)
+        self.reg.entry(model, backend).queued += 1
+        return True

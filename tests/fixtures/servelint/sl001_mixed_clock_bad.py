@@ -1,0 +1,31 @@
+"""SL001 seed: the PR-6 mixed-clock bug, verbatim.
+
+``RequestScheduler.step`` (as shipped in PR 5) resolved ``now`` once at
+entry — and then stamped completion telemetry with a FRESH
+``time.perf_counter()``, so simulated-clock drivers got wall-time
+latency windows.  Fixed in PR 6 by stamping with the step's own clock.
+Servelint must flag the ``record_latency`` line.
+"""
+import time
+from typing import List, Tuple
+
+
+class Scheduler:
+    def step(self, now: float = None) -> List[Tuple[str, object]]:
+        """One serve-loop iteration over the whole pool: admit queued work,
+        run ONE batched decode on every engine with work, reap finished."""
+        now = time.perf_counter() if now is None else now
+        self.stats.steps += 1
+        self.dispatch(now)
+        out, self._reaped = self._reaped, []
+        for key, eng in self.pool.engines():
+            if not eng.has_work():
+                continue
+            entry = self.reg.entry(*key)
+            for res in eng.step():
+                entry.active_requests = max(0, entry.active_requests - 1)
+                self.tel.record_latency(key[0], time.perf_counter(),
+                                        res.latency)
+                self.stats.completed += 1
+                out.append((key, res))
+        return out

@@ -1,0 +1,27 @@
+"""SL001 clean twin of ``sl001_mixed_clock_bad.py``: the PR-6 fix —
+completion telemetry stamped with the step's own resolved clock.
+Servelint must stay silent."""
+import time
+from typing import List, Tuple
+
+
+class Scheduler:
+    def step(self, now: float = None) -> List[Tuple[str, object]]:
+        """One serve-loop iteration over the whole pool: admit queued work,
+        run ONE batched decode on every engine with work, reap finished."""
+        now = time.perf_counter() if now is None else now
+        self.stats.steps += 1
+        self.dispatch(now)
+        out, self._reaped = self._reaped, []
+        for key, eng in self.pool.engines():
+            if not eng.has_work():
+                continue
+            entry = self.reg.entry(*key)
+            for res in eng.step():
+                entry.active_requests = max(0, entry.active_requests - 1)
+                # stamp with the step's OWN clock: mixing perf_counter
+                # into a simulated `now` skewed the telemetry window
+                self.tel.record_latency(key[0], now, res.latency)
+                self.stats.completed += 1
+                out.append((key, res))
+        return out

@@ -1,0 +1,25 @@
+"""SL002 seed: per-token device->host syncs inside the decode hot path.
+
+Every pattern here is one the transfer-guard test (PR 5) caught at
+runtime: an ``.item()`` per sampled token, ``np.asarray`` on a device
+array, and an ``int()`` on a device value — each forces a blocking
+round-trip per decode step instead of the single designed readback.
+Servelint (with this file's ``Engine._decode_once`` configured hot)
+must flag all three.
+"""
+import jax
+import numpy as np
+
+
+class Engine:
+    def _decode_once(self, active):
+        nxt, self.cache, self._dstate = self._fused_step(
+            self.params, self.cache, self._dstate)
+        host = np.asarray(nxt)                # sync: np on device array
+        for i in active:
+            s = self._slots[i]
+            tok = nxt[i].item()               # sync: per-token .item()
+            s.res.new_tokens.append(tok)
+        flag = self._fused_step(self.params, self.cache, self._dstate)
+        done = int(flag)                      # sync: int() on device value
+        return host, done

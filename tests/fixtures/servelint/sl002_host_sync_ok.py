@@ -1,0 +1,17 @@
+"""SL002 clean twin of ``sl002_host_sync_bad.py``: ONE designed
+readback via ``jax.device_get`` (carrying its reviewed suppression),
+then pure host-side bookkeeping.  Servelint must stay silent."""
+import jax
+
+
+class Engine:
+    def _decode_once(self, active):
+        nxt, self.cache, self._dstate = self._fused_step(
+            self.params, self.cache, self._dstate)
+        # servelint: disable=SL002 -- the designed per-step sync point
+        toks = jax.device_get(nxt)
+        for i in active:
+            s = self._slots[i]
+            tok = int(toks[i])                # host value: no sync
+            s.res.new_tokens.append(tok)
+        return toks

@@ -1,0 +1,24 @@
+"""SL003 seed: retrace/donation hazards around the jitted step fns.
+
+(a) ``jax.jit`` on a cache-first step function WITHOUT donation keeps
+two live copies of the KV cache in HBM every step; (b) a loop variable
+in ``fused_burst``'s static position (K, ``static_argnums=(3,)``)
+retraces the whole decode graph once per distinct value.  Servelint
+must flag both.
+"""
+import jax
+
+
+def _insert_impl(cache, rcache, slot):
+    return cache
+
+
+fns = {"insert": jax.jit(_insert_impl)}       # (a) missing donate_argnums
+
+
+class Engine:
+    def drain(self, params, cache, state, pending):
+        for k in pending:
+            # (b) loop variable in the static K position
+            toks, cache, state = self.fused_burst(params, cache, state, k)
+        return cache, state

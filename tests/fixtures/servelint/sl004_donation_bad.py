@@ -1,0 +1,17 @@
+"""SL004 seed: use-after-donate.
+
+``fused_step`` donates its cache and state arguments (positions 1, 2
+of the bound callable) — jax reuses their buffers for the outputs.
+Reading ``self.cache`` again WITHOUT rebinding it from the result
+returns garbage (or raises on a deleted buffer).  Servelint must flag
+the post-call read.
+"""
+
+
+class Engine:
+    def step_once(self):
+        nxt, new_cache, new_state = self.fused_step(
+            self.params, self.cache, self._dstate)
+        # BUG: self.cache was donated above and never rebound
+        used = self.kv_bytes(self.cache)
+        return nxt, used

@@ -1,0 +1,12 @@
+"""SL004 clean twin of ``sl004_donation_bad.py``: the donated buffers
+are rebound from the call result in the same statement (the engine's
+idiom), so every later read sees the live output buffer.  Servelint
+must stay silent."""
+
+
+class Engine:
+    def step_once(self):
+        nxt, self.cache, self._dstate = self.fused_step(
+            self.params, self.cache, self._dstate)
+        used = self.kv_bytes(self.cache)
+        return nxt, used

@@ -1,0 +1,20 @@
+"""SL005 seed: metric-label cardinality hazards.
+
+(a) labelling a counter with the request ``uid`` creates one series
+per request — unbounded registry growth; (b) ``kv_pool_bytes`` is
+registered with a composite ``model|state=...`` label everywhere else,
+so a plain-label call site silently forks the metric.  Servelint must
+flag both.
+"""
+
+
+class Obs:
+    def on_finish(self, registry, model, req):
+        # (a) one series per request
+        registry.counter("completions_total", f"{model}|uid={req.uid}").inc()
+
+    def on_scale(self, registry, model, used, free):
+        registry.gauge("kv_pool_bytes", f"{model}|state=used").set(used)
+        registry.gauge("kv_pool_bytes", f"{model}|state=free").set(free)
+        # (b) plain label where every other site uses |state=...
+        registry.gauge("kv_pool_bytes", "total").set(used + free)

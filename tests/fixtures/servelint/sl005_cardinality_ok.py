@@ -1,0 +1,14 @@
+"""SL005 clean twin of ``sl005_cardinality_bad.py``: bounded labels
+(model only), one consistent composite shape per metric name, and the
+request id goes to the trace, not a label.  Servelint must stay
+silent."""
+
+
+class Obs:
+    def on_finish(self, registry, tracer, model, req):
+        registry.counter("completions_total", model).inc()
+        tracer.on_finish(req.uid)             # ids belong in the trace
+
+    def on_scale(self, registry, model, used, free):
+        registry.gauge("kv_pool_bytes", f"{model}|state=used").set(used)
+        registry.gauge("kv_pool_bytes", f"{model}|state=free").set(free)

@@ -90,6 +90,24 @@ def test_replica_down_closes_tail_idempotently():
     assert led.conservation_error(now=100.0) == pytest.approx(0.0, abs=1e-12)
 
 
+def test_totals_default_now_stays_in_ledger_domain():
+    """Regression (servelint SL001 audit): ``totals(now=None)`` used to
+    fall back to ``time.perf_counter()``, injecting a huge phantom idle
+    tail into simulated-clock ledgers.  The fallback is now the newest
+    stamp the ledger itself observed, so the no-arg form stays in
+    whatever time domain the callers stamp with."""
+    led = _ledger()
+    m = led.replica_up("m", "trt", chips=1, cold_s=0.0, t=0.0)
+    led.on_step(m, 0.0, 1.0, [1])
+    led.on_step(m, 2.0, 3.0, [1])
+    t = led.totals()                       # no `now`: sim domain preserved
+    assert t["total_chip_s"] == pytest.approx(3.0)    # end == newest mark
+    assert t["idle_chip_s"] == pytest.approx(1.0)     # gap [1,2] only
+    assert led.conservation_error() == pytest.approx(0.0, abs=1e-12)
+    led.replica_down(m, 4.0)
+    assert led.totals()["total_chip_s"] == pytest.approx(4.0)  # down stamp
+
+
 def test_close_request_publishes_registry_metrics():
     reg = MetricsRegistry()
     led = _ledger(registry=reg)
@@ -255,6 +273,18 @@ def test_memory_gauges_grounded_in_real_bytes(fe):
     fe.pool.scale(*KEY, 0)
     assert reg.value("hbm_resident_bytes", SMOL) == 0.0
     fe.pool.scale(*KEY, 1)
+
+
+def test_memory_gauge_stamped_with_scale_clock(fe):
+    """Regression (servelint SL001 audit): ``_update_memory_gauges``
+    stamped ``hbm_resident_bytes`` with ``time.perf_counter()`` even
+    when the scale driver ran on a simulated clock.  The gauge must
+    carry the caller's ``now``."""
+    reg = fe.obs.registry
+    fe.pool.scale(*KEY, 0, now=1234.5)
+    assert reg.gauge("hbm_resident_bytes", SMOL).stamp == 1234.5
+    fe.pool.scale(*KEY, 1, now=2345.5)
+    assert reg.gauge("hbm_resident_bytes", SMOL).stamp == 2345.5
 
 
 def test_shed_storm_triggers_automatic_flight_dump(fe, tmp_path):

@@ -1,0 +1,248 @@
+"""servelint: fixture-pair tests per rule, suppression honoring,
+config loading, and the self-clean gate on the repo's own sources.
+
+The fixture corpus under ``tests/fixtures/servelint/`` seeds the exact
+bugs the rules were built from (the PR-6 mixed-clock stamp, the PR-7
+double-``now`` resolution) next to clean twins; every rule must fire
+on its ``_bad`` file and stay silent on its ``_ok`` twin.
+"""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Config, load_config, run_paths, run_source
+from repro.analysis.core import parse_toml, scan_suppressions
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "servelint"
+
+
+def fixture_config() -> Config:
+    """Repo config, with the corpus un-excluded and the fixture engine
+    marked hot for SL002."""
+    data = copy.deepcopy(load_config(str(ROOT / "servelint.toml")).data)
+    data["exclude"] = []
+    data["SL002"]["hot_functions"] = ["*::Engine._decode_once"]
+    return Config(data=data, root=str(ROOT))
+
+
+def run_fixture(name: str):
+    cfg = fixture_config()
+    return run_paths([str(FIXTURES / name)], config=cfg).findings
+
+
+# ---------------------------------------------------------------------------
+# fixture pairs — each rule proven live (true positive) and quiet
+# (true negative)
+
+
+PAIRS = [
+    ("SL001", "sl001_mixed_clock_bad.py", "sl001_mixed_clock_ok.py", 1),
+    ("SL001", "sl001_double_now_bad.py", "sl001_double_now_ok.py", 1),
+    ("SL002", "sl002_host_sync_bad.py", "sl002_host_sync_ok.py", 3),
+    ("SL003", "sl003_retrace_bad.py", "sl003_retrace_ok.py", 2),
+    ("SL004", "sl004_donation_bad.py", "sl004_donation_ok.py", 1),
+    ("SL005", "sl005_cardinality_bad.py", "sl005_cardinality_ok.py", 2),
+]
+
+
+@pytest.mark.parametrize("rule,bad,ok,n_bad", PAIRS,
+                         ids=[p[1][:-3] for p in PAIRS])
+def test_fixture_pair(rule, bad, ok, n_bad):
+    bad_findings = run_fixture(bad)
+    assert len(bad_findings) == n_bad, [f.render() for f in bad_findings]
+    assert all(f.rule == rule for f in bad_findings)
+    ok_findings = run_fixture(ok)
+    assert ok_findings == [], [f.render() for f in ok_findings]
+
+
+def test_pr6_mixed_clock_bug_caught_at_the_stamp_line():
+    """The PR-6 bug verbatim: `record_latency(..., time.perf_counter(),
+    ...)` inside a resolved-`now` step()."""
+    (f,) = run_fixture("sl001_mixed_clock_bad.py")
+    src = (FIXTURES / "sl001_mixed_clock_bad.py").read_text().splitlines()
+    assert "time.perf_counter()" in src[f.line - 1]
+    assert "record_latency" in src[f.line - 1]
+    assert "takes simulated time" in f.message
+
+
+def test_pr7_double_now_bug_caught_at_the_late_resolution():
+    """The PR-7 bug verbatim: enqueue() consuming `now` on the fast and
+    shed paths before the evict branch resolves it."""
+    (f,) = run_fixture("sl001_double_now_bad.py")
+    src = (FIXTURES / "sl001_double_now_bad.py").read_text().splitlines()
+    assert src[f.line - 1].strip() == \
+        "now = time.perf_counter() if now is None else now"
+    assert "already used" in f.message
+
+
+def test_sl002_catches_each_sync_kind():
+    kinds = {f.message.split(" in hot-path")[0]
+             for f in run_fixture("sl002_host_sync_bad.py")}
+    assert kinds == {"`numpy.asarray`", "`.item()`",
+                     "`int(flag)` on a device value"}
+
+
+def test_sl003_catches_missing_donation_and_static_loop_var():
+    msgs = [f.message for f in run_fixture("sl003_retrace_bad.py")]
+    assert any("without donate_argnums" in m for m in msgs)
+    assert any("static position 3" in m for m in msgs)
+
+
+def test_sl004_names_the_donated_path():
+    (f,) = run_fixture("sl004_donation_bad.py")
+    assert "`self.cache` read after being donated" in f.message
+
+
+def test_sl005_catches_uid_label_and_shape_fork():
+    msgs = [f.message for f in run_fixture("sl005_cardinality_bad.py")]
+    assert any("unbounded cardinality" in m for m in msgs)
+    assert any("plain label here but composite" in m for m in msgs)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+
+
+CLOCKY = """\
+import time
+
+def tick(now=None):
+    now = time.perf_counter() if now is None else now
+    t = time.perf_counter(){directive}
+    return now, t
+"""
+
+
+def test_unsuppressed_finding_fires():
+    findings = run_source("x.py", CLOCKY.format(directive=""))
+    assert [f.rule for f in findings] == ["SL001"]
+
+
+def test_same_line_suppression_with_reason_is_honored():
+    src = CLOCKY.format(
+        directive="  # servelint: disable=SL001 -- real wall interval")
+    assert run_source("x.py", src) == []
+
+
+def test_standalone_directive_suppresses_next_line():
+    src = CLOCKY.format(directive="").replace(
+        "    t = time.perf_counter()",
+        "    # servelint: disable=SL001 -- real wall interval\n"
+        "    t = time.perf_counter()")
+    assert run_source("x.py", src) == []
+
+
+def test_disable_all_suppresses_any_rule():
+    src = CLOCKY.format(directive="  # servelint: disable=all -- fixture")
+    assert run_source("x.py", src) == []
+
+
+def test_wrong_rule_id_does_not_suppress():
+    src = CLOCKY.format(directive="  # servelint: disable=SL002 -- nope")
+    assert [f.rule for f in run_source("x.py", src)] == ["SL001"]
+
+
+def test_suppression_without_reason_is_itself_a_finding():
+    src = CLOCKY.format(directive="  # servelint: disable=SL001")
+    rules = sorted(f.rule for f in run_source("x.py", src))
+    assert rules == ["SL000"]     # finding suppressed, hygiene violation kept
+
+
+def test_scan_suppressions_parses_rules_and_reason():
+    (s,) = scan_suppressions(
+        "x = 1  # servelint: disable=SL001,SL004 -- measured interval\n")
+    assert s.rules == frozenset({"SL001", "SL004"})
+    assert s.reason == "measured interval"
+    assert s.applies_to == 1
+
+
+# ---------------------------------------------------------------------------
+# config loading
+
+
+def test_parse_toml_subset():
+    data = parse_toml("""
+# comment
+[servelint]
+exclude = ["a/*", "b/*"]   # trailing comment
+[servelint.SL001]
+clock_params = [
+  "now",
+  "clock",
+]
+threshold = 3
+ratio = 0.5
+flag = true
+""")
+    sl = data["servelint"]
+    assert sl["exclude"] == ["a/*", "b/*"]
+    assert sl["SL001"]["clock_params"] == ["now", "clock"]
+    assert sl["SL001"]["threshold"] == 3
+    assert sl["SL001"]["ratio"] == 0.5
+    assert sl["SL001"]["flag"] is True
+
+
+def test_load_config_merges_over_defaults(tmp_path):
+    p = tmp_path / "servelint.toml"
+    p.write_text("[servelint.SL001]\nclock_params = [\"tick\"]\n")
+    cfg = load_config(str(p))
+    assert cfg.rule("SL001")["clock_params"] == ["tick"]
+    # untouched keys keep their defaults
+    assert "time.perf_counter" in cfg.rule("SL001")["wall_calls"]
+    assert cfg.rule("SL005")["uid_label_names"]
+
+
+def test_exclude_globs(tmp_path):
+    (tmp_path / "skip").mkdir()
+    (tmp_path / "skip" / "bad.py").write_text(CLOCKY.format(directive=""))
+    cfg = Config(data={**Config().data, "exclude": ["skip/*"]},
+                 root=str(tmp_path))
+    assert run_paths(["skip"], config=cfg).findings == []
+
+
+def test_repo_config_parses_and_excludes_corpus():
+    cfg = load_config(str(ROOT / "servelint.toml"), root=str(ROOT))
+    assert cfg.excluded("tests/fixtures/servelint/sl001_mixed_clock_bad.py")
+    assert not cfg.excluded("src/repro/serving/engine.py")
+
+
+# ---------------------------------------------------------------------------
+# the gate itself
+
+
+def test_repo_src_is_clean():
+    """Zero unsuppressed findings on the repo's own src/ — the CI gate's
+    core promise — and every suppression carries a reason."""
+    cfg = load_config(str(ROOT / "servelint.toml"), root=str(ROOT))
+    report = run_paths(["src"], config=cfg)
+    assert report.findings == [], [f.render() for f in report.findings]
+    assert all(s.reason for _, s in report.suppressed)
+
+
+def test_cli_exits_zero_on_repo_and_writes_report(tmp_path):
+    out = tmp_path / "servelint.json"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "servelint.py"),
+         "--root", str(ROOT), "--report", str(out),
+         "src", "tests", "benchmarks", "examples", "scripts"],
+        cwd=str(ROOT), capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(out.read_text())
+    assert data["findings"] == []
+    assert all(s["reason"] for s in data["suppressed"])
+
+
+def test_cli_exits_one_on_findings(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(CLOCKY.format(directive=""))
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "servelint.py"),
+         "--root", str(tmp_path), str(bad)],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 1
+    assert "SL001" in proc.stdout
