@@ -8,6 +8,11 @@ one (max_batch,) token pull per token) against ``decode_burst=K`` (K
 fused iterations inside one ``lax.scan`` dispatch), on the same reduced
 arch, greedy, with token-for-token equivalence asserted. The artifact is
 BENCH_decode.json — ``burst_speedup`` is the acceptance gauge (>= 1.3x).
+
+``--spec`` adds the SPECULATIVE DECODING mode: plain fused stepwise vs
+draft/verify spec decode at K in {2, 4, 8} on a depth-extended smoke
+target (see ``_spec_pair``), per-rep token equality asserted, acceptance
+rate and ``spec_speedup`` (>= 1.3x gauge) merged into BENCH_decode.json.
 """
 from __future__ import annotations
 
@@ -25,7 +30,8 @@ from repro.obs import Observability
 from typing import Optional
 
 from repro.serving import (BACKENDS, InferenceEngine, PagedInferenceEngine,
-                           Request, SamplingParams)
+                           Request, SamplingParams, SpecDraft)
+from repro.serving.engine import FINISH_EOS, FINISH_MAX_NEW, FINISH_ROOM
 
 
 def run(timer: Optional[BenchTimer] = None, arch: str = "smollm-360m"):
@@ -65,6 +71,22 @@ def run(timer: Optional[BenchTimer] = None, arch: str = "smollm-360m"):
     return results
 
 
+def _host_reason(eng, s) -> int:
+    """Host replay of the device-side finish bits for the PR-4 baseline
+    classes below (the production engines now compute these on device;
+    the legacy reconstruction keeps the host rules so its bookkeeping
+    matches ``_consume_reason``'s contract)."""
+    sp = s.req.sampling
+    bits = 0
+    if sp.eos_id is not None and s.res.new_tokens[-1] == sp.eos_id:
+        bits |= FINISH_EOS
+    if len(s.res.new_tokens) >= sp.max_new_tokens:
+        bits |= FINISH_MAX_NEW
+    if s.pos >= eng.max_seq - 1:
+        bits |= FINISH_ROOM
+    return bits
+
+
 class _Pr4StepwisePaged(PagedInferenceEngine):
     """The PR-4 decode iteration, reconstructed around the SAME compiled
     model functions: host ``np`` staging arrays (tokens / positions /
@@ -97,7 +119,7 @@ class _Pr4StepwisePaged(PagedInferenceEngine):
             s.res.new_tokens.append(tok)
             self._deltas.append((s.req.uid, tok))
             s.pos += 1
-            self._maybe_finish(s, t)
+            self._consume_reason(s, t, _host_reason(self, s))
 
 
 class _Pr4StepwiseDense(InferenceEngine):
@@ -123,7 +145,7 @@ class _Pr4StepwiseDense(InferenceEngine):
             s.res.new_tokens.append(tok)
             self._deltas.append((s.req.uid, tok))
             s.pos += 1
-            self._maybe_finish(s, t)
+            self._consume_reason(s, t, _host_reason(self, s))
 
 
 def _decode_reqs(cfg, n, prompt_len, max_new, seed=0):
@@ -135,10 +157,11 @@ def _decode_reqs(cfg, n, prompt_len, max_new, seed=0):
 
 
 def _measure(make_engine, cfg, n, prompt_len, max_new, reps):
-    """Returns (best wall, tokens that wall produced, per-rep streams).
-    min-of-N walls: dispatch overhead is systematic, scheduler noise is
-    not — the same discipline mixed_bench uses. Token streams are kept
-    PER REP so the equivalence check compares like with like."""
+    """Returns (best wall, tokens that wall produced, per-rep streams,
+    the engine). min-of-N walls: dispatch overhead is systematic,
+    scheduler noise is not — the same discipline mixed_bench uses. Token
+    streams are kept PER REP so the equivalence check compares like with
+    like; the engine comes back for post-hoc counters (spec acceptance)."""
     eng = make_engine()
     eng.run(_decode_reqs(cfg, n, prompt_len, 2, seed=99))     # compile
     best, streams = None, {}
@@ -151,13 +174,13 @@ def _measure(make_engine, cfg, n, prompt_len, max_new, reps):
         streams[rep] = {r.uid: r.new_tokens for r in res}
         if best is None or wall < best[0]:
             best = (wall, n_tok)
-    return best + (streams,)
+    return best + (streams, eng)
 
 
 def decode_run(arch: str = "smollm-360m", burst: int = 16,
                batch: Optional[int] = None,
                prompt_len: int = 16, max_new: int = 64, reps: int = 3,
-               backend: str = "trt", paged: bool = True):
+               backend: str = "trt", paged: bool = True, spec: bool = False):
     """Burst vs stepwise decode throughput on one engine config."""
     cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
     bk = BACKENDS[backend]
@@ -187,17 +210,17 @@ def decode_run(arch: str = "smollm-360m", burst: int = 16,
 
     print(f"\n== Decode hot path ({cfg.name}, {'paged' if paged else 'dense'} "
           f"x{n}, {max_new} new tokens, burst K={burst}) ==")
-    w_pr4, tok_pr4, toks_pr4 = _measure(mk(pr4, 1), cfg, n, prompt_len,
-                                        max_new, reps)
-    w_step, tok_step, toks_step = _measure(mk(cls, 1), cfg, n, prompt_len,
+    w_pr4, tok_pr4, toks_pr4, _ = _measure(mk(pr4, 1), cfg, n, prompt_len,
                                            max_new, reps)
-    w_burst, tok_burst, toks_burst = _measure(mk(cls, burst), cfg, n,
-                                              prompt_len, max_new, reps)
+    w_step, tok_step, toks_step, _ = _measure(mk(cls, 1), cfg, n, prompt_len,
+                                              max_new, reps)
+    w_burst, tok_burst, toks_burst, _ = _measure(mk(cls, burst), cfg, n,
+                                                 prompt_len, max_new, reps)
     # the same fused stepwise engine with full observability attached
     # (metrics registry + lifecycle tracer): its host-side hooks must be
     # decode-step noise, not a tax — the acceptance bound is < 5%
-    w_obs, tok_obs, toks_obs = _measure(mk(cls, 1, instrumented=True),
-                                        cfg, n, prompt_len, max_new, reps)
+    w_obs, tok_obs, toks_obs, _ = _measure(mk(cls, 1, instrumented=True),
+                                           cfg, n, prompt_len, max_new, reps)
     for rep in toks_step:                  # token-for-token, rep by rep
         assert toks_pr4[rep] == toks_step[rep], \
             f"fused != PR-4 tokens (greedy) at rep {rep}"
@@ -240,9 +263,104 @@ def decode_run(arch: str = "smollm-360m", burst: int = 16,
         "obs_overhead_frac": obs_overhead,
         "obs_overhead_ok": obs_overhead < 0.05,
     }
+    if spec:
+        payload["spec"] = spec_run(arch=arch, batch=batch,
+                                   prompt_len=prompt_len, max_new=max_new,
+                                   reps=reps, backend=backend)
     path = save_bench("decode", payload)
     print(f"wrote {path}")
     return payload
+
+
+def _spec_pair(arch: str, depth_mult: int):
+    """(target cfg+params, draft cfg+params) for the spec bench.
+
+    The registry's reduced smoke archs are all the same size, so a real
+    small-drafts-for-big pairing isn't available on CPU — and two
+    independently random models accept ~nothing. Instead the target IS
+    the smoke arch extended with exact-identity residual layers (zeroed
+    attention/FFN output projections), emulating the draft/target depth
+    gap of a production pairing: target logits equal draft logits, so
+    acceptance sits near the all-accept upper bound, while the PLAIN
+    baseline is measured on the SAME deepened target — the speedup is
+    the engine mechanics (one multi-token verify replacing n_acc+1
+    target dispatches), not a model-quality artifact."""
+    dcfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32")
+    dparams = init_model(dcfg, jax.random.PRNGKey(0))
+    cfg = dataclasses.replace(dcfg, num_layers=dcfg.num_layers * depth_mult)
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    layers = jax.tree_util.tree_map(
+        lambda t, s: t.at[: s.shape[0]].set(s),
+        params["layers"], dparams["layers"])
+    nl = dcfg.num_layers
+    layers["attn"] = dict(layers["attn"],
+                          wo=layers["attn"]["wo"].at[nl:].set(0.0))
+    layers["ffn"] = dict(layers["ffn"],
+                         w_down=layers["ffn"]["w_down"].at[nl:].set(0.0))
+    params = dict(params, embed=dparams["embed"],
+                  final_norm=dparams["final_norm"], layers=layers)
+    return cfg, params, dcfg, dparams
+
+
+def spec_run(arch: str = "smollm-360m", batch: Optional[int] = None,
+             prompt_len: int = 16, max_new: int = 64, reps: int = 3,
+             backend: str = "trt", ks=(2, 4, 8), depth_mult: int = 4):
+    """Speculative decoding vs plain fused stepwise on the paged engine.
+
+    Returns the ``spec`` payload merged into BENCH_decode.json: per-K
+    tok/s, measured acceptance rate, and ``spec_speedup`` (best K vs
+    plain fused stepwise on the same target) — the >= 1.3x acceptance
+    gauge. Token equality against the plain stream is asserted per rep:
+    the exact-match rule emits only the target's own seeded samples, so
+    spec == plain holds token for token whatever the draft proposes."""
+    cfg, params, dcfg, dparams = _spec_pair(arch, depth_mult)
+    bk = BACKENDS[backend]
+    n = batch or bk.max_batch
+    kw = dict(max_seq=256, chunk_tokens=64, block_size=16)
+
+    def mk(spec):
+        def make():
+            return PagedInferenceEngine(cfg, params, bk, spec=spec, **kw)
+        return make
+
+    print(f"\n== Speculative decode ({cfg.name} target x{depth_mult} depth, "
+          f"{arch} draft, paged x{n}, {max_new} new tokens) ==")
+    w_plain, tok_plain, toks_plain, _ = _measure(
+        mk(None), cfg, n, prompt_len, max_new, reps)
+    r_plain = tok_plain / w_plain
+    print(f"{'mode':16s} {'tok/s':>8s} {'vs plain':>9s} {'accept':>7s}")
+    print(f"{'fused-stepwise':16s} {r_plain:8.1f} {'1.00x':>9s} {'-':>7s}")
+    per_k = {}
+    for k in ks:
+        draft = SpecDraft(cfg=dcfg, params=dparams, k=k)
+        w, tok, toks, eng = _measure(mk(draft), cfg, n, prompt_len,
+                                     max_new, reps)
+        assert eng.spec is not None, "draft failed to co-reside"
+        for rep in toks_plain:             # token-for-token, rep by rep
+            assert toks[rep] == toks_plain[rep], \
+                f"spec K={k} != plain tokens (greedy) at rep {rep}"
+        r = tok / w
+        acc = (eng._spec_accepted / eng._spec_drafted
+               if eng._spec_drafted else 0.0)
+        per_k[k] = {"tok_per_s": r, "speedup": r / r_plain,
+                    "accept_rate": acc,
+                    "drafted": eng._spec_drafted,
+                    "accepted": eng._spec_accepted}
+        print(f"{f'spec K={k}':16s} {r:8.1f} {r / r_plain:8.2f}x {acc:7.2f}")
+    best_k = max(per_k, key=lambda k: per_k[k]["tok_per_s"])
+    return {
+        "arch": arch, "backend": backend, "batch": n,
+        "prompt_len": prompt_len, "max_new": max_new, "reps": reps,
+        "target_depth_mult": depth_mult,
+        "plain_stepwise_tok_per_s": r_plain,
+        "per_k": {str(k): v for k, v in per_k.items()},
+        # the acceptance gauge: best-K spec vs plain fused stepwise on
+        # the same target, tokens asserted identical
+        "spec_speedup": per_k[best_k]["tok_per_s"] / r_plain,
+        "spec_best_k": best_k,
+        "spec_accept_rate": per_k[best_k]["accept_rate"],
+        "greedy_token_equivalent": True,       # asserted above
+    }
 
 
 if __name__ == "__main__":
@@ -250,6 +368,10 @@ if __name__ == "__main__":
     ap.add_argument("--decode", action="store_true",
                     help="decode hot-path bench only (burst vs stepwise; "
                          "writes BENCH_decode.json)")
+    ap.add_argument("--spec", action="store_true",
+                    help="add the speculative-decoding mode to the decode "
+                         "bench (plain fused stepwise vs spec at K in "
+                         "{2,4,8}, token equality asserted)")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--burst", type=int, default=16)
     ap.add_argument("--batch", type=int, default=None)
@@ -261,9 +383,9 @@ if __name__ == "__main__":
     if args.decode:
         decode_run(arch=args.arch, burst=args.burst, batch=args.batch,
                    max_new=args.max_new, reps=args.reps,
-                   paged=not args.dense)
+                   paged=not args.dense, spec=args.spec)
     else:
         run(arch=args.arch)
         decode_run(arch=args.arch, burst=args.burst, batch=args.batch,
                    max_new=args.max_new, reps=args.reps,
-                   paged=not args.dense)
+                   paged=not args.dense, spec=args.spec)

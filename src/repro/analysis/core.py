@@ -206,6 +206,12 @@ def _defaults() -> dict:
         "SL005": {
             "uid_label_names": ["uid", "request_id", "req_id"],
         },
+        "SL006": {
+            "verify_functions": [],
+            "device_fns": ["fused_step", "fused_burst", "first_tokens",
+                           "_fused_step", "_fused_burst", "_first_fn",
+                           "sample_rows", "spec_step", "_spec_dispatch"],
+        },
     }
 
 

@@ -1,4 +1,4 @@
-"""servelint rules SL001-SL005.
+"""servelint rules SL001-SL006.
 
 Each rule encodes one invariant this codebase has already paid for at
 runtime (see README "Static analysis" for the origin bugs).  Rules are
@@ -620,5 +620,107 @@ class MetricCardinality:
         return out
 
 
+# ---------------------------------------------------------------------------
+# SL006 spec-verify hygiene
+
+
+class SpecVerifyHygiene:
+    """SL006: per-drafted-position host syncs inside the speculative
+    verify path.  A verify step's contract is ONE batched int32 id
+    readback per dispatch (the PR-5 transfer guard measures this at
+    runtime); a device->host sync INSIDE a loop of a configured verify
+    function — per-position ``.item()``, ``jax.device_get``,
+    ``np.asarray``, or ``int()/float()`` on a device value — turns the
+    K-tokens-per-forward win into K blocking round-trips."""
+
+    id = "SL006"
+
+    _SYNC_CALLS = {"jax.device_get", "numpy.asarray", "numpy.array"}
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        verify = cfg.get("verify_functions", [])
+        if not verify:
+            return []
+        device_fns = set(cfg.get("device_fns", []))
+        out: List[Finding] = []
+        for fn in ctx.functions:
+            if not _match_any(_fn_qual(ctx, fn), verify):
+                continue
+            out.extend(self._check_fn(ctx, fn, device_fns))
+        return out
+
+    def _check_fn(self, ctx: FileCtx, fn: FuncInfo, device_fns
+                  ) -> List[Finding]:
+        # taint as in SL002: names bound from device-producing calls are
+        # device values; jax.device_get output is host-side and clears
+        tainted: set = set()
+        host: set = set()
+        for node in _walk_own(fn.node):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)):
+                continue
+            resolved = ctx.resolve(node.value.func) or ""
+            term = ctx.terminal(node.value.func) or ""
+            targets: List[str] = []
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    targets.append(t.id)
+                elif isinstance(t, ast.Tuple):
+                    targets.extend(e.id for e in t.elts
+                                   if isinstance(e, ast.Name))
+            if resolved == "jax.device_get":
+                host.update(targets)
+            elif term in device_fns or resolved.startswith("jax."):
+                tainted.update(targets)
+        tainted -= host
+
+        def base_name(node: ast.AST) -> Optional[str]:
+            while isinstance(node, ast.Subscript):
+                node = node.value
+            return node.id if isinstance(node, ast.Name) else None
+
+        out: List[Finding] = []
+        seen: set = set()
+        loops = [n for n in _walk_own(fn.node)
+                 if isinstance(n, (ast.For, ast.AsyncFor, ast.While))]
+        for loop in loops:
+            for node in ast.walk(loop):
+                if id(node) in seen or not isinstance(node, ast.Call):
+                    continue
+                seen.add(id(node))
+                resolved = ctx.resolve(node.func) or ""
+                if resolved in self._SYNC_CALLS:
+                    out.append(Finding(
+                        self.id, "", node.lineno,
+                        f"`{resolved}` inside a loop of verify function "
+                        f"`{fn.qualname}` — one device->host sync per "
+                        "drafted position",
+                        "pull the whole id matrix once per verify and "
+                        "iterate the host copy"))
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    out.append(Finding(
+                        self.id, "", node.lineno,
+                        f"`.item()` inside a loop of verify function "
+                        f"`{fn.qualname}` — one device->host sync per "
+                        "drafted position",
+                        "batch the readback: one device_get of the "
+                        "(max_batch, K+1) id matrix per verify"))
+                elif (isinstance(node.func, ast.Name)
+                        and node.func.id in ("float", "int", "bool")
+                        and node.args
+                        and base_name(node.args[0]) in tainted):
+                    out.append(Finding(
+                        self.id, "", node.lineno,
+                        f"`{node.func.id}(...)` on device value "
+                        f"`{base_name(node.args[0])}` inside a loop of "
+                        f"verify function `{fn.qualname}` — one "
+                        "device->host sync per drafted position",
+                        "device_get the array once per verify, then "
+                        "convert host-side"))
+        return out
+
+
 ALL_RULES = [ClockDiscipline(), HostSyncHygiene(), RetraceHazard(),
-             DonationHazard(), MetricCardinality()]
+             DonationHazard(), MetricCardinality(), SpecVerifyHygiene()]

@@ -80,6 +80,12 @@ class Usage:
     # peak KV bytes the request held (dense: its slot's cache share;
     # paged: leased blocks x block nbytes, at quantized width for int8)
     kv_peak_bytes: int = 0
+    # speculative decoding: draft proposals the target verified for this
+    # request, and how many of them were accepted (committed to the
+    # stream). accepted/drafted is the request's acceptance rate; both 0
+    # when the engine served it without a draft model
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
 
 @dataclass(frozen=True)

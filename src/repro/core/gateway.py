@@ -44,7 +44,7 @@ from repro.core.telemetry import Telemetry
 from repro.data.tokenizer import ByteTokenizer
 from repro.obs import Observability
 from repro.serving import (GenResult, ReplicaPool, Request, RequestScheduler,
-                           SamplingParams, SchedulerConfig)
+                           SamplingParams, SchedulerConfig, SpecConfig)
 
 
 @dataclass
@@ -82,6 +82,12 @@ class GatewayConfig:
     # right default for an interactive serve plane, where bursts delay
     # admission of freshly arrived prompts by up to K-1 decode tokens.
     decode_burst: int = 1
+    # speculative decoding: registry arch that drafts spec_k tokens per
+    # verify on every engine whose target it can co-reside with (vocab
+    # match + KV headroom; others fall back to plain fused stepwise).
+    # None keeps spec off pool-wide.
+    spec_draft: Optional[str] = None
+    spec_k: int = 4
     autoscale: bool = True                     # run Algorithm 1 inline
     # observability plane: metrics registry + request tracing + event
     # log, shared by the scheduler, the pool and every spun engine. All
@@ -184,7 +190,9 @@ class ServeFrontend:
                                 seed=cfg.seed, paged=cfg.paged,
                                 chunk_tokens=cfg.chunk_tokens,
                                 step_token_budget=cfg.step_token_budget,
-                                decode_burst=cfg.decode_burst, obs=self.obs)
+                                decode_burst=cfg.decode_burst, obs=self.obs,
+                                spec=(SpecConfig(cfg.spec_draft, cfg.spec_k)
+                                      if cfg.spec_draft else None))
         self.scheduler = RequestScheduler(self.pool, self.registry,
                                           self.telemetry, cfg.sched,
                                           obs=self.obs)
@@ -436,7 +444,9 @@ class ServeFrontend:
                       queue_wait_s=span.queue_wait_s if span else 0.0,
                       decode_s=span.decode_s if span else 0.0,
                       chip_seconds=chip_s, cost_usd=cost_usd,
-                      kv_peak_bytes=res.kv_bytes)
+                      kv_peak_bytes=res.kv_bytes,
+                      drafted_tokens=res.drafted_tokens,
+                      accepted_tokens=res.accepted_tokens)
         return CompletionResponse(
             uid=res.uid, prompt=info.request.prompt, model=info.model,
             backend=info.backend, tier=info.tier,
@@ -482,13 +492,15 @@ class Gateway:
                  sched: Optional[SchedulerConfig] = None, paged="auto",
                  chunk_tokens: Optional[int] = 64,
                  step_token_budget: Optional[int] = 256,
-                 decode_burst: int = 1):
+                 decode_burst: int = 1, spec_draft: Optional[str] = None,
+                 spec_k: int = 4):
         self.frontend = ServeFrontend(GatewayConfig(
             models=models, router=router, policy_cls=policy_cls,
             profile=profile, backends=backends, max_seq=max_seq, seed=seed,
             cost_configs=cost_configs, sched=sched, paged=paged,
             chunk_tokens=chunk_tokens, step_token_budget=step_token_budget,
-            decode_burst=decode_burst, autoscale=False))
+            decode_burst=decode_burst, spec_draft=spec_draft, spec_k=spec_k,
+            autoscale=False))
 
     # shared-plane passthroughs (no duplicated state)
     models = property(lambda self: self.frontend.models)

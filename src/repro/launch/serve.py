@@ -131,6 +131,8 @@ def run_concurrent(pool, args) -> None:
                        chunk_tokens=args.chunk_tokens or None,
                        step_token_budget=args.step_token_budget or None,
                        decode_burst=args.decode_burst,
+                       spec_draft=args.spec_draft or None,
+                       spec_k=args.spec_k,
                        flight_record=args.flight_record or None,
                        sched=SchedulerConfig(
                            max_queue_depth=args.max_queue_depth))
@@ -193,6 +195,13 @@ def main() -> None:
                          "throughput knob for offline traffic, bounds "
                          "cancel/deadline latency by K tokens) "
                          "(--concurrent)")
+    ap.add_argument("--spec-draft", default="",
+                    help="registry arch that speculatively drafts for "
+                         "every engine it can co-reside with (vocab "
+                         "match + KV headroom; others keep plain "
+                         "stepwise decode) (--concurrent)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per speculative verify step")
     ap.add_argument("--metrics-dump", default="",
                     help="write Prometheus exposition to PATH plus "
                          "PATH.events.jsonl (scale/shed/orch decisions) "
@@ -212,6 +221,10 @@ def main() -> None:
                              f"{sorted(ARCHS)}")
         pool[name] = dataclasses.replace(ARCHS[name].reduced(),
                                          dtype="float32")
+
+    if args.spec_draft and args.spec_draft not in ARCHS:
+        raise SystemExit(f"unknown spec draft arch {args.spec_draft!r}; "
+                         f"choose from {sorted(ARCHS)}")
 
     if args.concurrent:
         if args.rate <= 0:

@@ -491,6 +491,104 @@ def gqa_paged_decode(params: Params, cfg: ModelConfig, x, cos, sin,
     return _out_proj(params, cfg, o), pool
 
 
+def gqa_paged_verify(params: Params, cfg: ModelConfig, x, cos, sin,
+                     pool: Params, block_tables: jnp.ndarray, pos,
+                     max_pos=None) -> Tuple[jnp.ndarray, Params]:
+    """S-token speculative verify step of one layer against the block
+    pool — the batched sibling of ``gqa_paged_decode``: every row feeds
+    ``S`` consecutive tokens (its last sampled token plus S-1 drafted
+    ones) at positions ``pos .. pos+S-1``, writes their KV through its
+    block table, and attends causally over the full cached sequence.
+
+    ``pos``: (B,) global index of ``x[:, 0]``, -1 for inactive rows
+    (writes dropped, output garbage the engine masks). ``max_pos``:
+    (B,) last position each row may legitimately write — a fed span can
+    extend past a row's LEASED blocks (the table's zero padding would
+    alias block 0, clobbering another request's KV), so writes beyond
+    it are dropped; the engine's on-device max_new/room masks stop
+    emission before those positions matter. Stale pool entries past a
+    row's cursor are rewritten by this chunk before the gather, so the
+    attention only ever sees valid KV."""
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(params, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    _, nb, bs = _paged_parts(pool)
+    nbseq = block_tables.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    p = jnp.maximum(pos, 0)[:, None] + jnp.arange(S)[None, :]      # (B, S)
+    blk = jnp.take_along_axis(block_tables,
+                              jnp.clip(p // bs, 0, nbseq - 1), axis=1)
+    ok = (pos[:, None] >= 0) & (p < nbseq * bs)
+    if max_pos is not None:
+        ok = ok & (p <= jnp.asarray(max_pos, jnp.int32)[:, None])
+    flat = jnp.where(ok, blk * bs + p % bs, nb * bs)               # drop
+    pool = _paged_write(pool, k.reshape(B * S, cfg.num_kv_heads,
+                                        cfg.head_dim),
+                        v.reshape(B * S, cfg.num_kv_heads, cfg.head_dim),
+                        flat.reshape(B * S))
+    t = jnp.arange(nbseq * bs)
+    gflat = jnp.take(block_tables, t // bs, axis=1) * bs + t % bs  # (B, Smax)
+    kc, vc = _paged_gather(cfg, pool, gflat)
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qg = q.reshape(B, S, Hkv, G, cfg.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                        kc.astype(jnp.float32)) * scale
+    live = jnp.arange(nbseq * bs)[None, None, :] <= p[:, :, None]  # (B, S, K)
+    logits = jnp.where(live[:, :, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", w, vc.astype(jnp.float32))
+    o = o.reshape(B, S, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    return _out_proj(params, cfg, o), pool
+
+
+def gqa_dense_verify(params: Params, cfg: ModelConfig, x, cos, sin,
+                     cache: Params, pos) -> Tuple[jnp.ndarray, Params]:
+    """S-token speculative verify step of one layer against a dense
+    (B, Smax) per-slot cache — same contract as ``gqa_paged_verify``
+    with slot rows instead of block tables (``pos`` -1 = inactive,
+    writes dropped)."""
+    B, S, _ = x.shape
+    q, k, v = _proj_qkv(params, cfg, x)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    Smax = cache["k"].shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    p = jnp.maximum(pos, 0)[:, None] + jnp.arange(S)[None, :]      # (B, S)
+    pw = jnp.where((pos[:, None] >= 0) & (p < Smax), p, Smax)      # drop
+    bi = jnp.arange(B)[:, None]
+    if "k_scale" in cache:
+        from repro.serving.kvquant import quantize
+        kq, ks = quantize(k)
+        vq, vs = quantize(v)
+        new_cache = {
+            "k": cache["k"].at[bi, pw].set(kq.astype(cache["k"].dtype),
+                                           mode="drop"),
+            "k_scale": cache["k_scale"].at[bi, pw].set(ks, mode="drop"),
+            "v": cache["v"].at[bi, pw].set(vq.astype(cache["v"].dtype),
+                                           mode="drop"),
+            "v_scale": cache["v_scale"].at[bi, pw].set(vs, mode="drop")}
+    else:
+        new_cache = {
+            "k": cache["k"].at[bi, pw].set(k.astype(cache["k"].dtype),
+                                           mode="drop"),
+            "v": cache["v"].at[bi, pw].set(v.astype(cache["v"].dtype),
+                                           mode="drop")}
+    kc, vc = _unpack_kv(cfg, new_cache)                            # (B, Smax)
+    Hkv, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    qg = q.reshape(B, S, Hkv, G, cfg.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bqhgk", qg,
+                        kc.astype(jnp.float32)) * scale
+    live = jnp.arange(Smax)[None, None, :] <= p[:, :, None]
+    logits = jnp.where(live[:, :, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", w, vc.astype(jnp.float32))
+    o = o.reshape(B, S, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+    return _out_proj(params, cfg, o), new_cache
+
+
 # ---------------------------------------------------------------------------
 # dense per-slot chunk append (continuous batching on the DENSE cache)
 #

@@ -389,6 +389,103 @@ def lm_paged_decode(
     return logits, new_cache
 
 
+# ---------------------------------------------------------------------------
+# speculative verify (multi-token batched decode with all-position logits)
+#
+# The draft/verify step of speculative decoding: every batch row feeds
+# its last sampled token plus K drafted tokens in ONE forward and gets
+# logits back at EVERY position (the chunk-prefill trunk computes the
+# full hidden state too, but unembeds only the last live token — verify
+# needs them all, so these wrappers share the block/scan structure and
+# differ only in the attention primitive and the final unembed).
+
+
+def lm_paged_verify(
+    params: Params, cfg: ModelConfig, tokens: jnp.ndarray, cache: Params,
+    block_tables: jnp.ndarray, pos, max_pos=None, *, moe_cf=None,
+) -> Tuple[jnp.ndarray, Params]:
+    """Batched S-token verify step against the block pool.
+    tokens: (B, S) int32 — row layout [last_token, draft_1..draft_{S-1}];
+    pos: (B,) global index of tokens[:, 0], -1 for inactive rows;
+    max_pos: (B,) optional per-row KV-write cap (see gqa_paged_verify).
+    Returns (logits (B, S, V) at every fed position, updated pool)."""
+    h = embed_tokens(params, cfg, tokens)
+    _, S, _ = h.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos, 0)[:, None] + jnp.arange(S)[None, :]
+    cos, sin = _cos_sin(cfg, positions)
+
+    def block(lp, h, c):
+        x = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        o, c = attn.gqa_paged_verify(lp["attn"], cfg, x, cos, sin, c,
+                                     block_tables, pos, max_pos)
+        h = h + o
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        if cfg.has_moe and "router" in lp["ffn"]:
+            y, _ = moe_ffn(lp["ffn"], cfg, x, capacity_factor=moe_cf)
+        else:
+            y = ffn(lp["ffn"], cfg, x)
+        return h + y, c
+
+    new_prefix = []
+    for lp, c in zip(params.get("prefix_layers", []), cache.get("prefix", [])):
+        h, c = block(lp, h, c)
+        new_prefix.append(c)
+
+    def scan_body(h, xs):
+        lp, c = xs
+        h, c = block(lp, h, c)
+        return h, c
+
+    h, new_stack = jax.lax.scan(scan_body, h, (params["layers"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    new_cache = {"stack": new_stack}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return unembed(params, cfg, h), new_cache
+
+
+def lm_dense_verify(
+    params: Params, cfg: ModelConfig, tokens: jnp.ndarray, cache: Params,
+    pos, *, moe_cf=None,
+) -> Tuple[jnp.ndarray, Params]:
+    """Batched S-token verify step against the dense per-slot cache —
+    same contract as ``lm_paged_verify`` without block tables."""
+    h = embed_tokens(params, cfg, tokens)
+    _, S, _ = h.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.maximum(pos, 0)[:, None] + jnp.arange(S)[None, :]
+    cos, sin = _cos_sin(cfg, positions)
+
+    def block(lp, h, c):
+        x = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        o, c = attn.gqa_dense_verify(lp["attn"], cfg, x, cos, sin, c, pos)
+        h = h + o
+        x = rmsnorm(lp["ffn_norm"], h, cfg.norm_eps)
+        if cfg.has_moe and "router" in lp["ffn"]:
+            y, _ = moe_ffn(lp["ffn"], cfg, x, capacity_factor=moe_cf)
+        else:
+            y = ffn(lp["ffn"], cfg, x)
+        return h + y, c
+
+    new_prefix = []
+    for lp, c in zip(params.get("prefix_layers", []), cache.get("prefix", [])):
+        h, c = block(lp, h, c)
+        new_prefix.append(c)
+
+    def scan_body(h, xs):
+        lp, c = xs
+        h, c = block(lp, h, c)
+        return h, c
+
+    h, new_stack = jax.lax.scan(scan_body, h, (params["layers"], cache["stack"]))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    new_cache = {"stack": new_stack}
+    if new_prefix:
+        new_cache["prefix"] = new_prefix
+    return unembed(params, cfg, h), new_cache
+
+
 def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
                      dtype=None) -> Params:
     """Global KV block pool: every leaf is (num_blocks, block_size, ...)

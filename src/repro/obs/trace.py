@@ -5,7 +5,7 @@ that already exist on the serve path — submit (frontend), admit (slot
 occupied), each prefill chunk, first token, decode/burst token replay,
 and the terminal resolution (finish / shed / cancel / timeout).  Every
 timestamp is ``time.perf_counter()`` taken in host code the engine was
-already running (the ``drain_deltas()``/``_maybe_finish`` replay), so
+already running (the ``drain_deltas()``/``_consume_reason`` replay), so
 tracing adds ZERO device->host syncs: the PR-5 transfer-guard contract
 (decode moves only ``(max_batch,)`` int32 ids) holds with tracing on.
 

@@ -2,7 +2,9 @@ from repro.serving.backend import BACKENDS, BackendProfile, get_backend  # noqa:
 from repro.serving.sampling import SamplingParams, sample, sample_rows  # noqa: F401
 from repro.serving.engine import (CompiledFns, GenResult, InferenceEngine,  # noqa: F401
                                   PagedCompiledFns, PagedInferenceEngine,
-                                  Request, compile_fns, compile_paged_fns)
+                                  Request, SpecConfig, SpecDraft, SpecFns,
+                                  compile_fns, compile_paged_fns,
+                                  compile_spec_fns)
 from repro.serving.kvpool import (BlockPool, PoolExhausted,  # noqa: F401
                                   PrefixStats, RadixPrefixCache)
 from repro.serving.replica_pool import ReplicaPool, ScaleEvent  # noqa: F401

@@ -55,6 +55,29 @@ prefill backlog pending, ``step()`` runs K decode iterations inside one
 flushed per burst; K bounds how stale a cancel or deadline can go), the
 throughput path for ``run()``/offline serving. Burst and stepwise
 decoding are token-for-token equivalent under greedy and fixed seeds.
+
+DEVICE-SIDE TERMINATION (both modes): every decode entry point — fused
+step, burst, the batched first-token sample, and the speculative verify
+— computes the EOS / max_new / out-of-room finish decision ON DEVICE
+(``_finish_bits``) and retires the row there; the host receives the
+reason bits alongside the token ids and is a pure bookkeeping consumer
+(``_consume_reason``), adding only the wall-clock deadline the device
+cannot see.
+
+SPECULATIVE DECODING (``spec=SpecDraft(...)``): a small resident draft
+model shares the engine's device state — its own KV cache (paged: a
+second small ``BlockPool``, slots leased/retired with the target's) —
+and each decode step becomes draft-K + one multi-token target verify
+(``lm_paged_verify``/``lm_dense_verify``, logits at every fed position).
+Acceptance is an on-device prefix mask: at each fed position the target
+samples its would-be token with the SAME per-request PRNG key plain
+decode would use (``fold_in(key, draws + j)``), a drafted token is
+accepted iff it equals that sample, and the emitted tokens are exactly
+the target's samples — so spec output is token-for-token identical to
+plain decode under greedy AND seeded stochastic sampling by
+construction, for ANY draft (only speed varies with draft quality).
+Only one ``(max_batch, K+1)`` int32 id matrix (+ reason bits) crosses
+to host per verify; the transfer guard stays in force.
 """
 from __future__ import annotations
 
@@ -73,7 +96,8 @@ from repro.models import init_cache, model_decode, model_prefill
 from repro.models.attention import (dense_gather_slot, dense_scatter_slot,
                                     paged_gather_ctx, paged_scatter)
 from repro.models.transformer import (copy_paged_block, init_paged_cache,
-                                      lm_chunk_prefill, lm_paged_decode,
+                                      lm_chunk_prefill, lm_dense_verify,
+                                      lm_paged_decode, lm_paged_verify,
                                       supports_chunked, supports_paged)
 from repro.serving.backend import BackendProfile
 from repro.serving.kvpool import BlockPool, RadixPrefixCache
@@ -106,6 +130,8 @@ class GenResult:
     cached_tokens: int = 0                        # prompt tokens from prefix cache
     prefill_chunks: int = 0                       # prefill passes the prompt took
     kv_bytes: int = 0                             # peak KV bytes held (at release)
+    drafted_tokens: int = 0                       # spec: draft proposals verified
+    accepted_tokens: int = 0                      # spec: drafted tokens committed
 
 
 @dataclass
@@ -120,13 +146,14 @@ class _Slot:
     prefilling: bool = False
     order: int = 0               # admission sequence (FIFO chunk scheduling)
     idx: int = 0                 # batch row (device-state buffer index)
+    spec_ok: bool = False        # draft cache co-residency secured
 
 
 @dataclass
 class _PagedSlot(_Slot):
     table: Optional[np.ndarray] = None            # (blocks_per_seq,) int32
     blocks: List[int] = field(default_factory=list)   # ids this req refs
-    matched: bool = False        # prefix lookup done (first-chunk time)
+    spec_blocks: List[int] = field(default_factory=list)  # draft-pool leases
 
 
 def _insert_impl(cache, rcache, slot):
@@ -234,15 +261,34 @@ def _advance_impl(state, logits):
     return nxt, state
 
 
-def _retire_impl(state, nxt, max_seq):
-    """On-device termination between burst iterations — the same rules
-    the host applies after a token lands (EOS / max_new_tokens / out of
-    cache room), minus wall-clock deadlines (those resolve at the burst
-    boundary, which is why K stays bounded)."""
+# finish-reason bit protocol (device -> host): the host never re-derives
+# termination from token values; it consumes these bits verbatim.
+FINISH_EOS = 1
+FINISH_MAX_NEW = 2
+FINISH_ROOM = 4
+
+
+def _finish_bits(state, nxt, max_seq):
+    """On-device termination decision after a token lands — EOS /
+    max_new_tokens / out of cache room as a per-row int32 bitmask
+    (0: keep decoding). Wall-clock deadlines are the one rule that
+    stays host-side (the device has no clock). Applied identically by
+    the fused step, the burst scan, the first-token sample and the
+    speculative verify, so stepwise and burst serving share one
+    termination source of truth."""
     hit_eos = (state["eos"] >= 0) & (nxt == state["eos"])
     full = state["draws"] >= state["max_new"]
     room = state["pos"] >= max_seq - 1
-    return dict(state, active=state["active"] & ~hit_eos & ~full & ~room)
+    bits = (jnp.where(hit_eos, FINISH_EOS, 0)
+            | jnp.where(full, FINISH_MAX_NEW, 0)
+            | jnp.where(room, FINISH_ROOM, 0))
+    return jnp.where(state["active"], bits, 0).astype(jnp.int32)
+
+
+def _retire_impl(state, nxt, max_seq):
+    """On-device retirement: drop rows whose finish bits fired."""
+    bits = _finish_bits(state, nxt, max_seq)
+    return dict(state, active=state["active"] & (bits == 0)), bits
 
 
 @dataclass(frozen=True)
@@ -287,16 +333,20 @@ def _fused_fns(step_fn, max_seq: int):
     """Build the fused decode fields of a CompiledFns/PagedCompiledFns
     from ONE per-engine step closure ``step_fn(params, cache, state) ->
     (nxt, cache, state)`` (decode + ``_advance_impl``): ``fused_step``
-    jits it directly, ``fused_burst`` scans it K times with
-    ``_retire_impl`` between iterations — a single source of truth, so
-    burst and stepwise can never diverge. The state-maintenance index
+    jits it with ``_retire_impl`` appended (device-side termination for
+    STEPWISE serving too — the host consumes the reason bits instead of
+    replaying EOS/length checks), ``fused_burst`` scans it K times with
+    the same retirement between iterations — a single source of truth,
+    so burst and stepwise can never diverge. The state-maintenance index
     ops are shared too (the state pytree layout differs only by the
     paged ``tables`` leaf, which they pass through untouched)."""
     traces = {"fused_step": 0, "fused_burst": 0}
 
     def _fused(params, cache, state):
         traces["fused_step"] += 1
-        return step_fn(params, cache, state)
+        nxt, cache, state = step_fn(params, cache, state)
+        state, bits = _retire_impl(state, nxt, max_seq)
+        return nxt, bits, cache, state
 
     def _burst(params, cache, state, k):
         traces["fused_burst"] += 1
@@ -305,18 +355,32 @@ def _fused_fns(step_fn, max_seq: int):
             cache, state = carry
             was = state["active"]
             nxt, cache, state = step_fn(params, cache, state)
-            state = _retire_impl(state, nxt, max_seq)
-            return (cache, state), (nxt, was)
+            state, bits = _retire_impl(state, nxt, max_seq)
+            # -1 marks rows that were not decoding this iteration, so
+            # the whole burst transfer stays int32 (ids + reason bits)
+            return (cache, state), (jnp.where(was, nxt, -1), bits)
 
-        (cache, state), (toks, alive) = jax.lax.scan(body, (cache, state),
-                                                     None, length=k)
-        return toks, alive, cache, state
+        (cache, state), (toks, bits) = jax.lax.scan(body, (cache, state),
+                                                    None, length=k)
+        return toks, bits, cache, state
+
+    def _first(state, logits, idx, pos_vals, tables):
+        toks, state = _first_tokens_impl(state, logits, idx, pos_vals,
+                                         tables)
+        # device-side termination for first tokens too: an EOS straight
+        # out of prefill (or max_new_tokens=1) retires the row before it
+        # ever joins a decode batch. Non-idx active rows re-check their
+        # last token — a no-op by invariant (they survived their own
+        # step's bits or they would not be active).
+        allbits = _finish_bits(state, state["tokens"][:, 0], max_seq)
+        state = dict(state, active=state["active"] & (allbits == 0))
+        return toks, allbits[idx], state
 
     return dict(
         fused_step=jax.jit(_fused, donate_argnums=(1, 2)),
         fused_burst=jax.jit(_burst, static_argnums=(3,),
                             donate_argnums=(1, 2)),
-        first_tokens=jax.jit(_first_tokens_impl, donate_argnums=(0,)),
+        first_tokens=jax.jit(_first, donate_argnums=(0,)),
         occupy=jax.jit(_occupy_impl, donate_argnums=(0,)),
         deactivate=jax.jit(_deactivate_impl, donate_argnums=(0,)),
         trace_counts=traces)
@@ -412,6 +476,214 @@ def compile_paged_fns(cfg: ModelConfig, backend: BackendProfile,
         **_fused_fns(_step, max_seq))
 
 
+# ---------------------------------------------------------------------------
+# speculative decoding: resident draft model + on-device verify
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Serve-plane speculative-decoding request: which registry arch
+    drafts, and how many tokens per verify. Threaded ReplicaPool ->
+    GatewayConfig -> ``launch/serve.py --spec-draft/--spec-k``; the pool
+    resolves it into a ``SpecDraft`` (config + initialized params) per
+    replica."""
+    draft_arch: str
+    k: int = 4
+
+
+@dataclass
+class SpecDraft:
+    """Resolved draft model an engine co-residents with its target:
+    the draft's config + params, the drafted-token count K, and (paged)
+    an optional draft-pool size override — the KV-pressure knob tests
+    use to force the co-residency refusal path."""
+    cfg: ModelConfig
+    params: object
+    k: int = 4
+    num_blocks: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class SpecFns:
+    """Jitted functions of one (target, draft, K) speculative pair.
+    ``step`` is the whole hot path — draft-K (a ``lax.scan`` of small-
+    model decodes) + one multi-token target verify + on-device accept/
+    emit/retire — in ONE dispatch; the ``gather``/``prefill``/
+    ``scatter`` trio runs the draft's whole-prompt prefill into its own
+    cache at admission time; ``set_table`` (paged) loads one row of the
+    device-resident draft block table."""
+    step: object
+    gather: object = None
+    prefill: object = None
+    scatter: object = None
+    set_table: object = None
+    trace_counts: object = None
+
+
+def compile_spec_fns(cfg: ModelConfig, dcfg: ModelConfig, max_seq: int,
+                     k: int, block_size: Optional[int] = None) -> SpecFns:
+    """Compile the draft/verify pair (paged when ``block_size`` is set).
+
+    THE ACCEPTANCE RULE (exactness by construction): the verify forward
+    yields target logits at every fed position j (conditioned on the
+    true prefix t0, d1..dj). At each position the target samples its
+    would-be token ``s_j = sample_rows(logits_j, ..., fold_in(key,
+    draws+j))`` — byte-identical to what plain decode would have drawn
+    there, greedy or stochastic. Draft d_{j+1} is accepted iff it EQUALS
+    s_j, and the emitted tokens are the s_j themselves up to (and
+    including) the first non-match — so the output stream never depends
+    on the draft at all; the draft only decides how many of the K+1
+    computed tokens are committable per dispatch. For stochastic
+    sampling this is the rejection rule specialized to proposal ==
+    target-with-same-key: the draft samples its OWN logits with the SAME
+    per-request keys, so a well-aligned draft agrees with high
+    probability and an identity draft agrees always.
+
+    The draft scan runs K+1 iterations: iteration j feeds token j of
+    [t0, d1..dK] (writing its KV into the draft cache — iteration K
+    exists so d_K's KV lands for the all-accepted case) and samples the
+    next draft; the last sample is discarded.
+    """
+    traces = {"spec_step": 0}
+    S = k + 1
+
+    def _span_sample(state, logits):
+        """Target samples at all K+1 fed positions with the per-request
+        keys plain decode would use (one flattened sample_rows call)."""
+        B, V = logits.shape[0], logits.shape[-1]
+        di = state["draws"][:, None] + jnp.arange(S)[None, :]
+        keys = jax.vmap(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))(
+            state["key"], di)
+        flat = sample_rows(logits.reshape(B * S, V),
+                           jnp.repeat(state["temp"], S),
+                           jnp.repeat(state["top_k"], S),
+                           jnp.repeat(state["top_p"], S),
+                           keys.reshape(B * S, 2))
+        return flat.reshape(B, S)
+
+    def _accept_emit(state, s_tok, drafts):
+        """On-device accept-prefix + emission mask + retirement.
+
+        ``acc`` = length of the matching draft prefix; candidate j may
+        emit if j <= acc AND no earlier emitted candidate finished the
+        request (EOS / max_new / room — the same ``_finish_bits`` rules,
+        evaluated per candidate position). Returns the (B, S) id matrix
+        (-1 past the emitted prefix) and the (B,) reason bits — the only
+        buffers that cross to host."""
+        active = state["active"]
+        offs = jnp.arange(S)[None, :]
+        match = (drafts == s_tok[:, :k]).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)
+        allowed = offs <= acc[:, None]
+        hit_eos = ((state["eos"][:, None] >= 0)
+                   & (s_tok == state["eos"][:, None]))
+        full = state["draws"][:, None] + offs + 1 >= state["max_new"][:, None]
+        room = state["pos"][:, None] + offs + 1 >= max_seq - 1
+        bits = (jnp.where(hit_eos, FINISH_EOS, 0)
+                | jnp.where(full, FINISH_MAX_NEW, 0)
+                | jnp.where(room, FINISH_ROOM, 0)).astype(jnp.int32)
+        stop = (allowed & (bits != 0)).astype(jnp.int32)
+        prior = jnp.cumsum(stop, axis=1) - stop       # stops before j
+        emit = active[:, None] & allowed & (prior == 0)
+        n_emit = emit.sum(axis=1).astype(jnp.int32)   # >= 1 on active rows
+        out = jnp.where(emit, s_tok, -1).astype(jnp.int32)
+        last = jnp.clip(n_emit - 1, 0, k)[:, None]
+        reason = jnp.where(
+            active & (jnp.take_along_axis(stop, last, 1)[:, 0] != 0),
+            jnp.take_along_axis(bits, last, 1)[:, 0], 0).astype(jnp.int32)
+        last_tok = jnp.take_along_axis(out, last, 1)[:, 0]
+        state = dict(
+            state,
+            tokens=jnp.where(active, last_tok,
+                             state["tokens"][:, 0])[:, None].astype(jnp.int32),
+            pos=jnp.where(active, state["pos"] + n_emit, state["pos"]),
+            draws=jnp.where(active, state["draws"] + n_emit, state["draws"]),
+            active=active & (reason == 0))
+        return out, reason, state
+
+    def _draft_next(state, active, logits, j):
+        """Draft's proposal for global draw index draws+j: its own
+        logits sampled under the target's key/params for that draw."""
+        keys = jax.vmap(jax.random.fold_in)(state["key"],
+                                            state["draws"] + j)
+        nt = sample_rows(logits, state["temp"], state["top_k"],
+                         state["top_p"], keys)
+        return jnp.where(active, nt, 0).astype(jnp.int32)
+
+    if block_size is not None:
+        def _step(params, dparams, cache, dcache, state, dtables):
+            traces["spec_step"] += 1
+            active = state["active"]
+            pos = jnp.where(active, state["pos"], -1)
+            # last position a row may legitimately write: the fed span
+            # can overrun a short request's leased blocks (zero-padded
+            # tables alias block 0 — another request's KV); emission
+            # stops at max_new before any capped-out position matters
+            cap = state["pos"] + (state["max_new"] - state["draws"])
+
+            def dbody(carry, j):
+                dc, tok, dp = carry
+                dpw = jnp.where(active & (dp <= cap), dp, -1)
+                logits, dc = lm_paged_decode(dparams, dcfg, tok, dc,
+                                             dtables, dpw)
+                nt = _draft_next(state, active, logits, j)
+                return (dc, nt[:, None], jnp.where(active, dp + 1, dp)), nt
+
+            (dcache, _, _), dseq = jax.lax.scan(
+                dbody, (dcache, state["tokens"], pos), jnp.arange(S))
+            drafts = dseq[:k].swapaxes(0, 1)          # (B, K): d_1..d_K
+            fed = jnp.concatenate([state["tokens"], drafts], axis=1)
+            logits, cache = lm_paged_verify(params, cfg, fed, cache,
+                                            state["tables"], pos, cap)
+            s_tok = _span_sample(state, logits)
+            out, reason, state = _accept_emit(state, s_tok, drafts)
+            return out, reason, cache, dcache, state
+
+        def _dprefill(dparams, tokens, ctx_kv, start, s_real):
+            return lm_chunk_prefill(dparams, dcfg, tokens, ctx_kv, start,
+                                    s_real)
+
+        return SpecFns(
+            step=jax.jit(_step, donate_argnums=(2, 3, 4)),
+            gather=jax.jit(paged_gather_ctx),
+            prefill=jax.jit(_dprefill),
+            scatter=jax.jit(paged_scatter, donate_argnums=(0,)),
+            set_table=jax.jit(lambda tabs, i, row: tabs.at[i].set(row),
+                              donate_argnums=(0,)),
+            trace_counts=traces)
+
+    def _step(params, dparams, cache, dcache, state):
+        traces["spec_step"] += 1
+        active = state["active"]
+
+        def dbody(carry, j):
+            dc, tok, dp = carry
+            safe = jnp.where(active, dp, max_seq - 1)
+            logits, dc = model_decode(dparams, dcfg, tok, dc, safe)
+            nt = _draft_next(state, active, logits, j)
+            return (dc, nt[:, None], jnp.where(active, dp + 1, dp)), nt
+
+        (dcache, _, _), dseq = jax.lax.scan(
+            dbody, (dcache, state["tokens"], state["pos"]), jnp.arange(S))
+        drafts = dseq[:k].swapaxes(0, 1)
+        fed = jnp.concatenate([state["tokens"], drafts], axis=1)
+        pos = jnp.where(active, state["pos"], -1)
+        logits, cache = lm_dense_verify(params, cfg, fed, cache, pos)
+        s_tok = _span_sample(state, logits)
+        out, reason, state = _accept_emit(state, s_tok, drafts)
+        return out, reason, cache, dcache, state
+
+    def _dprefill(dparams, tokens, ctx_kv, start, s_real):
+        return lm_chunk_prefill(dparams, dcfg, tokens, ctx_kv, start, s_real)
+
+    return SpecFns(
+        step=jax.jit(_step, donate_argnums=(2, 3, 4)),
+        gather=jax.jit(dense_gather_slot),
+        prefill=jax.jit(_dprefill),
+        scatter=jax.jit(dense_scatter_slot, donate_argnums=(0,)),
+        trace_counts=traces)
+
+
 class InferenceEngine:
     """Continuous-batching engine for one (model x backend) instance.
 
@@ -429,7 +701,8 @@ class InferenceEngine:
                  max_seq: int = 512, seed: int = 0, fns=None,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1, obs=None):
+                 decode_burst: int = 1, obs=None,
+                 spec: Optional[SpecDraft] = None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
@@ -476,6 +749,17 @@ class InferenceEngine:
         self._pending_first: List[Tuple["_Slot", object]] = []
         self.fns = fns or self._compile()
         self._bind_fns()
+        # speculative decoding: a viable draft co-residents its own KV
+        # cache beside the target's; an unviable one degrades to plain
+        # fused stepwise (self.spec stays None — no other path changes)
+        self.spec: Optional[SpecDraft] = None
+        self._spec_bytes = 0
+        self._spec_drafted = 0            # lifetime drafted/accepted (gauge)
+        self._spec_accepted = 0
+        self._spec_win = [0, 0]           # draft-collapse detection window
+        if spec is not None and self._spec_viable(spec):
+            self.spec = spec
+            self._init_spec()
 
     # hooks a paged subclass overrides ------------------------------------
     def _make_slot(self) -> "_Slot":
@@ -511,6 +795,71 @@ class InferenceEngine:
         """Chunk-append available AND requested for this engine."""
         return self.chunk_tokens is not None and self.fns.chunk_prefill is not None
 
+    # -- speculative decoding hooks ---------------------------------------
+    def _spec_viable(self, spec: SpecDraft) -> bool:
+        """Can this draft co-reside? Vocab must match (acceptance compares
+        token ids) and both models need the multi-token chunk/verify
+        trunk. Failing the gate is graceful: plain fused stepwise."""
+        return (spec.cfg.vocab_size == self.cfg.vocab_size
+                and supports_chunked(spec.cfg)
+                and supports_chunked(self.cfg))
+
+    def _build_spec_cache(self, spec: SpecDraft):
+        """Draft KV storage (dense: its own per-slot cache)."""
+        return init_cache(spec.cfg, self.max_batch, self.max_seq,
+                          self._kv_dtype)
+
+    def _init_spec(self) -> None:
+        """Allocate the draft's device residency and compile the pair.
+        KV-pressure gate: if the draft cache would outweigh the target's
+        own, the draft cannot co-reside — drop to plain decode rather
+        than let the helper starve the helped."""
+        spec = self.spec
+        dcache = self._build_spec_cache(spec)
+        nbytes = int(sum(
+            x.nbytes for x in jax.tree_util.tree_leaves(dcache)))
+        if dcache is None or nbytes > self._cache_bytes:
+            self.spec = None
+            return
+        self._spec_cache = dcache
+        self._spec_bytes = nbytes
+        self.sfns = self._compile_spec(spec)
+        self._sgather = self.sfns.gather
+        self._sprefill = self.sfns.prefill
+        self._sscatter = self.sfns.scatter
+
+    def _compile_spec(self, spec: SpecDraft) -> SpecFns:
+        return compile_spec_fns(self.cfg, spec.cfg, self.max_seq, spec.k)
+
+    def _spec_dispatch(self):
+        """One fused draft-K + verify dispatch over the engine's device
+        state. Returns (out ids, reason bits, cache, dcache, state)."""
+        return self.sfns.step(self.params, self.spec.params, self.cache,
+                              self._spec_cache, self._dstate)
+
+    def _spec_ready(self, active: List[int]) -> bool:
+        """Spec runs only when EVERY active row has draft residency —
+        a row without a draft-cache lease would read/clobber another
+        row's draft KV. Mixed batches fall back to plain stepwise."""
+        return (self.spec is not None
+                and all(self._slots[i].spec_ok for i in active))
+
+    def _spec_prefill_slot(self, slot: "_Slot") -> None:
+        """Whole-prompt draft prefill at admission-completion time: the
+        draft needs KV for the ENTIRE prompt (including any part the
+        target skipped via prefix cache — the draft pool has no radix),
+        in one bucketed pass into its own cache."""
+        n = slot.filled
+        sb = self._bucket_up(n)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :n] = slot.prompt[:n]
+        ctx = self._sgather(self._spec_cache, jnp.int32(slot.idx))
+        _, new_kv = self._sprefill(self.spec.params, jnp.asarray(padded),
+                                   ctx, jnp.int32(0), jnp.int32(n))
+        self._spec_cache = self._sscatter(self._spec_cache, new_kv,
+                                          jnp.int32(slot.idx), jnp.int32(0),
+                                          jnp.int32(n))
+
     def _register_cache_bytes(self) -> None:
         """Hook: publish cache geometry (paged sets bytes_per_block)."""
 
@@ -535,9 +884,13 @@ class InferenceEngine:
     # -- resident-memory accounting --------------------------------------
     def resident_bytes(self) -> int:
         """HBM this replica pins: params (config param count x dtype
-        width) + the KV cache/pool tensors."""
+        width) + the KV cache/pool tensors — and, under speculative
+        decoding, the resident draft's params + its own KV cache."""
         from repro.obs.cost import param_bytes
-        return param_bytes(self.cfg) + self._cache_bytes
+        total = param_bytes(self.cfg) + self._cache_bytes
+        if self.spec is not None:
+            total += param_bytes(self.spec.cfg) + self._spec_bytes
+        return total
 
     def kv_pool_bytes(self) -> Tuple[int, int]:
         """(used, free) KV bytes — dense: occupied-slot shares of the
@@ -674,7 +1027,9 @@ class InferenceEngine:
         active = [i for i, s in enumerate(self._slots)
                   if not s.done and not s.prefilling]
         if active:
-            if (self.decode_burst > 1 and self._queued() == 0
+            if self._spec_ready(active):
+                self._decode_spec(active)
+            elif (self.decode_burst > 1 and self._queued() == 0
                     and not any(s.prefilling for s in self._slots
                                 if not s.done)):
                 self._decode_burst(active)
@@ -710,22 +1065,30 @@ class InferenceEngine:
             spent = (self.step_token_budget - rem
                      if self.step_token_budget is not None and rem is not None
                      else ntok)
-            fl.record_step(
-                m, t1,
+            snap = dict(
                 active=sum(1 for s in self._slots if not s.done),
                 pending_tokens=self.pending_tokens(),
                 free_blocks=getattr(getattr(self, "pool", None),
                                     "num_free", -1),
                 tokens=ntok, budget_spent=spent, burst=self.decode_burst)
+            if self.spec is not None:
+                # draft-collapse forensics ride the snapshot ring: the
+                # accept rate at every step leading up to an anomaly dump
+                snap["spec_accept_rate"] = (
+                    self._spec_accepted / self._spec_drafted
+                    if self._spec_drafted else -1.0)
+            fl.record_step(m, t1, **snap)
 
     # -- fused decode (device-resident hot path) --------------------------
     def _decode_once(self, active: List[int]) -> None:
         """One fused decode+sample dispatch; the ONLY device->host
-        traffic is the (max_batch,) int32 vector of sampled token ids."""
-        nxt, self.cache, self._dstate = self._fused_step(
+        traffic is the (max_batch,) int32 token-id vector plus the
+        (max_batch,) int32 finish-reason bits — termination is decided
+        on device, the host just books the result."""
+        nxt, bits, self.cache, self._dstate = self._fused_step(
             self.params, self.cache, self._dstate)
         # servelint: disable=SL002 -- the designed per-step sync point
-        toks = jax.device_get(nxt)
+        toks, bits = jax.device_get((nxt, bits))
         t = time.perf_counter()
         tracer = self._obs.tracer if self._obs is not None else None
         for i in active:
@@ -737,20 +1100,21 @@ class InferenceEngine:
             s.pos += 1
             if tracer is not None:
                 tracer.on_tokens(uid, t)
-            self._maybe_finish(s, t)
+            self._consume_reason(s, t, int(bits[i]))
 
     def _decode_burst(self, active: List[int]) -> None:
         """K fused decode iterations inside one ``lax.scan`` dispatch,
         with on-device EOS/length retirement; the host replays the
-        (K, max_batch) token ids afterwards to run the shared
-        termination bookkeeping. Wall-clock deadlines resolve only at
-        the burst boundary — K bounds that staleness, which is why the
-        burst stays opt-in and bounded rather than running to EOS."""
+        (K, max_batch) token ids (-1: row not decoding that iteration)
+        and consumes the matching reason bits. Wall-clock deadlines
+        resolve only at the burst boundary — K bounds that staleness,
+        which is why the burst stays opt-in and bounded rather than
+        running to EOS."""
         k = self.decode_burst
-        toks, alive, self.cache, self._dstate = self._fused_burst(
+        toks, bits, self.cache, self._dstate = self._fused_burst(
             self.params, self.cache, self._dstate, k)
         # servelint: disable=SL002 -- the designed per-burst sync point
-        toks, alive = jax.device_get((toks, alive))
+        toks, bits = jax.device_get((toks, bits))
         counts: Dict[int, int] = {}
         for j in range(k):
             t = time.perf_counter()
@@ -759,7 +1123,7 @@ class InferenceEngine:
                 # s.done: the host finished this row at an earlier burst
                 # iteration (e.g. a lapsed deadline the device couldn't
                 # see) — any tokens the device over-ran are dropped
-                if s.done or not alive[j, i]:
+                if s.done or toks[j, i] < 0:
                     continue
                 tok = int(toks[j, i])
                 uid = s.req.uid
@@ -767,7 +1131,7 @@ class InferenceEngine:
                 self._deltas.append((uid, tok))
                 s.pos += 1
                 counts[uid] = counts.get(uid, 0) + 1
-                self._maybe_finish(s, t)
+                self._consume_reason(s, t, int(bits[j, i]))
         if self._obs is not None:
             # one tracer call per request per burst: the replay wall
             # since the request's previous token spreads evenly over its
@@ -779,6 +1143,67 @@ class InferenceEngine:
                 tracer.on_tokens(uid, t, n)
             self._obs.registry.gauge("engine_burst_depth",
                                      self._obs.model).set(float(k))
+
+    def _decode_spec(self, active: List[int]) -> None:
+        """One speculative draft-K + verify dispatch: up to K+1 tokens
+        per active row for ONE target forward. The only device->host
+        traffic is the (max_batch, K+1) int32 id matrix (-1 past each
+        row's emitted prefix) and the (max_batch,) reason bits — the
+        draft's logits, the verify logits and the acceptance mask all
+        stay on device."""
+        out, reason, self.cache, self._spec_cache, self._dstate = \
+            self._spec_dispatch()
+        # servelint: disable=SL002 -- the designed per-verify sync point
+        out, reason = jax.device_get((out, reason))
+        t = time.perf_counter()
+        k = self.spec.k
+        counts: Dict[int, int] = {}
+        drafted = accepted = 0
+        for i in active:
+            s = self._slots[i]
+            uid = s.req.uid
+            n = 0
+            for tok in out[i]:             # emitted prefix, then -1 pads
+                if tok < 0:
+                    break
+                tok = int(tok)
+                s.res.new_tokens.append(tok)
+                self._deltas.append((uid, tok))
+                s.pos += 1
+                n += 1
+            counts[uid] = n
+            s.res.drafted_tokens += k
+            s.res.accepted_tokens += max(n - 1, 0)
+            drafted += k
+            accepted += max(n - 1, 0)
+            self._consume_reason(s, t, int(reason[i]))
+        self._spec_drafted += drafted
+        self._spec_accepted += accepted
+        # draft-collapse watch: a draft that stops agreeing makes every
+        # verify pay K+1 positions for ~1 token — flag it for the flight
+        # recorder once enough evidence accumulates
+        self._spec_win[0] += drafted
+        self._spec_win[1] += accepted
+        if self._obs is not None:
+            reg, m = self._obs.registry, self._obs.model
+            tracer = self._obs.tracer
+            hist = reg.histogram("spec_accept_len", m,
+                                 bounds=(0.0, 1.0, 2.0, 4.0, 8.0, 16.0))
+            for uid, n in counts.items():
+                if n:
+                    tracer.on_tokens(uid, t, n)
+                hist.observe(float(max(n - 1, 0)))
+            if self._spec_drafted:
+                reg.gauge("spec_accept_rate", m).set(
+                    self._spec_accepted / self._spec_drafted)
+            fl = self._obs.flight
+            if (fl is not None and self._spec_win[0] >= 64
+                    and self._spec_win[1] / self._spec_win[0] < 0.05):
+                fl.trigger("spec_draft_collapse", t,
+                           accept_rate=self._spec_win[1] / self._spec_win[0],
+                           drafted=self._spec_win[0])
+        if self._spec_win[0] >= 64:
+            self._spec_win = [0, 0]
 
     def drain_finished(self) -> List[GenResult]:
         out, self._finished = self._finished, []
@@ -819,11 +1244,11 @@ class InferenceEngine:
             rows.append(logits)
         rows.extend([jnp.zeros_like(rows[0])] * (nb - n))
         stacked = jnp.concatenate(rows, axis=0)
-        toks, self._dstate = self._first_fn(
+        toks, bits, self._dstate = self._first_fn(
             self._dstate, stacked, jnp.asarray(idx), jnp.asarray(pos_vals),
             self._stack_tables(pend, nb))
         # servelint: disable=SL002 -- first-token ids must reach the host here
-        toks = jax.device_get(toks)
+        toks, bits = jax.device_get((toks, bits))
         t = time.perf_counter()
         tracer = self._obs.tracer if self._obs is not None else None
         for j, (slot, _) in enumerate(pend):
@@ -834,7 +1259,7 @@ class InferenceEngine:
             slot.prefilling = False
             if tracer is not None:
                 tracer.on_first_token(uid, t)
-            self._maybe_finish(slot, t)
+            self._consume_reason(slot, t, int(bits[j]))
 
     def _stack_tables(self, pend, nb: int):
         """Paged hook: block tables to sync into the device state when
@@ -842,24 +1267,24 @@ class InferenceEngine:
         return None
 
     # -- termination ------------------------------------------------------
-    def _maybe_finish(self, s: "_Slot", t: float) -> bool:
-        """Apply the shared termination rules after a token lands."""
-        sp = s.req.sampling
-        last = s.res.new_tokens[-1]
-        hit_eos = sp.eos_id is not None and last == sp.eos_id
-        full = len(s.res.new_tokens) >= sp.max_new_tokens
+    def _consume_reason(self, s: "_Slot", t: float, reason: int) -> bool:
+        """Book a DEVICE-REPORTED finish reason (``FINISH_EOS`` /
+        ``FINISH_MAX_NEW`` / ``FINISH_ROOM`` bits; 0: still going). The
+        device already retired the row; the host's only original
+        contribution is the wall-clock deadline it alone can see. Pure
+        bookkeeping — no token-value re-derivation, no device sync."""
         timed_out = (s.req.deadline_s is not None and
                      t - s.req.arrival_t > s.req.deadline_s)
-        out_of_room = s.pos >= self.max_seq - 1
-        if hit_eos or full or timed_out or out_of_room:
-            s.res.latency = t - s.req.arrival_t
-            s.res.completed = (hit_eos or full) and not timed_out
-            s.res.timed_out = timed_out
-            self._finished.append(s.res)
-            self._release(s)
-            self._clear_slot(s)
-            return True
-        return False
+        if reason == 0 and not timed_out:
+            return False
+        s.res.latency = t - s.req.arrival_t
+        s.res.completed = (bool(reason & (FINISH_EOS | FINISH_MAX_NEW))
+                           and not timed_out)
+        s.res.timed_out = timed_out
+        self._finished.append(s.res)
+        self._release(s)
+        self._clear_slot(s)
+        return True
 
     def _clear_slot(self, s: "_Slot") -> None:
         if s.req is not None:
@@ -870,6 +1295,7 @@ class InferenceEngine:
         s.prefilling = False
         s.prompt = []
         s.filled = 0
+        s.spec_ok = False
 
     # -- admission (state only; compute happens in _prefill_step) ---------
     @staticmethod
@@ -908,6 +1334,9 @@ class InferenceEngine:
         slot.pos = filled
         slot.prefilling = True
         slot.done = False
+        # dense draft cache has a row per slot; the paged _begin replaces
+        # this with the outcome of its draft-pool lease
+        slot.spec_ok = self.spec is not None
         slot.order = self._order
         self._order += 1
         sp = req.sampling
@@ -1030,6 +1459,10 @@ class InferenceEngine:
         self._register_prefix(slot)
         if not res.ttft:                 # _prefill_chunk stamps pre-scatter
             res.ttft = time.perf_counter() - req.arrival_t
+        if slot.spec_ok:
+            # draft residency secured at admission: give the draft its
+            # whole-prompt KV now, off the guarded decode path
+            self._spec_prefill_slot(slot)
         self._pending_first.append((slot, logits))
 
     def _register_prefix(self, slot: "_Slot") -> None:
@@ -1074,7 +1507,8 @@ class PagedInferenceEngine(InferenceEngine):
                  prefix_cache: bool = True,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1, obs=None):
+                 decode_burst: int = 1, obs=None,
+                 spec: Optional[SpecDraft] = None):
         if not supports_paged(cfg):
             raise ValueError(f"{cfg.name}: family/attention has no paged path")
         if max_seq % block_size:
@@ -1092,7 +1526,7 @@ class PagedInferenceEngine(InferenceEngine):
         super().__init__(cfg, params, backend, max_seq, seed, fns,
                          chunk_tokens=chunk_tokens,
                          step_token_budget=step_token_budget,
-                         decode_burst=decode_burst, obs=obs)
+                         decode_burst=decode_burst, obs=obs, spec=spec)
 
     # -- hooks ----------------------------------------------------------
     def _make_slot(self) -> _PagedSlot:
@@ -1128,6 +1562,54 @@ class PagedInferenceEngine(InferenceEngine):
         # the paged prefill is ALWAYS a chunk-append (gather/compute/
         # scatter); chunk_tokens only bounds how much one pass covers
         return self.chunk_tokens is not None
+
+    # -- speculative decoding (paged residency) -------------------------
+    def _build_spec_cache(self, spec: SpecDraft):
+        """Draft KV storage: its own small block pool. Same block size
+        and (by default) population as the target's, but each block is
+        the DRAFT's width — for a 10x smaller draft that is ~10x fewer
+        bytes. ``spec.num_blocks`` overrides the population (the
+        KV-pressure test knob)."""
+        self.spec_blocks = spec.num_blocks or self.num_blocks
+        if self.spec_blocks < self.blocks_per_seq:
+            return None
+        return init_paged_cache(spec.cfg, self.spec_blocks, self.block_size,
+                                self._kv_dtype)
+
+    def _init_spec(self) -> None:
+        super()._init_spec()
+        if self.spec is None:             # KV-pressure gate refused
+            return
+        self.spec_pool = BlockPool(self.spec_blocks, self.block_size)
+        # device-resident draft block tables: updated by a jitted row op
+        # at admission (off the guarded decode path), read by every
+        # verify dispatch — never re-staged from host per step
+        self._spec_tables = jnp.zeros((self.max_batch, self.blocks_per_seq),
+                                      jnp.int32)
+
+    def _compile_spec(self, spec: SpecDraft) -> SpecFns:
+        return compile_spec_fns(self.cfg, spec.cfg, self.max_seq, spec.k,
+                                self.block_size)
+
+    def _spec_dispatch(self):
+        return self.sfns.step(self.params, self.spec.params, self.cache,
+                              self._spec_cache, self._dstate,
+                              self._spec_tables)
+
+    def _spec_prefill_slot(self, slot: _PagedSlot) -> None:
+        n = slot.filled
+        sb = self._bucket_up(n)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, :n] = slot.prompt[:n]
+        stab = np.zeros((self.blocks_per_seq,), np.int32)
+        stab[:len(slot.spec_blocks)] = slot.spec_blocks
+        # start=0: no cached draft context — gather one block for shape
+        ctx_kv = self._sgather(self._spec_cache, jnp.asarray(stab[:1]))
+        _, new_kv = self._sprefill(self.spec.params, jnp.asarray(padded),
+                                   ctx_kv, jnp.int32(0), jnp.int32(n))
+        self._spec_cache = self._sscatter(self._spec_cache, new_kv,
+                                          jnp.asarray(stab), jnp.int32(0),
+                                          jnp.int32(n))
 
     def _stack_tables(self, pend, nb: int):
         """Sync each activating slot's (possibly extension-rewritten)
@@ -1216,9 +1698,23 @@ class PagedInferenceEngine(InferenceEngine):
         self._occupy(slot, req, prompt, filled=keep, cached=keep)
         slot.table = table
         slot.blocks = owned
-        slot.matched = False              # extension lookup pending
         self.hit_tokens += keep
         self.prompt_tokens += plen
+        # draft residency: lease the request's full span from the draft
+        # pool (no prefix sharing there — the draft prefills the whole
+        # prompt itself). A dry draft pool is NOT an admission failure:
+        # the slot runs plain stepwise (spec_ok False falls the whole
+        # batch back) rather than stalling the target.
+        slot.spec_ok = False
+        if self.spec is not None:
+            n_blk = math.ceil(total / bs)
+            if n_blk <= self.spec_pool.num_free:
+                slot.spec_blocks = self.spec_pool.alloc_many(n_blk)
+                stab = np.zeros((self.blocks_per_seq,), np.int32)
+                stab[:n_blk] = slot.spec_blocks
+                self._spec_tables = self.sfns.set_table(
+                    self._spec_tables, slot.idx, jnp.asarray(stab))
+                slot.spec_ok = True
         return True
 
     def _match_prefix(self, prompt: List[int]):
@@ -1249,12 +1745,14 @@ class PagedInferenceEngine(InferenceEngine):
 
     # -- prefill --------------------------------------------------------
     def _extend_prefix(self, slot: _PagedSlot) -> None:
-        """First-chunk re-lookup: adopt full blocks a concurrent twin
-        registered between this slot's admission and its first prefill
-        pass (progressive chunk-by-chunk sharing). Aligned extension
-        only — when admission copy-on-wrote a partial tail, what it
-        decided stands."""
-        slot.matched = True
+        """Chunk-boundary re-lookup: adopt full blocks a concurrent twin
+        registered since this slot's LAST prefill pass (progressive
+        chunk-by-chunk sharing — a twin that finishes registering while
+        this request is mid-prefill is picked up at the next boundary,
+        not just at first-chunk time). Aligned extension only — when
+        admission copy-on-wrote a partial tail, what it decided stands;
+        an unaligned cursor also skips (adoption would orphan the
+        partial block's freshly-written KV)."""
         if self.prefix is None or slot.filled % self.block_size:
             return
         bs = self.block_size
@@ -1305,11 +1803,12 @@ class PagedInferenceEngine(InferenceEngine):
 
     def _prefill_step(self, slot_id: int, slot: _PagedSlot,
                       rem: Optional[int]) -> Optional[int]:
-        # extension lookup on the slot's FIRST prefill pass, before the
-        # base class sizes the chunk: blocks a twin registered since
-        # admission move the cursor, so only the remainder is charged
-        if not slot.matched:
-            self._extend_prefix(slot)
+        # extension lookup at EVERY chunk boundary, before the base
+        # class sizes the chunk: blocks a twin registered since the last
+        # pass move the cursor, so only the remainder is charged (the
+        # radix lookup is host-side and O(matched tokens) — cheap next
+        # to the chunk it can save)
+        self._extend_prefix(slot)
         rem = super()._prefill_step(slot_id, slot, rem)
         # register full blocks the moment their KV is valid (the radix
         # insert dedupes), so a twin prompt admitted in the same step
@@ -1339,6 +1838,9 @@ class PagedInferenceEngine(InferenceEngine):
                 self.prefix.insert(seq, slot.table[:n_full].tolist())
         for b in slot.blocks:
             self.pool.decref(b)
+        for b in slot.spec_blocks:        # draft co-retires with target
+            self.spec_pool.decref(b)
         slot.table = None
         slot.blocks = []
-        slot.matched = False
+        slot.spec_blocks = []
+        slot.spec_ok = False

@@ -30,8 +30,8 @@ from repro.models import init_model
 from repro.models.transformer import supports_paged
 from repro.serving.backend import BACKENDS
 from repro.serving.engine import (DEFAULT_BLOCK_SIZE, InferenceEngine,
-                                  PagedInferenceEngine, Request, compile_fns,
-                                  compile_paged_fns)
+                                  PagedInferenceEngine, Request, SpecConfig,
+                                  SpecDraft, compile_fns, compile_paged_fns)
 from repro.serving.sampling import SamplingParams
 
 _Key = Tuple[str, str]
@@ -60,7 +60,8 @@ class ReplicaPool:
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
-                 decode_burst: int = 1, obs=None):
+                 decode_burst: int = 1, obs=None,
+                 spec: Optional[SpecConfig] = None):
         self.models = models
         self.obs = obs                # Observability bundle (optional)
         self.reg = registry
@@ -78,6 +79,12 @@ class ReplicaPool:
         self.chunk_tokens = chunk_tokens
         self.step_token_budget = step_token_budget
         self.decode_burst = decode_burst
+        # speculative decoding: one SpecConfig applies pool-wide; each
+        # spun engine gets a resolved SpecDraft (draft params share the
+        # warm param cache) and decides co-residency itself — a target
+        # the draft can't pair with (vocab mismatch, KV pressure, or the
+        # draft arch IS the target) falls back to plain fused stepwise
+        self.spec = spec
         self._replicas: Dict[_Key, List[InferenceEngine]] = {
             (m, b): [] for m in models for b in registry.backends}
         self._params: Dict[str, object] = {}       # warm weights per model
@@ -214,6 +221,27 @@ class ReplicaPool:
             if m == model:
                 e.warm = 0
 
+    def _spec_draft(self, model: str) -> Optional[SpecDraft]:
+        """Resolve the pool's SpecConfig into a SpecDraft for ``model``
+        (None when spec is off or the draft arch IS the target — a model
+        never drafts for itself). Draft weights ride the same warm param
+        cache as serving models, so scale-to-zero keeps them resident."""
+        if self.spec is None or self.spec.draft_arch == model:
+            return None
+        arch = self.spec.draft_arch
+        dcfg = self.models.get(arch)
+        if dcfg is None:
+            import dataclasses
+
+            from repro.configs.registry import ARCHS
+            if arch not in ARCHS:
+                raise ValueError(f"unknown spec draft arch {arch!r}")
+            dcfg = dataclasses.replace(ARCHS[arch].reduced(),
+                                       dtype=self.models[model].dtype)
+        if arch not in self._params:
+            self._params[arch] = init_model(dcfg, jax.random.PRNGKey(self.seed))
+        return SpecDraft(cfg=dcfg, params=self._params[arch], k=self.spec.k)
+
     # -- internals -------------------------------------------------------
     def _spin_up(self, model: str, backend: str, now: float) -> None:
         key = (model, backend)
@@ -236,6 +264,7 @@ class ReplicaPool:
                   chunk_tokens=self.chunk_tokens,
                   step_token_budget=self.step_token_budget,
                   decode_burst=self.decode_burst,
+                  spec=self._spec_draft(model),
                   obs=(self.obs.engine_obs(model, backend)
                        if self.obs is not None else None))
         if use_paged:

@@ -1,0 +1,28 @@
+"""SL006 seed: per-drafted-position host syncs inside the speculative
+verify path.
+
+The verify step's whole point is ONE multi-token target forward with
+ONE batched id readback; every pattern here re-introduces a blocking
+device->host round-trip PER DRAFTED POSITION — ``.item()`` on each
+candidate, ``np.asarray`` of the id matrix inside the row loop, and
+``int()`` on a device value — turning the K-tokens-per-forward win
+into K syncs.  Servelint (with this file's ``Engine._decode_spec``
+configured as a verify function) must flag all three.
+"""
+import jax
+import numpy as np
+
+
+class Engine:
+    def _decode_spec(self, active):
+        out, reason, self.cache, self._dstate = self._spec_dispatch()
+        for i in active:
+            row = np.asarray(out[i])          # sync: per-row np pull
+            s = self._slots[i]
+            for j in range(self.spec.k + 1):
+                tok = out[i, j].item()        # sync: per-position .item()
+                if tok < 0:
+                    break
+                s.res.new_tokens.append(tok)
+            s.reason = int(reason[i])         # sync: int() on device value
+        return out

@@ -1,0 +1,19 @@
+"""SL006 clean twin: the designed verify readback — ONE batched
+``jax.device_get`` of the int32 id matrix + reason bits per verify
+dispatch, OUTSIDE any loop; the host loop then iterates the pulled
+numpy copy (plain host ints, no device traffic)."""
+import jax
+
+
+class Engine:
+    def _decode_spec(self, active):
+        out, reason, self.cache, self._dstate = self._spec_dispatch()
+        out, reason = jax.device_get((out, reason))   # the one sync point
+        for i in active:
+            s = self._slots[i]
+            for tok in out[i]:
+                if tok < 0:
+                    break
+                s.res.new_tokens.append(int(tok))
+            s.reason = int(reason[i])
+        return out

@@ -22,11 +22,12 @@ FIXTURES = ROOT / "tests" / "fixtures" / "servelint"
 
 
 def fixture_config() -> Config:
-    """Repo config, with the corpus un-excluded and the fixture engine
-    marked hot for SL002."""
+    """Repo config, with the corpus un-excluded, the fixture engine
+    marked hot for SL002, and its spec path configured for SL006."""
     data = copy.deepcopy(load_config(str(ROOT / "servelint.toml")).data)
     data["exclude"] = []
     data["SL002"]["hot_functions"] = ["*::Engine._decode_once"]
+    data["SL006"]["verify_functions"] = ["*::Engine._decode_spec"]
     return Config(data=data, root=str(ROOT))
 
 
@@ -47,6 +48,7 @@ PAIRS = [
     ("SL003", "sl003_retrace_bad.py", "sl003_retrace_ok.py", 2),
     ("SL004", "sl004_donation_bad.py", "sl004_donation_ok.py", 1),
     ("SL005", "sl005_cardinality_bad.py", "sl005_cardinality_ok.py", 2),
+    ("SL006", "sl006_spec_verify_bad.py", "sl006_spec_verify_ok.py", 3),
 ]
 
 

@@ -1,0 +1,409 @@
+"""Speculative decoding on the fused hot path.
+
+The acceptance bar: with ANY draft — identical, adversarial, or absent —
+the served token streams are byte-for-byte what plain fused stepwise
+decode emits (greedy AND seeded stochastic), because each emitted token
+is the target's own seeded sample at its fed position. On top of that
+exactness floor: device-side retirement matches the host-visible
+semantics (EOS / max_new / deadline), the draft's KV pool leases and
+frees with its slots, the transfer guard holds with spec on (only the
+``(max_batch, K+1)`` int32 id matrix + reason bits cross per verify),
+and every viability gate degrades to plain decode instead of failing.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_f32
+from repro.models import init_model
+from repro.obs import Observability
+from repro.serving import (InferenceEngine, PagedInferenceEngine, Request,
+                           SamplingParams, SpecDraft, get_backend)
+
+SMOL = "smollm-360m"
+LENGTHS = [5, 8, 16, 32, 7]
+
+
+@pytest.fixture(scope="module")
+def stack():
+    cfg = reduced_f32(SMOL)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params, get_backend("trt")
+
+
+@pytest.fixture(scope="module")
+def drafts(stack):
+    """identity: the target's own weights (agrees everywhere, ~every
+    draft accepted); adversarial: same arch, different init (agrees
+    ~never — every verify pays K+1 positions for 1 token)."""
+    cfg, params, _ = stack
+    return {"identity": SpecDraft(cfg=cfg, params=params, k=4),
+            "adversarial": SpecDraft(
+                cfg=cfg, params=init_model(cfg, jax.random.PRNGKey(9)), k=4)}
+
+
+def _reqs(cfg, lengths, max_new=6, seed=3, **kw):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i, tokens=list(rng.randint(0, cfg.vocab_size, L)),
+                    sampling=SamplingParams(max_new_tokens=max_new, **kw))
+            for i, L in enumerate(lengths)]
+
+
+def _run(cls, stack, reqs, spec=None, **kw):
+    cfg, params, bk = stack
+    eng = cls(cfg, params, bk, max_seq=96, chunk_tokens=8, spec=spec, **kw)
+    out = []
+    for r in reqs:
+        eng.submit(r)
+    while eng.has_work():
+        out.extend(eng.step())
+    return eng, {r.uid: r for r in out}
+
+
+def _assert_streams_equal(plain, spec):
+    assert set(plain) == set(spec)
+    for uid in plain:
+        assert plain[uid].new_tokens == spec[uid].new_tokens, uid
+        assert plain[uid].completed == spec[uid].completed, uid
+
+
+# ---------------------------------------------------------------------------
+# exactness: spec == plain for any draft, greedy and stochastic
+
+
+@pytest.mark.parametrize("draft", ["identity", "adversarial"])
+@pytest.mark.parametrize("sampling", ["greedy", "stochastic"],
+                         ids=["greedy", "stochastic"])
+def test_paged_spec_matches_plain(stack, drafts, draft, sampling):
+    cfg, _, _ = stack
+    kw = {} if sampling == "greedy" else {"temperature": 1.0, "top_k": 8}
+    _, plain = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS, **kw))
+    eng, spec = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS, **kw),
+                     spec=drafts[draft])
+    assert eng.spec is not None
+    assert eng._spec_drafted > 0
+    _assert_streams_equal(plain, spec)
+
+
+@pytest.mark.parametrize("draft", ["identity", "adversarial"])
+@pytest.mark.parametrize("sampling", ["greedy", "stochastic"],
+                         ids=["greedy", "stochastic"])
+def test_dense_spec_matches_plain(stack, drafts, draft, sampling):
+    cfg, _, _ = stack
+    kw = {} if sampling == "greedy" else {"temperature": 1.0, "top_k": 8}
+    _, plain = _run(InferenceEngine, stack, _reqs(cfg, LENGTHS[:3], **kw))
+    eng, spec = _run(InferenceEngine, stack, _reqs(cfg, LENGTHS[:3], **kw),
+                     spec=drafts[draft])
+    assert eng.spec is not None
+    assert eng._spec_drafted > 0
+    _assert_streams_equal(plain, spec)
+
+
+def test_acceptance_counters_reflect_draft_quality(stack, drafts):
+    # identity draft: near-total acceptance (only the max_new tail of
+    # each request truncates a window); adversarial: near-zero. Both
+    # report per-request drafted/accepted usage on the result.
+    cfg, _, _ = stack
+    eng_id, res_id = _run(PagedInferenceEngine, stack,
+                          _reqs(cfg, LENGTHS, max_new=16),
+                          spec=drafts["identity"])
+    eng_ad, _ = _run(PagedInferenceEngine, stack,
+                     _reqs(cfg, LENGTHS, max_new=16),
+                     spec=drafts["adversarial"])
+    id_rate = eng_id._spec_accepted / eng_id._spec_drafted
+    ad_rate = eng_ad._spec_accepted / eng_ad._spec_drafted
+    assert id_rate > 0.5
+    assert ad_rate < 0.2
+    assert id_rate > ad_rate
+    for r in res_id.values():
+        assert r.drafted_tokens > 0
+        assert 0 <= r.accepted_tokens <= r.drafted_tokens
+    assert sum(r.drafted_tokens for r in res_id.values()) == \
+        eng_id._spec_drafted
+    assert sum(r.accepted_tokens for r in res_id.values()) == \
+        eng_id._spec_accepted
+
+
+def test_spec_composes_with_prefix_cache(stack, drafts):
+    # a repeat prompt admits through the radix cache (target-side skip)
+    # while the draft prefills the whole prompt itself — streams match
+    cfg, _, _ = stack
+    reqs = _reqs(cfg, [40], max_new=6)
+    repeat = [Request(uid=100 + r.uid, tokens=list(r.tokens),
+                      sampling=r.sampling) for r in reqs]
+    _, plain = _run(PagedInferenceEngine, stack,
+                    _reqs(cfg, [40], max_new=6))
+    eng, _ = _run(PagedInferenceEngine, stack, reqs,
+                  spec=drafts["identity"])
+    for r in repeat:
+        eng.submit(r)
+    out = {}
+    while eng.has_work():
+        out.update({r.uid: r for r in eng.step()})
+    assert out[100].cached_tokens > 0
+    assert out[100].new_tokens == plain[0].new_tokens
+
+
+# ---------------------------------------------------------------------------
+# device-side retirement == host-visible semantics
+
+
+def test_spec_eos_truncates_exactly_like_plain(stack, drafts):
+    # the without-eos stream is the ground truth; with eos_id set, both
+    # plain and spec engines must cut at the FIRST occurrence, inclusive,
+    # and report completed (FINISH_EOS) — the device saw it mid-window
+    cfg, _, _ = stack
+    _, free = _run(PagedInferenceEngine, stack,
+                   _reqs(cfg, LENGTHS, max_new=24))
+    # pick an eos id the unconstrained run actually emits mid-stream, so
+    # the truncation branch is guaranteed to exercise
+    eos = next(t for r in free.values() for t in r.new_tokens[1:-1])
+    _, plain = _run(PagedInferenceEngine, stack,
+                    _reqs(cfg, LENGTHS, max_new=24, eos_id=eos))
+    eng, spec = _run(PagedInferenceEngine, stack,
+                     _reqs(cfg, LENGTHS, max_new=24, eos_id=eos),
+                     spec=drafts["identity"])
+    _assert_streams_equal(plain, spec)
+    truncated = 0
+    for uid, r in spec.items():
+        toks = free[uid].new_tokens
+        if eos in toks:
+            cut = toks.index(eos) + 1
+            assert r.new_tokens == toks[:cut]
+            assert r.completed
+            truncated += 1
+        else:
+            assert r.new_tokens == toks
+    assert truncated > 0, "no stream hit eos — test lost its teeth"
+
+
+def test_spec_max_new_retires_at_the_exact_length(stack, drafts):
+    cfg, _, _ = stack
+    for spec in (None, drafts["adversarial"]):
+        _, res = _run(PagedInferenceEngine, stack,
+                      _reqs(cfg, LENGTHS, max_new=11), spec=spec)
+        for r in res.values():
+            assert len(r.new_tokens) == 11
+            assert r.completed and not r.timed_out
+
+
+@pytest.mark.parametrize("draft", [None, "identity"],
+                         ids=["plain", "spec"])
+def test_deadline_expiry_mid_decode_times_out(stack, drafts, draft):
+    # the one retirement the device cannot see: the wall clock. Age the
+    # request's deadline once it is actively decoding — the next
+    # _consume_reason must retire it timed_out, not completed
+    cfg, params, bk = stack
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                               spec=drafts[draft] if draft else None)
+    (req,) = _reqs(cfg, [16], max_new=64)
+    eng.submit(req)
+    while not eng._finished and not any(
+            not s.done and not s.prefilling and s.res.new_tokens
+            for s in eng._slots):
+        eng.step()
+    req.deadline_s = 1e-9                 # already expired, mid-stream
+    out = []
+    while eng.has_work():
+        out.extend(eng.step())
+    (r,) = out
+    assert r.timed_out and not r.completed
+    assert 0 < len(r.new_tokens) < 64
+
+
+# ---------------------------------------------------------------------------
+# KV accounting with two resident caches
+
+
+def test_draft_pool_leases_and_frees_with_slots(stack, drafts):
+    cfg, params, bk = stack
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                               spec=drafts["identity"])
+    for r in _reqs(cfg, LENGTHS, max_new=8):
+        eng.submit(r)
+    leased = 0
+    while eng.has_work():
+        eng.step()
+        leased = max(leased, eng.spec_blocks - eng.spec_pool.num_free)
+    assert leased > 0, "draft pool never leased a block"
+    # reap returns every draft block; the draft pool has no radix cache,
+    # so unlike the target pool nothing stays behind as reusable prefix
+    assert eng.spec_pool.num_free == eng.spec_blocks
+    assert eng.pool.num_free + len(eng.prefix) == eng.num_blocks
+
+
+def test_resident_bytes_counts_the_draft(stack, drafts):
+    from repro.obs.cost import param_bytes
+    cfg, params, bk = stack
+    plain = PagedInferenceEngine(cfg, params, bk, max_seq=96)
+    spec = PagedInferenceEngine(cfg, params, bk, max_seq=96,
+                                spec=drafts["identity"])
+    assert spec._spec_bytes > 0
+    assert spec.resident_bytes() == (plain.resident_bytes()
+                                     + param_bytes(cfg) + spec._spec_bytes)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: every gate falls back to plain decode
+
+
+def test_vocab_mismatch_draft_is_refused(stack, drafts):
+    # acceptance compares token ids — a different vocab can't draft
+    cfg, params, _ = stack
+    dcfg = dataclasses.replace(cfg, vocab_size=cfg.vocab_size // 2)
+    bad = SpecDraft(cfg=dcfg, params=params, k=4)
+    _, plain = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS))
+    eng, res = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS),
+                    spec=bad)
+    assert eng.spec is None
+    _assert_streams_equal(plain, res)
+
+
+def test_draft_pool_too_small_for_one_sequence_is_refused(stack, drafts):
+    cfg, params, _ = stack
+    tiny = dataclasses.replace(drafts["identity"], num_blocks=2)
+    eng, res = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS),
+                    spec=tiny)
+    _, plain = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS))
+    assert eng.spec is None
+    _assert_streams_equal(plain, res)
+
+
+def test_draft_cache_heavier_than_target_is_refused(stack, drafts):
+    # KV-pressure gate: a draft whose cache outweighs the target's own
+    # would starve the model it is meant to help
+    cfg, params, bk = stack
+    heavy = dataclasses.replace(drafts["identity"],
+                                num_blocks=8 * bk.max_batch * (96 // 16))
+    eng, res = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS),
+                    spec=heavy)
+    _, plain = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS))
+    assert eng.spec is None
+    _assert_streams_equal(plain, res)
+
+
+def test_partial_draft_residency_falls_back_per_batch(stack, drafts):
+    # a draft pool with room for ONE sequence: only the first admitted
+    # request gets draft residency, so batches containing the others run
+    # plain stepwise (spec needs EVERY active row leased) — and the
+    # streams still match plain exactly
+    cfg, params, _ = stack
+    scarce = dataclasses.replace(drafts["identity"], num_blocks=96 // 16)
+    eng, res = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS),
+                    spec=scarce)
+    _, plain = _run(PagedInferenceEngine, stack, _reqs(cfg, LENGTHS))
+    assert eng.spec is not None           # viable — just under-provisioned
+    _assert_streams_equal(plain, res)
+
+
+# ---------------------------------------------------------------------------
+# transfer guard with spec enabled: only int32 ids cross per verify
+
+
+def test_spec_verify_moves_only_token_ids(stack, drafts, monkeypatch):
+    cfg, params, bk = stack
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                               spec=drafts["identity"])
+    for r in _reqs(cfg, [16, 8, 5], max_new=48):
+        eng.submit(r)
+    while any(s.prefilling for s in eng._slots) or eng._queue:
+        eng.step()                       # admission + prefill off-guard
+    active = [i for i, s in enumerate(eng._slots) if not s.done]
+    assert active and eng._spec_ready(active)
+
+    pulled = []
+    real_get = jax.device_get
+
+    def spy_get(x):
+        jax.tree_util.tree_map(lambda a: pulled.append(a), x)
+        return real_get(x)
+
+    monkeypatch.setattr(jax, "device_get", spy_get)
+    with jax.transfer_guard_device_to_host("disallow"):
+        with jax.transfer_guard_host_to_device("disallow"):
+            for _ in range(3):
+                eng.step()
+    monkeypatch.undo()
+    assert eng._spec_drafted > 0, "guarded steps never took the spec path"
+    assert pulled, "spec steps pulled nothing?"
+    k = eng.spec.k
+    for arr in pulled:
+        assert np.asarray(arr).dtype == np.int32
+        # the widest designed pull: the (max_batch, K+1) id matrix
+        assert np.asarray(arr).size <= eng.max_batch * (k + 1)
+    eng.run([])
+
+
+def test_spec_metrics_observed(stack, drafts):
+    cfg, params, bk = stack
+    bundle = Observability()
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, chunk_tokens=8,
+                               spec=drafts["identity"],
+                               obs=bundle.engine_obs(SMOL, "trt"))
+    eng.run(_reqs(cfg, LENGTHS, max_new=8))
+    hist = bundle.registry.histogram("spec_accept_len", SMOL,
+                                     bounds=(0.0, 1.0, 2.0, 4.0, 8.0, 16.0))
+    assert hist.count > 0
+    rate = bundle.registry.gauge("spec_accept_rate", SMOL).value
+    assert 0.0 <= rate <= 1.0
+    assert rate == eng._spec_accepted / eng._spec_drafted
+
+
+# ---------------------------------------------------------------------------
+# serve-plane threading: --spec-draft reaches the engines + the response
+
+
+def test_gateway_threads_spec_draft_to_engines():
+    # ONE target model so routing is deterministic; the draft arch is
+    # resolved from the registry by the pool (it need not be served)
+    from repro.core.gateway import Gateway
+    gw = Gateway({"phi3-medium-14b": reduced_f32("phi3-medium-14b")},
+                 max_seq=96, spec_draft="smollm-360m", spec_k=4)
+    r = gw.handle("sum the list", max_new_tokens=8)
+    assert r.completed
+    assert r.usage.drafted_tokens > 0
+    assert 0 <= r.usage.accepted_tokens <= r.usage.drafted_tokens
+    for _, eng in gw.frontend.pool.engines():
+        assert eng.spec is not None and eng.spec.k == 4
+
+
+def test_pool_never_drafts_a_model_with_itself():
+    from repro.core.gateway import Gateway
+    gw = Gateway({"smollm-360m": reduced_f32("smollm-360m")},
+                 max_seq=96, spec_draft="smollm-360m")
+    r = gw.handle("sum the list", max_new_tokens=4)
+    assert r.completed
+    assert r.usage.drafted_tokens == 0
+    for _, eng in gw.frontend.pool.engines():
+        assert eng.spec is None
+
+
+# ---------------------------------------------------------------------------
+# mid-prefill prefix re-match (the chunk-boundary extension)
+
+
+def test_staggered_twin_adopts_blocks_mid_prefill(stack):
+    # the head start means the twin's ADMISSION lookup sees only the
+    # blocks the first prompt had registered by then; everything beyond
+    # must be adopted by the chunk-boundary re-lookup while the twin is
+    # itself mid-prefill — without it, cached_tokens stays at the
+    # admission-time match
+    cfg, params, bk = stack
+    eng = PagedInferenceEngine(cfg, params, bk, max_seq=96, block_size=8,
+                               chunk_tokens=8)
+    rng = np.random.RandomState(29)
+    prompt = list(rng.randint(0, cfg.vocab_size, 64))
+    sp = SamplingParams(max_new_tokens=4)
+    first = Request(uid=1, tokens=list(prompt), sampling=sp)
+    eng.submit(first)
+    for _ in range(2):                    # head start: ~2 chunks land
+        eng.step()
+    twin = Request(uid=2, tokens=list(prompt), sampling=sp)
+    admission_match = eng.prefix_peek(twin)
+    assert admission_match < len(prompt) - 1   # the twin starts behind
+    eng.submit(twin)
+    res = {r.uid: r for r in eng.run([])}
+    assert res[2].cached_tokens > admission_match
+    assert res[1].new_tokens == res[2].new_tokens
