@@ -1,0 +1,209 @@
+"""Chaos benchmark: goodput and tail latency of the fault-tolerant serve
+plane under a seeded replica-crash schedule.
+
+Three runs over the SAME open-loop Poisson arrival trace:
+
+  * ``baseline``  — fault-free ServeFrontend (the goodput yardstick);
+  * ``chaos``     — a seeded ``FaultPlan`` kills replica steps at the
+    configured crash rate (plus one deterministic mid-decode kill so the
+    smoke run always exercises the path); quarantine + deterministic
+    retry + warm replacement contain every failure;
+  * ``nocontain`` — the same fault schedule with containment OFF
+    (``SchedulerConfig.contain_failures=False``): the first injected
+    fault propagates and every unresolved request is lost.
+
+Acceptance (printed, and asserted by the CI chaos smoke):
+  * chaos loses ZERO non-shed requests (every handle resolves with a
+    structured finish reason);
+  * chaos goodput >= 0.9x baseline at a 10% per-step crash rate;
+  * the chip-second ledger stays conserved (<1% error) across
+    quarantine/replace churn.
+
+Run: PYTHONPATH=src python benchmarks/chaos_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+from common import save_bench, save_result
+from repro.api import CompletionRequest
+from repro.configs.registry import ARCHS
+from repro.core.gateway import ServeFrontend
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+from repro.data.benchmarks import generate_corpus
+from repro.obs import write_metrics_dump
+from repro.serving import FaultPlan, FaultSpec, InjectedFault, SchedulerConfig
+
+MODEL = "smollm-360m"
+
+
+def _models():
+    return {MODEL: dataclasses.replace(ARCHS[MODEL].reduced(),
+                                       dtype="float32")}
+
+
+def _frontend(faults=None, contain=True, flight_record=None):
+    spin = SpinConfig(window_s=30.0, cooldown_s=0.3, idle_tau_s=2.0,
+                      tick_s=0.25, max_replicas=4,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    return ServeFrontend(
+        _models(), profile=PROFILES["balanced"], max_seq=96, spin=spin,
+        faults=faults, quarantine_after=1, flight_record=flight_record,
+        sched=SchedulerConfig(contain_failures=contain, max_retries=4))
+
+
+def _drive(gw, reqs, arrivals, max_new: int, settle_s: float = 30.0):
+    """Open-loop driver that survives a propagating crash: submit
+    ``reqs[i]`` at ``arrivals[i]``, step until every handle resolves (or
+    the plane crashes / the settle budget expires). Returns
+    (handles, wall_s, crashed)."""
+    t0 = time.perf_counter()
+    handles, crashed = [], False
+    i, n = 0, len(reqs)
+    deadline = None
+    while True:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            r = reqs[i]
+            handles.append(gw.submit(r.prompt, max_new_tokens=max_new,
+                                     deadline_s=r.deadline_s))
+            i += 1
+        try:
+            gw.step()
+        except InjectedFault:
+            crashed = True
+            break
+        if i >= n and all(h.done() for h in handles):
+            break
+        if i >= n:
+            if deadline is None:
+                deadline = time.perf_counter() + settle_s
+            elif time.perf_counter() > deadline:
+                break  # leaked requests — reported as lost below
+    return handles, time.perf_counter() - t0, crashed
+
+
+def _summarize(handles, wall, crashed, submitted):
+    done = [h.response for h in handles if h.done()]
+    ok = [r for r in done if r.completed]
+    shed = [r for r in done if r.shed]
+    failed = [r for r in done if r.finish_reason == "failed"]
+    other = len(done) - len(ok) - len(shed) - len(failed)
+    lost = submitted - len(handles) + sum(not h.done() for h in handles)
+    lats = [r.latency_s for r in ok] or [0.0]
+    return {
+        "submitted": submitted, "resolved": len(done), "completed": len(ok),
+        "shed": len(shed), "failed": len(failed), "other_resolved": other,
+        "lost": lost, "crashed": crashed, "wall_s": wall,
+        "goodput_rps": len(ok) / wall if wall > 0 else 0.0,
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p95_latency_s": float(np.percentile(lats, 95)),
+        "recovered": sum(r.usage.retries > 0 for r in ok),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="open-loop arrival rate (rps)")
+    ap.add_argument("--crash-rate", type=float, default=0.10,
+                    help="per-step replica crash probability")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast run for CI (12 requests)")
+    ap.add_argument("--metrics-dump", default="BENCH_chaos_metrics.prom",
+                    help="Prometheus exposition path for the CHAOS run's "
+                         "registry ('' disables)")
+    ap.add_argument("--flight-record", default="",
+                    help="flight-recorder JSONL sink for the chaos run "
+                         "(each injected crash dumps the steps leading "
+                         "into it; '' disables)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 12)
+
+    prompts = generate_corpus(max(args.requests, 64),
+                              seed=args.seed)[: args.requests]
+    reqs = [CompletionRequest(prompt=p.text,
+                              max_new_tokens=args.max_new_tokens,
+                              deadline_s=120.0) for p in prompts]
+    rng = np.random.RandomState(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate,
+                                         size=len(reqs)))
+    # the fault schedule: Bernoulli(crash_rate) step kills on every
+    # replica, PLUS one deterministic mid-decode kill of the first
+    # incarnation so even the tiny smoke run quarantines and retries
+    plan = FaultPlan([FaultSpec("step_error", at_step=6, replica=0),
+                      FaultSpec("step_error", rate=args.crash_rate)],
+                     seed=args.seed)
+
+    print(f"== chaos_bench: {len(reqs)} requests @ {args.rate:.1f} rps, "
+          f"crash rate {args.crash_rate:.0%}, seed {args.seed} ==")
+
+    runs = {}
+    for name, faults, contain in (("baseline", None, True),
+                                  ("chaos", plan, True),
+                                  ("nocontain", dataclasses.replace(
+                                      plan, fired=[]), False)):
+        gw = _frontend(faults=faults, contain=contain,
+                       flight_record=(args.flight_record or None)
+                       if name == "chaos" else None)
+        gw.pool.scale(MODEL, "trt", 2)      # pre-warm: 2 serving replicas
+        handles, wall, crashed = _drive(gw, reqs, arrivals,
+                                        args.max_new_tokens)
+        runs[name] = _summarize(handles, wall, crashed, len(reqs))
+        runs[name]["quarantines"] = gw.pool.quarantines
+        runs[name]["faults_fired"] = len(faults.fired) if faults else 0
+        if gw.obs is not None:
+            runs[name]["ledger_conservation_err"] = (
+                gw.obs.ledger.conservation_error())
+        s = runs[name]
+        print(f"\n-- {name} --")
+        print(f"wall={s['wall_s']:.1f}s  goodput={s['goodput_rps']:.2f} rps"
+              f"  completed={s['completed']}/{s['submitted']}"
+              f"  shed={s['shed']}  failed={s['failed']}  lost={s['lost']}"
+              f"  p95_lat={s['p95_latency_s']:.3f}s")
+        print(f"faults_fired={s['faults_fired']}"
+              f"  quarantines={s['quarantines']}"
+              f"  recovered={s['recovered']}"
+              f"  crashed={s['crashed']}")
+        if name == "chaos" and args.metrics_dump and gw.obs is not None:
+            dumped = write_metrics_dump(args.metrics_dump, gw.obs.registry,
+                                        events=gw.obs.events,
+                                        tracer=gw.obs.tracer)
+            print(f"metrics dump: {', '.join(dumped)}")
+
+    base, chaos, noc = runs["baseline"], runs["chaos"], runs["nocontain"]
+    ratio = chaos["goodput_rps"] / max(base["goodput_rps"], 1e-9)
+    zero_lost = chaos["lost"] == 0
+    ledger_ok = chaos.get("ledger_conservation_err", 0.0) < 0.01
+    print(f"\ngoodput under chaos: {ratio:.2f}x baseline "
+          f"({'PASS' if ratio >= 0.9 else 'BELOW 0.9x'})")
+    print(f"lost requests under chaos: {chaos['lost']} "
+          f"({'PASS' if zero_lost else 'FAIL'})")
+    print(f"ledger conservation err: "
+          f"{chaos.get('ledger_conservation_err', 0.0):.2%} "
+          f"({'PASS' if ledger_ok else 'FAIL'})")
+    print(f"no-containment baseline: crashed={noc['crashed']}  "
+          f"lost={noc['lost']} "
+          f"(containment saved {noc['lost'] - chaos['lost']} requests)")
+
+    payload = {"runs": runs, "goodput_ratio": ratio,
+               "zero_lost": zero_lost, "ledger_ok": ledger_ok,
+               "requests": len(reqs), "rate_rps": args.rate,
+               "crash_rate": args.crash_rate, "seed": args.seed}
+    save_result("chaos_bench", payload)
+    path = save_bench("chaos", payload)
+    print(f"bench artifact: {path}")
+    return 0 if (zero_lost and ratio >= 0.9 and ledger_ok) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,9 +12,15 @@ Asserts the observability plane actually observed a serve run:
   * optionally, a flight-record JSONL (second argument) parses and
     follows the recorder schema: every line is a ``dump`` / ``step`` /
     ``event`` record with a timestamp, and at least one dump header
-    exists.
+    exists;
+  * with ``--chaos``, the fault-tolerance plane actually fired: at
+    least one fault injected (``fault_injected_total``), at least one
+    replica quarantined (``replicas_quarantined_total``), and at least
+    one retried request that went on to FINISH
+    (``retries_recovered_total``) — a chaos run where nothing was
+    killed, or nothing recovered, proves nothing.
 
-Usage: python scripts/check_metrics_dump.py PATH [FLIGHT_JSONL]
+Usage: python scripts/check_metrics_dump.py [--chaos] PATH [FLIGHT_JSONL]
        (expects PATH and PATH.events.jsonl as written by
         ``write_metrics_dump`` / ``--metrics-dump``; FLIGHT_JSONL as
         written by ``--flight-record``)
@@ -72,11 +78,26 @@ def check_flight(path: str, failures: list) -> None:
         failures.append("flight record has no dump header")
 
 
+def check_chaos(text: str, failures: list) -> None:
+    for metric, what in (
+            ("fault_injected_total", "no fault was ever injected"),
+            ("replicas_quarantined_total", "no replica was quarantined"),
+            ("retries_recovered_total",
+             "no retried request ever finished")):
+        total = sum(gauge_values(text, metric))
+        status = "ok" if total > 0 else "MISSING"
+        print(f"{metric[:12]:12s} total:        {total:6.0f}  [{status}]")
+        if total <= 0:
+            failures.append(f"{what} ({metric} is zero)")
+
+
 def main() -> int:
-    if len(sys.argv) not in (2, 3):
+    args = [a for a in sys.argv[1:] if a != "--chaos"]
+    chaos = len(args) < len(sys.argv) - 1
+    if len(args) not in (1, 2):
         print(__doc__)
         return 2
-    path = sys.argv[1]
+    path = args[0]
     text = open(path).read()
     failures = []
     for metric in ("ttft_s", "itl_s"):
@@ -103,8 +124,10 @@ def main() -> int:
           f"[{'ok' if scale else 'MISSING'}]")
     if not scale:
         failures.append("no scale/orch capacity decision in the event log")
-    if len(sys.argv) == 3:
-        check_flight(sys.argv[2], failures)
+    if chaos:
+        check_chaos(text, failures)
+    if len(args) == 2:
+        check_flight(args[1], failures)
     if failures:
         print("FAIL: " + "; ".join(failures))
         return 1

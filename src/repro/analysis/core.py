@@ -212,6 +212,11 @@ def _defaults() -> dict:
                            "_fused_step", "_fused_burst", "_first_fn",
                            "sample_rows", "spec_step", "_spec_dispatch"],
         },
+        "SL007": {
+            "modules": [],
+            "containment_calls": ["report_step_failure", "quarantine",
+                                  "note_exception"],
+        },
     }
 
 

@@ -722,5 +722,77 @@ class SpecVerifyHygiene:
         return out
 
 
+# ---------------------------------------------------------------------------
+# SL007 fault-path hygiene
+
+
+class FaultPathHygiene:
+    """SL007: a broad exception handler (bare ``except:``, ``except
+    Exception:``, ``except BaseException:``) in a configured serving
+    module that neither re-raises nor invokes a containment routine
+    (``report_step_failure``, ``quarantine``, ...).  The fault-tolerant
+    serve plane's whole contract is that every replica failure ends up
+    quarantined, retried, or propagated — a handler that swallows one
+    silently turns a crash into state corruption the chaos harness can
+    never see.  A designed suppression point needs a reviewed
+    ``servelint: disable=SL007 -- reason`` directive."""
+
+    id = "SL007"
+
+    _BROAD = {"Exception", "BaseException"}
+
+    def check_file(self, ctx: FileCtx, project: Project) -> List[Finding]:
+        cfg = ctx.config.rule(self.id)
+        modules = cfg.get("modules", [])
+        if not modules or not _match_any(ctx.relpath, modules):
+            return []
+        containment = set(cfg.get("containment_calls", []))
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            for h in node.handlers:
+                caught = self._broad_name(ctx, h.type)
+                if caught is None:
+                    continue
+                if self._contains_or_reraises(h, containment):
+                    continue
+                out.append(Finding(
+                    self.id, "", h.lineno,
+                    f"{caught} swallows the failure — no re-raise and no "
+                    "containment call on the fault path",
+                    "re-raise, route through "
+                    f"{'/'.join(sorted(containment)) or 'a containment'} "
+                    "routine, or suppress with a reason"))
+        return out
+
+    def _broad_name(self, ctx: FileCtx, typ) -> Optional[str]:
+        """Human-readable name when the handler catches broadly, else
+        None.  Typed handlers (``except PoolExhausted:``) are the
+        DESIGNED narrow form and never flagged."""
+        if typ is None:
+            return "bare `except:`"
+        types = typ.elts if isinstance(typ, ast.Tuple) else [typ]
+        for t in types:
+            name = ctx.resolve(t) or ""
+            if name.split(".")[-1] in self._BROAD:
+                return f"`except {name.split('.')[-1]}`"
+        return None
+
+    def _contains_or_reraises(self, handler: ast.AST, containment) -> bool:
+        for node in _walk_own(handler):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call):
+                term = (node.func.attr
+                        if isinstance(node.func, ast.Attribute)
+                        else node.func.id
+                        if isinstance(node.func, ast.Name) else None)
+                if term in containment:
+                    return True
+        return False
+
+
 ALL_RULES = [ClockDiscipline(), HostSyncHygiene(), RetraceHazard(),
-             DonationHazard(), MetricCardinality(), SpecVerifyHygiene()]
+             DonationHazard(), MetricCardinality(), SpecVerifyHygiene(),
+             FaultPathHygiene()]

@@ -38,6 +38,7 @@ class FinishReason:
     TIMEOUT = "timeout"        # deadline expired (queued or mid-decode)
     CANCELLED = "cancelled"    # caller cancelled via CompletionHandle.cancel()
     SHED = "shed"              # rejected/evicted at admission (backpressure)
+    FAILED = "failed"          # replica failures exhausted the retry budget
 
 
 @dataclass(frozen=True)
@@ -86,6 +87,10 @@ class Usage:
     # when the engine served it without a draft model
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # fault containment: times this request was resubmitted onto a
+    # healthy replica after its replica failed (deterministic retry —
+    # the completion is unaffected; >0 just means it survived a failure)
+    retries: int = 0
 
 
 @dataclass(frozen=True)

@@ -102,6 +102,13 @@ class GatewayConfig:
     flight_record: Optional[str] = None
     result_retention: int = 256                # bounded finished-result buffer
     session_retention: int = 1024              # LRU bound on live sessions
+    # fault tolerance: a seeded ``FaultPlan`` (serving.faults) injected
+    # into every spun replica; the circuit-breaker threshold before a
+    # failing replica is quarantined; and how long a draining replica
+    # may run out its in-flight work before forced evacuation
+    faults: Optional[object] = None            # serving.faults.FaultPlan
+    quarantine_after: int = 2
+    drain_deadline_s: float = 30.0
 
     def resolved_cost_configs(self) -> Dict[str, ModelConfig]:
         from repro.configs.registry import ARCHS as _FULL
@@ -192,12 +199,16 @@ class ServeFrontend:
                                 step_token_budget=cfg.step_token_budget,
                                 decode_burst=cfg.decode_burst, obs=self.obs,
                                 spec=(SpecConfig(cfg.spec_draft, cfg.spec_k)
-                                      if cfg.spec_draft else None))
+                                      if cfg.spec_draft else None),
+                                faults=cfg.faults,
+                                quarantine_after=cfg.quarantine_after,
+                                drain_deadline_s=cfg.drain_deadline_s)
         self.scheduler = RequestScheduler(self.pool, self.registry,
                                           self.telemetry, cfg.sched,
                                           obs=self.obs)
         self.orch = Orchestrator(self.registry, self.telemetry, self.spin,
-                                 scale_cb=self.pool.scale)
+                                 scale_cb=self.pool.scale,
+                                 repair_cb=self.pool.replace_quarantined)
         self.orch_events: List[OrchEvent] = []
         self._next_tick = 0.0
         self._uid = 0
@@ -281,6 +292,11 @@ class ServeFrontend:
         scheduling + decode pass over the pool, streaming deltas pushed
         to their handles. Returns newly finished responses."""
         now = time.perf_counter()
+        # replace quarantined replicas at STEP cadence, not tick cadence:
+        # a substitute owed between widely spaced Algorithm-1 ticks (or
+        # with autoscale off) must not wait for one. Idempotent with the
+        # tick's own repair path.
+        self.pool.replace_quarantined(now)
         if self.config.autoscale and now >= self._next_tick:
             before = {m: self.registry.model_replicas(m)
                       for m in self.registry.models}
@@ -407,6 +423,8 @@ class ServeFrontend:
             reason = FinishReason.SHED
         elif res.cancelled:
             reason = FinishReason.CANCELLED
+        elif res.failed:
+            reason = FinishReason.FAILED
         elif res.timed_out:
             reason = FinishReason.TIMEOUT
         else:
@@ -446,7 +464,8 @@ class ServeFrontend:
                       chip_seconds=chip_s, cost_usd=cost_usd,
                       kv_peak_bytes=res.kv_bytes,
                       drafted_tokens=res.drafted_tokens,
-                      accepted_tokens=res.accepted_tokens)
+                      accepted_tokens=res.accepted_tokens,
+                      retries=res.retries)
         return CompletionResponse(
             uid=res.uid, prompt=info.request.prompt, model=info.model,
             backend=info.backend, tier=info.tier,

@@ -49,18 +49,25 @@ class SpinConfig:
 class Orchestrator:
     def __init__(self, registry: ServiceRegistry, telemetry: Telemetry,
                  cfg: Optional[SpinConfig] = None,
-                 scale_cb: Optional[Callable] = None):
+                 scale_cb: Optional[Callable] = None,
+                 repair_cb: Optional[Callable] = None):
         self.reg = registry
         self.tel = telemetry
         # cfg=None -> a fresh SpinConfig per orchestrator: a shared default
         # instance would alias its mutable warm_pool dict across instances
         self.cfg = cfg if cfg is not None else SpinConfig()
         self.scale_cb = scale_cb          # (model, backend, new_replicas, now)
+        self.repair_cb = repair_cb        # (now) -> spin quarantine substitutes
         self._last_scale_t: Dict[str, float] = {}
 
     # -- Algorithm 1 ---------------------------------------------------------
     def tick(self, now: float) -> Dict[str, int]:
         """One control-loop pass. Returns {model: new replica target}."""
+        # repair FIRST: a quarantined replica's substitute is owed
+        # capacity regardless of what Little's law says this tick (the
+        # pool's warm cache makes it cheap when the service ran warm)
+        if self.repair_cb is not None:
+            self.repair_cb(now)
         decisions: Dict[str, int] = {}
         for model in self.reg.models:
             r_m = self.tel.request_rate(model, now)               # line 2

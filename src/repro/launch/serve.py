@@ -126,6 +126,16 @@ def run_serial(pool, args) -> None:
 def run_concurrent(pool, args) -> None:
     spin = SpinConfig(window_s=60.0, cooldown_s=0.5, idle_tau_s=2.0,
                       tick_s=0.2, max_replicas=4)
+    faults = None
+    if args.chaos_rate > 0 or args.chaos_kill_step > 0:
+        from repro.serving import FaultPlan, FaultSpec
+        specs = []
+        if args.chaos_kill_step > 0:
+            specs.append(FaultSpec("step_error",
+                                   at_step=args.chaos_kill_step, replica=0))
+        if args.chaos_rate > 0:
+            specs.append(FaultSpec("step_error", rate=args.chaos_rate))
+        faults = FaultPlan(specs, seed=args.chaos_seed)
     gw = ServeFrontend(pool, router=build_router(args.router),
                        profile=PROFILES[args.profile], max_seq=96, spin=spin,
                        chunk_tokens=args.chunk_tokens or None,
@@ -134,6 +144,7 @@ def run_concurrent(pool, args) -> None:
                        spec_draft=args.spec_draft or None,
                        spec_k=args.spec_k,
                        flight_record=args.flight_record or None,
+                       faults=faults,
                        sched=SchedulerConfig(
                            max_queue_depth=args.max_queue_depth))
     prompts = generate_corpus(max(args.requests, 64), seed=17)[: args.requests]
@@ -152,6 +163,11 @@ def run_concurrent(pool, args) -> None:
     if shed:
         print(f"shed at admission (queue depth {args.max_queue_depth}): "
               f"{shed}")
+    if faults is not None:
+        retried = sum(r.usage.retries > 0 for r in results if r is not None)
+        print(f"chaos: {len(faults.fired)} fault(s) fired, "
+              f"{gw.pool.quarantines} quarantine(s), "
+              f"{retried} request(s) recovered via retry")
     print("\nlifecycle events (pool, measured on live engines):")
     for e in gw.pool.events:
         print(f"  {e}")
@@ -206,6 +222,17 @@ def main() -> None:
                     help="write Prometheus exposition to PATH plus "
                          "PATH.events.jsonl (scale/shed/orch decisions) "
                          "and PATH.spans.jsonl (request lifecycles)")
+    ap.add_argument("--chaos-rate", type=float, default=0.0,
+                    help="per-step replica crash probability from a "
+                         "seeded fault plan; failures are contained "
+                         "(quarantine + deterministic retry) "
+                         "(--concurrent)")
+    ap.add_argument("--chaos-kill-step", type=int, default=0,
+                    help="deterministically kill the first replica "
+                         "incarnation at this engine step (0 = off) "
+                         "(--concurrent)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the fault plan's Bernoulli streams")
     ap.add_argument("--flight-record", default="",
                     help="flight-recorder JSONL sink: automatic anomaly "
                          "dumps (shed storm, expiry burst, engine "

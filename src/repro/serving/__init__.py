@@ -5,8 +5,11 @@ from repro.serving.engine import (CompiledFns, GenResult, InferenceEngine,  # no
                                   Request, SpecConfig, SpecDraft, SpecFns,
                                   compile_fns, compile_paged_fns,
                                   compile_spec_fns)
+from repro.serving.faults import (FaultInjector, FaultPlan,  # noqa: F401
+                                  FaultSpec, InjectedFault)
 from repro.serving.kvpool import (BlockPool, PoolExhausted,  # noqa: F401
                                   PrefixStats, RadixPrefixCache)
-from repro.serving.replica_pool import ReplicaPool, ScaleEvent  # noqa: F401
+from repro.serving.replica_pool import (ReplicaHealth, ReplicaPool,  # noqa: F401
+                                        ScaleEvent)
 from repro.serving.scheduler import (RequestScheduler, SchedStats,  # noqa: F401
                                      SchedulerConfig)

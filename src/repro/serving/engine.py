@@ -114,6 +114,15 @@ class Request:
     priority: int = 1                             # api.Priority class (int)
     src_embeds: Optional[np.ndarray] = None       # encdec stub input
     cancelled: bool = False                       # queue tombstone (cancel())
+    # deterministic retry-from-prefix: a resubmitted request carries its
+    # already-emitted tokens at the END of ``tokens`` and starts its
+    # per-request PRNG stream at draw index ``prefix_draws`` — so token
+    # N of the recovered run samples with the SAME folded key as token N
+    # of the unfailed one. ``max_new_tokens`` stays the ORIGINAL total
+    # (the device's draws>=max_new check is absolute).
+    prefix_draws: int = 0
+    retries: int = 0                              # containment resubmissions
+    not_before: float = 0.0                       # retry backoff gate
 
 
 @dataclass
@@ -132,6 +141,8 @@ class GenResult:
     kv_bytes: int = 0                             # peak KV bytes held (at release)
     drafted_tokens: int = 0                       # spec: draft proposals verified
     accepted_tokens: int = 0                      # spec: drafted tokens committed
+    failed: bool = False                          # retry budget exhausted
+    retries: int = 0                              # containment resubmissions
 
 
 @dataclass
@@ -195,8 +206,11 @@ def init_device_state(max_batch: int, blocks_per_seq: Optional[int] = None):
 
 
 def _occupy_impl(state, slot, base_key, uid, temp, top_k, top_p, eos,
-                 max_new, pos0):
-    """Admission index-op: load one row's sampling fields + uid key."""
+                 max_new, pos0, draws0):
+    """Admission index-op: load one row's sampling fields + uid key.
+    ``draws0`` resumes a retried request's PRNG stream mid-way: its
+    next token samples at draw index ``draws0`` — the index the token
+    would have had on the unfailed replica."""
     return dict(
         state,
         tokens=state["tokens"].at[slot].set(0),
@@ -206,7 +220,7 @@ def _occupy_impl(state, slot, base_key, uid, temp, top_k, top_p, eos,
         top_k=state["top_k"].at[slot].set(top_k),
         top_p=state["top_p"].at[slot].set(top_p),
         key=state["key"].at[slot].set(jax.random.fold_in(base_key, uid)),
-        draws=state["draws"].at[slot].set(0),
+        draws=state["draws"].at[slot].set(draws0),
         eos=state["eos"].at[slot].set(eos),
         max_new=state["max_new"].at[slot].set(max_new))
 
@@ -702,12 +716,19 @@ class InferenceEngine:
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
                  decode_burst: int = 1, obs=None,
-                 spec: Optional[SpecDraft] = None):
+                 spec: Optional[SpecDraft] = None, fault=None):
         self.cfg = cfg
         self.params = params
         self.backend = backend
         self.max_seq = max_seq
         self.max_batch = backend.max_batch
+        # fault injection (repro.serving.faults.FaultInjector): the
+        # seeded chaos hook at the top of step(). None (the default) is
+        # one attribute test per step. ``poisoned`` flips when a step
+        # dies MID-flight — host/device bookkeeping may have diverged,
+        # so containment must quarantine rather than re-place on it.
+        self._fault = fault
+        self.poisoned = False
         # observability (repro.obs.EngineObs): shared metrics registry +
         # request tracer + this engine's service labels. None (the
         # default for standalone engines) keeps every hook a single
@@ -939,6 +960,34 @@ class InferenceEngine:
         slot.res = None
         return res
 
+    def evacuate(self) -> List[Tuple[Request, Optional[List[int]],
+                                     List[int]]]:
+        """Containment dump: hand back every live request this engine
+        holds so a healthy replica can take them over. Queued requests
+        come back untouched ``(request, None, [])``; in-slot ones as
+        ``(request, served prompt, emitted tokens)`` — the served prompt
+        is the post-cap/post-bucket token list actually prefilled, which
+        is what a deterministic retry must chain onto. All slot
+        resources are released WITHOUT registering prefixes (this
+        replica's cache dies with it); the engine is empty afterwards."""
+        out: List[Tuple[Request, Optional[List[int]], List[int]]] = []
+        for r in self._queue:
+            self._by_uid.pop(r.uid, None)
+            if not r.cancelled:
+                out.append((r, None, []))
+        self._queue.clear()
+        self._queue_tomb = 0
+        for s in self._slots:
+            if s.done or s.req is None:
+                continue
+            emitted = list(s.res.new_tokens) if s.res is not None else []
+            out.append((s.req, list(s.prompt), emitted))
+            self._release(s, register_prefix=False)
+            self._clear_slot(s)
+            s.res = None
+        self._pending_first = []
+        return out
+
     def drain_deltas(self) -> List[Tuple[int, int]]:
         """Fetch-and-clear the current step's (uid, token) stream deltas."""
         out, self._deltas = self._deltas, []
@@ -971,25 +1020,52 @@ class InferenceEngine:
         # would report phantom load)
         queued = sum(
             min(len(r.tokens),
-                max(self.max_seq - r.sampling.max_new_tokens - 1, 1))
+                max(self.max_seq - self._decode_budget(r) - 1, 1))
             for r in self._queue if not r.cancelled)
         inflight = sum(len(s.prompt) - s.filled for s in self._slots
                        if not s.done and s.prefilling)
         return queued + inflight
 
     def step(self) -> List[GenResult]:
-        """One token-budget iteration: admit, prefill chunks, decode."""
+        """One token-budget iteration: admit, prefill chunks, decode.
+
+        Fault-injection hook first (BEFORE any device work, so an
+        injected crash is clean: state is exactly as the previous step
+        left it), then the real step with a poison latch — any
+        mid-flight exception marks the engine unrecoverable for the
+        containment layer."""
+        if self._fault is not None:
+            fired = self._fault.begin_step()
+            if fired and self._obs is not None:
+                for kind in fired:
+                    self._obs.registry.counter(
+                        "fault_injected_total",
+                        f"{self._obs.model}|kind={kind}").inc()
+            if "step_error" in fired:
+                from repro.serving.faults import InjectedFault
+                raise InjectedFault(
+                    f"injected step_error at step {self._fault.step_no}")
+        try:
+            return self._step_inner()
+        except BaseException:
+            self.poisoned = True
+            raise
+
+    def _step_inner(self) -> List[GenResult]:
         t0 = time.perf_counter() if self._obs is not None else 0.0
         self._deltas = []                 # this step's streaming increments
         self._pending_first = []
         # 1) admission (a paged engine may refuse — out of KV blocks — in
         #    which case the request stays queued for a later step).
         #    Tombstoned (cancelled-in-queue) entries drain here for free.
+        deny_kv = self._fault is not None and self._fault.deny_kv
         for slot in self._slots:
             while self._queue and self._queue[0].cancelled:
                 self._queue.popleft()
                 self._queue_tomb -= 1
             if not self._queue:
+                break
+            if deny_kv:        # injected allocation failure: stay queued
                 break
             if slot.done:
                 if not self._begin(slot.idx, self._queue[0]):
@@ -1345,7 +1421,8 @@ class InferenceEngine:
             np.float32(sp.temperature), np.int32(sp.top_k),
             np.float32(sp.top_p),
             np.int32(-1 if sp.eos_id is None else sp.eos_id),
-            np.int32(sp.max_new_tokens), np.int32(filled))
+            np.int32(sp.max_new_tokens), np.int32(filled),
+            np.int32(req.prefix_draws))
         self._by_uid[req.uid] = slot
         if self._obs is not None:
             # admit event: queue wait ends here (a span opens lazily for
@@ -1355,9 +1432,20 @@ class InferenceEngine:
                                       model=self._obs.model,
                                       backend=self._obs.backend)
 
+    @staticmethod
+    def _decode_budget(req: Request) -> int:
+        """Tokens the request may still draw: a retried request already
+        emitted ``prefix_draws`` of its ``max_new_tokens`` (they ride in
+        its prompt now), so only the remainder needs cache room."""
+        return max(req.sampling.max_new_tokens - req.prefix_draws, 1)
+
     def _begin(self, slot_id: int, req: Request) -> bool:
-        prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
-        prompt = prompt[-self._bucket(len(prompt)):]
+        prompt = req.tokens[-(self.max_seq - self._decode_budget(req) - 1):]
+        if req.prefix_draws == 0:
+            prompt = prompt[-self._bucket(len(prompt)):]
+        # a RETRY skips the pow2 truncation: its prompt is the original
+        # (already bucketed) prompt plus the emitted chain — truncating
+        # again would shift token positions off the unfailed run's
         self._occupy(self._slots[slot_id], req, prompt, filled=0)
         return True
 
@@ -1508,7 +1596,7 @@ class PagedInferenceEngine(InferenceEngine):
                  chunk_tokens: Optional[int] = None,
                  step_token_budget: Optional[int] = None,
                  decode_burst: int = 1, obs=None,
-                 spec: Optional[SpecDraft] = None):
+                 spec: Optional[SpecDraft] = None, fault=None):
         if not supports_paged(cfg):
             raise ValueError(f"{cfg.name}: family/attention has no paged path")
         if max_seq % block_size:
@@ -1526,7 +1614,8 @@ class PagedInferenceEngine(InferenceEngine):
         super().__init__(cfg, params, backend, max_seq, seed, fns,
                          chunk_tokens=chunk_tokens,
                          step_token_budget=step_token_budget,
-                         decode_burst=decode_burst, obs=obs, spec=spec)
+                         decode_burst=decode_burst, obs=obs, spec=spec,
+                         fault=fault)
 
     # -- hooks ----------------------------------------------------------
     def _make_slot(self) -> _PagedSlot:
@@ -1648,7 +1737,7 @@ class PagedInferenceEngine(InferenceEngine):
         (same prompt capping as admission). 0 without a prefix cache."""
         if not self.prefix:
             return 0
-        prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
+        prompt = req.tokens[-(self.max_seq - self._decode_budget(req) - 1):]
         return min(self.prefix.peek(prompt), max(len(prompt) - 1, 0))
 
     def block_capacity(self) -> int:
@@ -1667,9 +1756,10 @@ class PagedInferenceEngine(InferenceEngine):
     # -- admission ------------------------------------------------------
     def _begin(self, slot_id: int, req: Request) -> bool:
         bs = self.block_size
-        prompt = req.tokens[-(self.max_seq - req.sampling.max_new_tokens - 1):]
+        budget = self._decode_budget(req)
+        prompt = req.tokens[-(self.max_seq - budget - 1):]
         plen = len(prompt)
-        total = min(plen + req.sampling.max_new_tokens, self.max_seq)
+        total = min(plen + budget, self.max_seq)
         # prefix lookup AT ADMISSION: the leases protect the matched
         # blocks from the eviction below (a repeat prompt must never
         # evict its own cached prefix to make room for itself), and the
@@ -1687,34 +1777,56 @@ class PagedInferenceEngine(InferenceEngine):
                 self.pool.decref(cow_src)
             return False
         fresh = self.pool.alloc_many(n_need)
-        if cow_src is not None:           # copy-on-write the shared tail
-            self.cache = self._copy(self.cache, jnp.int32(cow_src),
-                                    jnp.int32(fresh[0]))
-            self.pool.decref(cow_src)
         owned = matched + fresh
-        table = np.zeros((self.blocks_per_seq,), np.int32)
-        table[:len(owned)] = owned
         slot = self._slots[slot_id]
-        self._occupy(slot, req, prompt, filled=keep, cached=keep)
-        slot.table = table
-        slot.blocks = owned
-        self.hit_tokens += keep
-        self.prompt_tokens += plen
-        # draft residency: lease the request's full span from the draft
-        # pool (no prefix sharing there — the draft prefills the whole
-        # prompt itself). A dry draft pool is NOT an admission failure:
-        # the slot runs plain stepwise (spec_ok False falls the whole
-        # batch back) rather than stalling the target.
-        slot.spec_ok = False
-        if self.spec is not None:
-            n_blk = math.ceil(total / bs)
-            if n_blk <= self.spec_pool.num_free:
-                slot.spec_blocks = self.spec_pool.alloc_many(n_blk)
-                stab = np.zeros((self.blocks_per_seq,), np.int32)
-                stab[:n_blk] = slot.spec_blocks
-                self._spec_tables = self.sfns.set_table(
-                    self._spec_tables, slot.idx, jnp.asarray(stab))
-                slot.spec_ok = True
+        # leak guard: from here to the end of admission the slot holds
+        # leases that are not yet reachable through _release — a raise
+        # (device OOM in the COW copy / occupy index op) must hand every
+        # block back and leave the slot reusable, or the pool leaks its
+        # way to a wedged replica
+        try:
+            if cow_src is not None:       # copy-on-write the shared tail
+                self.cache = self._copy(self.cache, jnp.int32(cow_src),
+                                        jnp.int32(fresh[0]))
+                self.pool.decref(cow_src)
+                cow_src = None
+            table = np.zeros((self.blocks_per_seq,), np.int32)
+            table[:len(owned)] = owned
+            self._occupy(slot, req, prompt, filled=keep, cached=keep)
+            slot.table = table
+            slot.blocks = owned
+            self.hit_tokens += keep
+            self.prompt_tokens += plen
+            # draft residency: lease the request's full span from the
+            # draft pool (no prefix sharing there — the draft prefills
+            # the whole prompt itself). A dry draft pool is NOT an
+            # admission failure: the slot runs plain stepwise (spec_ok
+            # False falls the whole batch back) rather than stalling
+            # the target.
+            slot.spec_ok = False
+            if self.spec is not None:
+                n_blk = math.ceil(total / bs)
+                if n_blk <= self.spec_pool.num_free:
+                    slot.spec_blocks = self.spec_pool.alloc_many(n_blk)
+                    stab = np.zeros((self.blocks_per_seq,), np.int32)
+                    stab[:n_blk] = slot.spec_blocks
+                    self._spec_tables = self.sfns.set_table(
+                        self._spec_tables, slot.idx, jnp.asarray(stab))
+                    slot.spec_ok = True
+        except BaseException:
+            for b in owned:
+                self.pool.decref(b)
+            if cow_src is not None:
+                self.pool.decref(cow_src)
+            for b in slot.spec_blocks:
+                self.spec_pool.decref(b)
+            slot.table = None
+            slot.blocks = []
+            slot.spec_blocks = []
+            if slot.req is req:           # roll back a partial occupy
+                self._clear_slot(slot)
+                slot.res = None
+            raise
         return True
 
     def _match_prefix(self, prompt: List[int]):

@@ -1,0 +1,165 @@
+"""Seeded, schedulable fault injection for the serve plane.
+
+The chaos substrate every fault-tolerance test and benchmark runs on: a
+``FaultPlan`` is a declarative schedule of failures — step exceptions,
+spin-up failures, stragglers, KV-allocation refusals — targeted at
+chosen services/replicas/steps, and DETERMINISTIC: the same plan with
+the same seed fires the same faults on the same (replica, step) pairs
+every run, which is what lets tier-1 assert that a recovered completion
+equals the fault-free one token-for-token.
+
+Threading: ``GatewayConfig.faults`` -> ``ReplicaPool(faults=...)`` ->
+each spun engine gets its own ``FaultInjector`` (bound to the replica's
+service + incarnation number). The injector's ``begin_step()`` hook
+runs at the TOP of ``engine.step()`` — before any device work — so an
+injected ``step_error`` leaves the engine's host/device bookkeeping
+exactly as the previous step left it (a "clean" crash; the containment
+layer distinguishes these from mid-step poisonings). ``spin_fail`` is
+consulted by the pool before it pays for a spin-up; ``kv_alloc_fail``
+makes the engine refuse admissions for the step (the paged pool's
+out-of-blocks behavior, injectable on demand); ``straggler`` sleeps
+``delay_s`` per fired step (a slow replica, not a dead one).
+
+Replicas are identified by INCARNATION: the Nth engine ever spun for a
+(model, backend) service, counting from 0 across quarantines and
+scale-downs — so "kill replica 0's substitute" is expressible as
+``replica=1``.
+"""
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from typing import List, Optional, Tuple
+
+KINDS = ("step_error", "spin_fail", "straggler", "kv_alloc_fail")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the injection hook — a scheduled, clean step failure."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled failure mode.
+
+    ``at_step`` fires deterministically on that step number (1-based,
+    per-replica) for ``for_steps`` consecutive steps; ``rate`` instead
+    fires per-step Bernoulli draws from the spec's own seeded stream
+    (still reproducible). ``count`` caps total firings per replica.
+    ``replica`` selects one incarnation (None: every matching replica).
+    """
+    kind: str                       # one of KINDS
+    model: str = "*"                # fnmatch pattern
+    backend: str = "*"              # fnmatch pattern
+    replica: Optional[int] = None   # incarnation index (None: any)
+    at_step: Optional[int] = None   # 1-based engine-step number
+    for_steps: int = 1              # consecutive steps from at_step
+    rate: float = 0.0               # per-step probability when at_step is None
+    delay_s: float = 0.0            # straggler: injected wall latency
+    count: Optional[int] = None     # max firings per replica
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+    def matches(self, model: str, backend: str, incarnation: int) -> bool:
+        return (fnmatch(model, self.model) and fnmatch(backend, self.backend)
+                and (self.replica is None or self.replica == incarnation))
+
+
+class FaultInjector:
+    """Per-replica injection state: a step counter plus one seeded RNG
+    stream per matching spec, so firings never depend on what OTHER
+    replicas or specs did."""
+
+    def __init__(self, plan: "FaultPlan", model: str, backend: str,
+                 incarnation: int,
+                 specs: List[Tuple[int, FaultSpec]]):
+        self.plan = plan
+        self.model = model
+        self.backend = backend
+        self.incarnation = incarnation
+        self.step_no = 0
+        self.deny_kv = False            # set for the step by kv_alloc_fail
+        self._specs = specs             # (plan index, spec) pairs
+        self._fired_n = {i: 0 for i, _ in specs}
+        self._rng = {
+            i: random.Random(f"{plan.seed}|{i}|{model}|{backend}|"
+                             f"{incarnation}")
+            for i, s in specs if s.at_step is None}
+
+    def begin_step(self) -> List[str]:
+        """Advance the step counter and resolve this step's faults.
+        Returns the fired kinds (caller raises on ``step_error`` after
+        booking its metrics); sleeps stragglers inline; arms ``deny_kv``
+        for the step."""
+        self.step_no += 1
+        self.deny_kv = False
+        fired: List[FaultSpec] = []
+        for i, spec in self._specs:
+            if spec.count is not None and self._fired_n[i] >= spec.count:
+                continue
+            if spec.at_step is not None:
+                hit = (spec.at_step <= self.step_no
+                       < spec.at_step + spec.for_steps)
+            else:
+                hit = (spec.rate > 0.0
+                       and self._rng[i].random() < spec.rate)
+            if not hit:
+                continue
+            self._fired_n[i] += 1
+            fired.append(spec)
+            self.plan.fired.append((self.model, self.backend,
+                                    self.incarnation, self.step_no,
+                                    spec.kind))
+        for spec in fired:
+            if spec.kind == "straggler" and spec.delay_s > 0.0:
+                time.sleep(spec.delay_s)
+            elif spec.kind == "kv_alloc_fail":
+                self.deny_kv = True
+        return [s.kind for s in fired]
+
+
+@dataclass
+class FaultPlan:
+    """A seeded schedule of ``FaultSpec``s plus the log of what fired
+    (``fired``: (model, backend, incarnation, step, kind) tuples)."""
+    specs: List[FaultSpec] = field(default_factory=list)
+    seed: int = 0
+    fired: List[Tuple[str, str, int, int, str]] = field(default_factory=list)
+
+    def injector(self, model: str, backend: str,
+                 incarnation: int) -> Optional[FaultInjector]:
+        """Build the per-replica injector, or None when no spec can ever
+        fire on this replica — the engine then skips the hook entirely."""
+        specs = [(i, s) for i, s in enumerate(self.specs)
+                 if s.kind != "spin_fail"
+                 and s.matches(model, backend, incarnation)]
+        if not specs:
+            return None
+        return FaultInjector(self, model, backend, incarnation, specs)
+
+    def spin_fails(self, model: str, backend: str, incarnation: int) -> bool:
+        """Should this spin-up attempt fail? Consulted by the pool
+        BEFORE it pays for param init/compile. ``at_step``/``rate`` are
+        reinterpreted per-attempt: attempt number == incarnation."""
+        for i, s in enumerate(self.specs):
+            if s.kind != "spin_fail" or not s.matches(model, backend,
+                                                      incarnation):
+                continue
+            if s.count is not None:
+                used = sum(1 for f in self.fired if f[4] == "spin_fail"
+                           and (f[0], f[1]) == (model, backend))
+                if used >= s.count:
+                    continue
+            if s.rate > 0.0:
+                rng = random.Random(f"{self.seed}|{i}|{model}|{backend}|"
+                                    f"{incarnation}")
+                if rng.random() >= s.rate:
+                    continue
+            self.fired.append((model, backend, incarnation, 0, "spin_fail"))
+            return True
+        return False

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.serving.engine import GenResult, Request
@@ -63,6 +63,27 @@ class SchedulerConfig:
     prefix_aware: bool = True     # dispatch best-cached-prefix first
     block_watermark: float = 0.05  # free-block frac below which we shed early
     watermark_depth_div: int = 8  # queue depth divisor under block pressure
+    # fault containment: a replica whose step raises is reported to the
+    # pool's circuit breaker (degrade -> quarantine) and its in-flight
+    # requests are RESUBMITTED — deterministic retry. False re-raises
+    # (the chaos bench's no-containment baseline).
+    contain_failures: bool = True
+    max_retries: int = 3          # resubmissions per request before FAILED
+    retry_backoff_s: float = 0.0  # linear backoff between resubmissions
+    # "replay" re-runs the ORIGINAL request (same uid -> same per-request
+    # PRNG stream, same served prompt -> bit-identical computation) and
+    # suppresses the already-delivered stream deltas: token-for-token
+    # identical to the unfailed run BY CONSTRUCTION, greedy and seeded
+    # stochastic alike. "chain" instead prefills the emitted tokens onto
+    # the prompt (the session-chaining trick) and resumes the PRNG draw
+    # counter past them — cheaper (no re-decode), and exact whenever the
+    # chained KV is served verbatim from the prefix cache; but KV it
+    # must RECOMPUTE goes through prefill under different bucket shapes
+    # than the baseline's decode steps, and that numeric drift can flip
+    # a near-tie for stochastic sampling (greedy argmax is robust in
+    # practice). The determinism guarantee is only unconditional under
+    # "replay", so that is the default.
+    retry_mode: str = "replay"    # "replay" | "chain"
 
 
 @dataclass
@@ -77,6 +98,23 @@ class SchedStats:
     dispatched: int = 0
     completed: int = 0
     steps: int = 0
+    retries: int = 0              # containment resubmissions
+    quarantines: int = 0          # replicas quarantined via this scheduler
+    failed: int = 0               # retry budget exhausted
+
+
+@dataclass
+class _RetryCtx:
+    """Per-uid retry bookkeeping. ``prior`` is the longest token run
+    already DELIVERED to the caller across attempts (replay mode) or the
+    accumulated chain (chain mode); ``prompt_len0`` is the original
+    served prompt length (chain mode grows the request's tokens);
+    ``to_skip`` counts stream deltas the current replay attempt must
+    suppress — the caller already received them before the failure."""
+    prior: List[int]
+    retries: int
+    prompt_len0: int
+    to_skip: int = 0
 
 
 class RequestScheduler:
@@ -94,6 +132,9 @@ class RequestScheduler:
         self._reaped: List[Tuple[_Key, GenResult]] = []
         # (uid, token) streaming increments of the latest step
         self._deltas: List[Tuple[int, int]] = []
+        # uid -> retry bookkeeping for requests resubmitted after a
+        # replica failure (popped when the final result flushes)
+        self._retry_ctx: Dict[int, _RetryCtx] = {}
         self.stats = SchedStats()
 
     def _note(self, event: str, model: str, now: Optional[float],
@@ -231,10 +272,12 @@ class RequestScheduler:
 
     def _req_tokens(self, r: Request) -> int:
         """Prompt tokens the engine will actually prefill: engines keep
-        only the last ``max_seq - max_new - 1`` tokens, so counting a
-        raw oversized prompt would shed real work over phantom load."""
-        return min(len(r.tokens),
-                   max(self.pool.max_seq - r.sampling.max_new_tokens - 1, 1))
+        only the last ``max_seq - budget - 1`` tokens (budget = decode
+        tokens still owed, which shrinks on retries whose emitted chain
+        rides in the prompt), so counting a raw oversized prompt would
+        shed real work over phantom load."""
+        budget = max(r.sampling.max_new_tokens - r.prefix_draws, 1)
+        return min(len(r.tokens), max(self.pool.max_seq - budget - 1, 1))
 
     def _queue_tokens(self, q: Deque[Request]) -> int:
         return sum(self._req_tokens(r) for r in q)
@@ -271,14 +314,16 @@ class RequestScheduler:
                 res.latency = now - r.arrival_t
                 self.stats.cancelled += 1
                 self._note("cancel", model, now, uid=uid, where="queue")
-                return res
-        for eng in self.pool.replicas(*key):
+                return self._absorb_retries(res)
+        # cancel reaches DRAINING replicas too, not just placement —
+        # a request riding out a drain is still the caller's to abort
+        for eng in self.pool.service_engines(*key):
             res = eng.cancel(uid, now)
             if res is not None:
                 entry.active_requests = max(0, entry.active_requests - 1)
                 self.stats.cancelled += 1
                 self._note("cancel", model, now, uid=uid, where="engine")
-                return res
+                return self._absorb_retries(res)
         return None
 
     # -- serve loop -----------------------------------------------------
@@ -319,12 +364,21 @@ class RequestScheduler:
                         if prefix else 0))
                     q.clear()
                     q.extend(ordered)
+            # retry backoff: requests still inside their not_before
+            # window are held aside (and re-queued in order), never
+            # dispatched early and never blocking the requests behind
+            held: List[Request] = []
             while q and self.pool.free_slots(model, backend) > 0:
                 req = q.popleft()
+                if req.not_before > now:
+                    held.append(req)
+                    continue
                 entry.queued = max(0, entry.queued - 1)
                 self._to_engine(key, req, now)
                 self.stats.dispatched += 1
                 moved += 1
+            for r in reversed(held):
+                q.appendleft(r)
         return moved
 
     def _expire(self, key: _Key, req: Request, now: float) -> bool:
@@ -348,9 +402,10 @@ class RequestScheduler:
         self.dispatch(now)
         out: List[Tuple[_Key, GenResult]]
         out, self._reaped = self._reaped, []
+        out = [(k, self._absorb_retries(r)) for k, r in out]
         self._deltas = []
         flight = self._obs.flight if self._obs is not None else None
-        for key, eng in self.pool.engines():
+        for key, eng in list(self.pool.engines()):
             if not eng.has_work():
                 continue
             entry = self.reg.entry(*key)
@@ -358,11 +413,33 @@ class RequestScheduler:
                 results = eng.step()
             except Exception as exc:
                 # the flight ring holds the steps leading INTO the crash;
-                # dump before the exception unwinds the serve loop
+                # dump before anything else happens to the replica
                 if flight is not None:
                     flight.note_exception(key[0], exc, now)
-                raise
+                report = getattr(self.pool, "report_step_failure", None)
+                if not self.cfg.contain_failures or report is None:
+                    raise
+                # containment: the circuit breaker degrades (replica keeps
+                # its state, retries next step) or quarantines (replica
+                # leaves placement; its in-flight work comes back as an
+                # evacuation list we resubmit deterministically). Results
+                # and deltas booked BEFORE a mid-step crash are salvaged —
+                # their device work completed, and retry dedup means
+                # nothing is ever emitted twice.
+                self._note("step_error", key[0], now, error=repr(exc))
+                evac = report(key[0], key[1], eng, exc, now)
+                results = eng.drain_finished()
+                self._deltas.extend(self._filter_deltas(eng.drain_deltas()))
+                if evac is not None:
+                    self.stats.quarantines += 1
+                    self._resubmit(key, evac, now)
+            else:
+                ok = getattr(self.pool, "note_step_ok", None)
+                if ok is not None:
+                    ok(eng, now)
+                self._deltas.extend(self._filter_deltas(eng.drain_deltas()))
             for res in results:
+                res = self._absorb_retries(res)
                 entry.active_requests = max(0, entry.active_requests - 1)
                 # stamp with the step's OWN clock: mixing perf_counter
                 # into a simulated `now` skewed the telemetry window
@@ -371,7 +448,12 @@ class RequestScheduler:
                 if res.timed_out and flight is not None:
                     flight.note_expiry(now)
                 out.append((key, res))
-            self._deltas.extend(eng.drain_deltas())
+        # draining replicas that emptied (or blew their deadline) retire
+        # here; deadline evacuations are resubmitted like quarantines
+        drains = getattr(self.pool, "finish_drains", None)
+        if drains is not None:
+            for dkey, evac in drains(now):
+                self._resubmit(dkey, evac, now)
         # paged-plane gauges: pool pressure / occupancy / prefix hit-rate
         # land in the same telemetry the Orchestrator ticks on, so Spin
         # can treat a block-starved service as a loaded one
@@ -408,6 +490,122 @@ class RequestScheduler:
         """Fetch the latest step's (uid, token) streaming increments, in
         generation order per request."""
         out, self._deltas = self._deltas, []
+        return out
+
+    # -- fault containment ------------------------------------------------
+    def _resubmit(self, key: _Key, evac, now: float) -> None:
+        """Deterministic retry: every request evacuated off a failed (or
+        drain-expired) replica goes back to the FRONT of its admission
+        queue. Under ``retry_mode="replay"`` (default) the ORIGINAL
+        request is resubmitted verbatim — same uid, same served prompt —
+        so the substitute replica runs a bit-identical computation and
+        regenerates the same tokens; deltas the caller already received
+        are suppressed on the way out. Under ``"chain"`` the emitted
+        tokens are chained onto the prompt and the per-request PRNG draw
+        counter advanced past them (``prefix_draws``) — see
+        SchedulerConfig for the exactness trade-off. Requests over the
+        retry budget become structured FAILED results."""
+        model, backend = key
+        q = self._queues[key]
+        entry = self.reg.entry(*key)
+        replay = self.cfg.retry_mode != "chain"
+        front: List[Request] = []
+        for req, served, emitted in evac:
+            entry.active_requests = max(0, entry.active_requests - 1)
+            if served is None:
+                # still queued inside the engine: requeue verbatim — an
+                # evacuation is not a failed ATTEMPT for this request
+                front.append(req)
+                continue
+            ctx = self._retry_ctx.get(req.uid)
+            if replay:
+                # a replay attempt regenerates from token 0, so the
+                # delivered run is the LONGEST seen, not a concatenation
+                prior = (ctx.prior if ctx is not None
+                         and len(ctx.prior) >= len(emitted)
+                         else list(emitted))
+                prompt_len0 = (ctx.prompt_len0 if ctx is not None
+                               else len(req.tokens))
+            else:
+                prior = (ctx.prior if ctx is not None else []) + list(emitted)
+                prompt_len0 = (ctx.prompt_len0 if ctx is not None
+                               else len(served))
+            if req.retries >= self.cfg.max_retries:
+                # budget exhausted: structured failure carrying every
+                # token emitted so far (absorbed when the result flushes)
+                self._retry_ctx[req.uid] = _RetryCtx(prior, req.retries,
+                                                     prompt_len0)
+                res = GenResult(uid=req.uid, prompt_len=len(req.tokens),
+                                failed=True)
+                res.latency = now - req.arrival_t
+                self._reaped.append((key, res))
+                self.stats.failed += 1
+                self._note("retry_exhausted", model, now, uid=req.uid,
+                           retries=req.retries)
+                continue
+            self._retry_ctx[req.uid] = _RetryCtx(
+                prior, req.retries + 1, prompt_len0,
+                to_skip=len(prior) if replay else 0)
+            if replay:
+                nreq = replace(
+                    req, retries=req.retries + 1,
+                    not_before=now + self.cfg.retry_backoff_s
+                    * (req.retries + 1))
+            else:
+                nreq = replace(
+                    req, tokens=list(served) + list(emitted),
+                    prefix_draws=req.prefix_draws + len(emitted),
+                    retries=req.retries + 1,
+                    not_before=now + self.cfg.retry_backoff_s
+                    * (req.retries + 1))
+            front.append(nreq)
+            self.stats.retries += 1
+            if self._obs is not None:
+                self._obs.registry.counter("retries_total", model).inc()
+            self._note("retry", model, now, uid=req.uid,
+                       emitted=len(emitted), retries=req.retries + 1)
+        for r in reversed(front):
+            q.appendleft(r)
+        entry.queued += len(front)
+
+    def _absorb_retries(self, res: GenResult) -> GenResult:
+        """Fold retry history into a result leaving the scheduler. Replay
+        mode: the final attempt regenerated the full token run, so the
+        result is already whole unless it died early (budget exhaustion /
+        cancel while queued), in which case the longest delivered run is
+        restored. Chain mode: tokens emitted on earlier replicas rode in
+        the retried prompt, so they are prepended here and ``prompt_len``
+        is restored to the ORIGINAL served prompt."""
+        ctx = self._retry_ctx.pop(res.uid, None)
+        if ctx is None:
+            return res
+        if (self._obs is not None and not res.failed
+                and not res.cancelled and not res.timed_out):
+            # a retried request actually finishing = recovery succeeded
+            self._obs.registry.counter("retries_recovered_total",
+                                       "all").inc()
+        if self.cfg.retry_mode != "chain":
+            if len(res.new_tokens) < len(ctx.prior):
+                res.new_tokens = list(ctx.prior)
+        else:
+            res.new_tokens = ctx.prior + res.new_tokens
+            res.prompt_len = ctx.prompt_len0
+            res.cached_tokens = min(res.cached_tokens, ctx.prompt_len0)
+        res.retries = ctx.retries
+        return res
+
+    def _filter_deltas(self, deltas):
+        """Drop stream deltas a replay retry re-generates for tokens the
+        caller already received from the failed attempt."""
+        if not self._retry_ctx:
+            return deltas
+        out = []
+        for uid, tok in deltas:
+            ctx = self._retry_ctx.get(uid)
+            if ctx is not None and ctx.to_skip > 0:
+                ctx.to_skip -= 1
+                continue
+            out.append((uid, tok))
         return out
 
     # -- internals -------------------------------------------------------

@@ -1,0 +1,34 @@
+"""SL007 seed: broad exception handlers that swallow replica failures.
+
+Three violations of the serve plane's containment contract: a bare
+``except:`` that drops the fault on the floor, an ``except Exception:``
+that only logs, and a tuple handler catching ``BaseException`` that
+"handles" the crash by zeroing state.  None re-raise, none route into a
+containment routine — the exact pattern that turns an injected replica
+crash into silent state corruption the chaos harness can never observe.
+Servelint (with this file configured as a fault-path module) must flag
+all three.
+"""
+
+
+class Scheduler:
+    def step_all(self, engines, now):
+        for key, eng in engines:
+            try:
+                eng.step()
+            except:                        # noqa: E722  (the seed itself)
+                pass                       # swallowed: replica keeps serving
+
+    def reap(self, eng, now):
+        try:
+            return eng.drain_finished()
+        except Exception as exc:
+            print(f"step failed: {exc!r}")  # logged, never contained
+            return []
+
+    def reset(self, eng):
+        try:
+            eng.flush()
+        except (ValueError, BaseException):
+            eng.slots = []                 # "recovery" that loses requests
+            return None

@@ -1,0 +1,37 @@
+"""SL007 clean twin: every broad handler on the fault path either
+re-raises, routes the failure into a containment routine
+(``report_step_failure`` / ``quarantine`` / ``note_exception``), or is
+a typed handler for a designed, recoverable condition."""
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+class Scheduler:
+    def step_all(self, engines, now):
+        for key, eng in engines:
+            try:
+                eng.step()
+            except Exception as exc:
+                self.flight.note_exception(key[0], exc, now)
+                self.pool.report_step_failure(key[0], key[1], eng, exc, now)
+
+    def reap(self, eng, now):
+        try:
+            return eng.drain_finished()
+        except BaseException:
+            eng.poisoned = True            # conserve, then propagate
+            raise
+
+    def admit(self, eng, req):
+        try:
+            eng.enqueue(req)
+        except PoolExhausted:              # typed: designed backpressure
+            self.requeue(req)
+
+    def retire(self, eng, now):
+        try:
+            eng.flush()
+        except Exception:
+            self.pool.quarantine(eng.model, eng.backend, eng, now)

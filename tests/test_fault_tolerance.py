@@ -1,0 +1,399 @@
+"""Fault-tolerant serve plane: seeded injection, health & quarantine,
+deterministic retry-from-prefix, graceful drain.
+
+The determinism tests are the tier-1 acceptance: with a seeded
+``FaultPlan`` killing a replica mid-decode or mid-prefill, the recovered
+completions must equal the fault-free run token-for-token — greedy AND
+seeded stochastic, dense AND paged. The invariant this rests on: per-
+request PRNG streams are keyed by uid x draw index (not batch or
+replica), and a retried request chains its emitted tokens onto the
+prompt while resuming its draw counter (``prefix_draws``)."""
+import time
+
+import jax
+import pytest
+
+from conftest import reduced_f32
+from repro.core.gateway import ServeFrontend
+from repro.core.orchestrator import SpinConfig
+from repro.core.scoring import PROFILES
+from repro.models import init_model
+from repro.serving import (FaultPlan, FaultSpec, InferenceEngine,
+                           InjectedFault, PagedInferenceEngine, Request,
+                           SamplingParams, SchedulerConfig, compile_fns,
+                           compile_paged_fns, get_backend)
+
+SMOL = "smollm-360m"
+KEY = (SMOL, "trt")
+PROMPTS = ("the quick brown fox jumps over the lazy dog",
+           "pack my box with five dozen liquor jugs")
+
+
+def _fe(faults=None, paged=False, sched=None, **kw):
+    spin = SpinConfig(window_s=20.0, cooldown_s=0.0, idle_tau_s=0.5,
+                      tick_s=3600.0, max_replicas=3,
+                      warm_pool={"small": 0, "medium": 0, "large": 0})
+    return ServeFrontend({SMOL: reduced_f32(SMOL)},
+                         profile=PROFILES["balanced"], max_seq=96,
+                         spin=spin, faults=faults, paged=paged,
+                         sched=sched, **kw)
+
+
+def _submit_pair(fe, max_new=12):
+    """One greedy + one seeded-stochastic request (fixed uids 0/1 on a
+    fresh frontend, so per-request PRNG streams line up across runs)."""
+    return [fe.submit(PROMPTS[0], max_new_tokens=max_new),
+            fe.submit(PROMPTS[1], max_new_tokens=max_new,
+                      sampling=SamplingParams(temperature=1.3, top_k=8,
+                                              max_new_tokens=max_new))]
+
+
+def _check_identical(base, out):
+    for b, r in zip(base, out):
+        assert r.completed
+        assert r.new_tokens == b.new_tokens
+        assert r.finish_reason == b.finish_reason
+        assert r.usage.prompt_tokens == b.usage.prompt_tokens
+
+
+# -- fault plan unit behavior ------------------------------------------------
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultSpec("segfault")
+
+
+def test_fault_plan_rate_streams_are_deterministic():
+    plan = FaultPlan([FaultSpec("step_error", rate=0.3)], seed=11)
+
+    def fires(incarnation):
+        inj = plan.injector(SMOL, "trt", incarnation)
+        return [inj.begin_step() for _ in range(40)]
+
+    assert fires(0) == fires(0)           # same identity -> same schedule
+    assert fires(0) != fires(1)           # incarnations draw independently
+    assert any(k for k in fires(0))       # 40 steps at 30%: something fired
+
+
+def test_fault_plan_targets_replica_and_step():
+    plan = FaultPlan([FaultSpec("step_error", at_step=3, replica=0)])
+    assert plan.injector(SMOL, "trt", 1) is None      # wrong incarnation
+    inj = plan.injector(SMOL, "trt", 0)
+    assert [inj.begin_step() for _ in range(4)] == \
+        [[], [], ["step_error"], []]
+    assert plan.fired == [(SMOL, "trt", 0, 3, "step_error")]
+
+
+def test_spin_fail_consults_before_spin():
+    plan = FaultPlan([FaultSpec("spin_fail", replica=0)])
+    assert plan.spin_fails(SMOL, "trt", 0)
+    assert not plan.spin_fails(SMOL, "trt", 1)        # substitute spins
+    assert plan.fired[0][4] == "spin_fail"
+
+
+# -- engine-level injection --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ep():
+    cfg = reduced_f32(SMOL)
+    return cfg, init_model(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def dense_fns(ep):
+    cfg, _ = ep
+    return compile_fns(cfg, get_backend("trt"), 96)
+
+
+@pytest.fixture(scope="module")
+def paged_fns(ep):
+    cfg, _ = ep
+    return compile_paged_fns(cfg, get_backend("trt"), 96, 16)
+
+
+def _req(cfg, uid=0, max_new=6, n=12):
+    return Request(uid=uid, tokens=list(range(5, 5 + n)),
+                   sampling=SamplingParams(max_new_tokens=max_new))
+
+
+def test_injected_step_error_is_clean(ep, dense_fns):
+    cfg, params = ep
+    plan = FaultPlan([FaultSpec("step_error", at_step=2, count=1)])
+    eng = InferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                          fns=dense_fns, fault=plan.injector(SMOL, "trt", 0))
+    eng.submit(_req(cfg))
+    eng.step()                                        # step 1: fine
+    with pytest.raises(InjectedFault):
+        eng.step()                                    # step 2: injected
+    # clean crash: fired BEFORE device work, state intact, not poisoned
+    assert not eng.poisoned
+    res = []
+    while eng.has_work():
+        res.extend(eng.step())
+    assert res and res[0].completed
+
+
+def test_straggler_injects_wall_latency(ep, dense_fns):
+    cfg, params = ep
+    plan = FaultPlan([FaultSpec("straggler", at_step=2, delay_s=0.05)])
+    eng = InferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                          fns=dense_fns, fault=plan.injector(SMOL, "trt", 0))
+    eng.submit(_req(cfg))
+    eng.step()
+    t0 = time.perf_counter()
+    eng.step()
+    assert time.perf_counter() - t0 >= 0.05
+    assert plan.fired[0][4] == "straggler"
+
+
+def test_kv_alloc_fail_defers_admission(ep, paged_fns):
+    cfg, params = ep
+    plan = FaultPlan([FaultSpec("kv_alloc_fail", at_step=1, for_steps=2)])
+    eng = PagedInferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                               block_size=16, fns=paged_fns,
+                               fault=plan.injector(SMOL, "trt", 0))
+    eng.submit(_req(cfg))
+    eng.step()                                        # denied: stays queued
+    assert eng._queued() == 1 and eng.pool.num_free == eng.pool.num_blocks
+    eng.step()                                        # denied again
+    assert eng._queued() == 1
+    res = []
+    while eng.has_work():                             # step 3+: admitted
+        res.extend(eng.step())
+    assert res[0].completed
+    assert [f[4] for f in plan.fired] == ["kv_alloc_fail"] * 2
+
+
+def test_poisoned_step_conserves_resources(ep, paged_fns):
+    """Satellite: a mid-step exception (host/device possibly diverged)
+    must not leak KV blocks, slots, or uid-index entries once the
+    engine is evacuated."""
+    cfg, params = ep
+    eng = PagedInferenceEngine(cfg, params, get_backend("trt"), max_seq=96,
+                               block_size=16, fns=paged_fns,
+                               prefix_cache=False)
+    free0, slots0 = eng.pool.num_free, eng.free_slots()
+    for i in range(2):
+        eng.submit(_req(cfg, uid=i))
+
+    def boom(active):
+        raise RuntimeError("mid-step poison")
+
+    eng._decode_once = boom
+    with pytest.raises(RuntimeError):
+        eng.step()
+    assert eng.poisoned                               # latch for containment
+    evac = eng.evacuate()
+    assert len(evac) == 2
+    assert eng.pool.num_free == free0                 # KV blocks conserved
+    assert eng.free_slots() == slots0                 # slots conserved
+    assert not eng._by_uid and not eng.has_work()
+
+
+# -- deterministic retry (tier-1 acceptance) ---------------------------------
+
+def _run_pair(faults, paged, chunk_tokens=None, replicas=1, max_new=12):
+    fe = _fe(faults=faults, paged=paged, quarantine_after=1,
+             chunk_tokens=chunk_tokens)
+    if replicas > 1:
+        fe.pool.scale(SMOL, "trt", replicas)
+    hs = _submit_pair(fe, max_new=max_new)
+    fe.serve_all()
+    return fe, [h.response for h in hs]
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_retry_mid_decode_token_identical(paged):
+    _, base = _run_pair(None, paged)
+    plan = FaultPlan([FaultSpec("step_error", at_step=5, replica=0)], seed=3)
+    fe, out = _run_pair(plan, paged)
+    assert [f[4] for f in plan.fired] == ["step_error"]
+    assert fe.pool.quarantines == 1
+    _check_identical(base, out)
+    assert all(r.usage.retries == 1 for r in out)
+    # the quarantined replica's work was resubmitted, never dropped
+    assert fe.scheduler.stats.retries == 2
+    assert fe.scheduler.stats.failed == 0
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_retry_mid_prefill_token_identical(paged):
+    """Kill at step 2 of a chunked prefill (cursor > 0, nothing emitted
+    yet): the retry re-prefills the served prompt from scratch on the
+    substitute and must still match the fault-free run exactly."""
+    _, base = _run_pair(None, paged, chunk_tokens=8)
+    plan = FaultPlan([FaultSpec("step_error", at_step=2, replica=0)], seed=3)
+    fe, out = _run_pair(plan, paged, chunk_tokens=8)
+    assert [f[4] for f in plan.fired] == ["step_error"]
+    assert fe.pool.quarantines == 1
+    _check_identical(base, out)
+    assert all(r.usage.retries == 1 for r in out)
+
+
+def test_retry_onto_surviving_replica_cold_prefix_cache():
+    """Satellite edge case: the retry lands on a replica whose radix
+    cache never saw the chained prefix (fresh substitute / evicted
+    blocks) — it falls back to a full re-prefill and must still be
+    token-identical. With two replicas the survivor takes the evacuees
+    while serving its own work."""
+    _, base = _run_pair(None, True, replicas=2)
+    plan = FaultPlan([FaultSpec("step_error", at_step=5, replica=0)], seed=3)
+    fe, out = _run_pair(plan, True, replicas=2)
+    assert fe.pool.quarantines == 1
+    _check_identical(base, out)
+    # full re-prefill fallback: the final result never reports more
+    # cached tokens than its original served prompt
+    for r in out:
+        assert r.usage.cached_tokens <= r.usage.prompt_tokens
+
+
+def test_degraded_replica_recovers_below_threshold():
+    """One clean injected failure with quarantine_after=2 degrades the
+    replica (kept in placement, state intact); the next clean step
+    resets the breaker to healthy. No retry is ever needed."""
+    _, base = _run_pair(None, False)
+    plan = FaultPlan([FaultSpec("step_error", at_step=5, replica=0)], seed=3)
+    fe = _fe(faults=plan, paged=False, quarantine_after=2)
+    hs = _submit_pair(fe)
+    fe.serve_all()
+    out = [h.response for h in hs]
+    _check_identical(base, out)
+    assert fe.pool.quarantines == 0
+    assert fe.scheduler.stats.retries == 0
+    eng = fe.pool.replicas(*KEY)[0]
+    assert eng.health.state == "healthy" and eng.health.failures == 1
+    assert all(r.usage.retries == 0 for r in out)
+
+
+def test_retry_budget_exhaustion_is_structured():
+    """Every replica (original + substitutes) dies every step: the
+    request burns its retry budget and resolves as finish_reason ==
+    "failed" with the retry count in usage — never a hang or a crash."""
+    plan = FaultPlan([FaultSpec("step_error", at_step=2)], seed=1)
+    fe = _fe(faults=plan, paged=False, quarantine_after=1,
+             sched=SchedulerConfig(max_retries=1))
+    h = fe.submit(PROMPTS[0], max_new_tokens=8)
+    fe.serve_all()
+    r = h.response
+    assert r.finish_reason == "failed" and not r.completed
+    assert r.usage.retries == 1
+    assert fe.scheduler.stats.failed == 1
+    assert fe.pool.quarantines >= 2
+
+
+def test_retry_racing_cancel_resolves_cancelled():
+    """Satellite edge case: the client cancels while the retried request
+    is waiting to re-dispatch. The result is a clean cancellation that
+    still carries the tokens emitted before the failure."""
+    plan = FaultPlan([FaultSpec("step_error", at_step=5, replica=0)], seed=3)
+    fe = _fe(faults=plan, paged=False, quarantine_after=1,
+             sched=SchedulerConfig(retry_backoff_s=60.0))
+    h = fe.submit(PROMPTS[0], max_new_tokens=12)
+    for _ in range(200):
+        fe.step()
+        if fe.scheduler.stats.retries:
+            break
+    assert fe.scheduler.stats.retries == 1
+    assert h.cancel()
+    r = h.response
+    assert r.finish_reason == "cancelled"
+    assert 0 < len(r.new_tokens) < 12          # pre-failure tokens kept
+    assert not fe.scheduler._retry_ctx         # bookkeeping cleaned up
+    assert not fe.has_work()
+
+
+def test_no_containment_baseline_reraises():
+    plan = FaultPlan([FaultSpec("step_error", at_step=2, replica=0)])
+    fe = _fe(faults=plan, paged=False,
+             sched=SchedulerConfig(contain_failures=False))
+    fe.submit(PROMPTS[0], max_new_tokens=8)
+    with pytest.raises(InjectedFault):
+        fe.serve_all()
+
+
+# -- quarantine / replacement / spin failures --------------------------------
+
+def test_quarantine_replaces_and_settles_ledger_once():
+    plan = FaultPlan([FaultSpec("step_error", at_step=4, replica=0)], seed=3)
+    fe = _fe(faults=plan, paged=False, quarantine_after=1)
+    h = fe.submit(PROMPTS[0], max_new_tokens=10)
+    fe.serve_all()
+    assert h.response.completed
+    pool = fe.pool
+    assert pool.quarantines == 1
+    # the sick replica left placement and a substitute serves instead
+    assert len(pool.replicas(*KEY)) == 1
+    live = pool.replicas(*KEY)[0]
+    assert live.incarnation == 1 and live.health.state == "healthy"
+    assert not pool._pending_replace
+    kinds = [e.kind for e in pool.events]
+    assert "quarantine" in kinds
+    # ledger: the quarantined meter settled exactly once; settling again
+    # (drain/scale paths reaching the same engine) is a no-op
+    ledger = fe.obs.ledger
+    downs = [m for m in ledger.meters if m.down_t is not None]
+    assert len(downs) == 1
+    down_t0 = downs[0].down_t
+    pool.quarantine(SMOL, "trt", live, time.perf_counter())  # now settles #2
+    pool.quarantine(SMOL, "trt", live, time.perf_counter())  # idempotent
+    assert downs[0].down_t == down_t0
+    assert sum(1 for m in ledger.meters if m.down_t is not None) == 2
+    # health gauges published per state
+    reg = fe.obs.registry
+    assert reg.value("replica_health", f"{SMOL}|state=quarantined") >= 1.0
+    assert reg.value("replicas_quarantined_total", SMOL) >= 1.0
+    assert reg.value("fault_injected_total", f"{SMOL}|kind=step_error") == 1.0
+    assert reg.value("retries_total", SMOL) >= 1.0
+
+
+def test_spin_fail_contained_and_retried_next_attempt():
+    plan = FaultPlan([FaultSpec("spin_fail", replica=0)])
+    fe = _fe(faults=plan, paged=False)
+    pool = fe.pool
+    assert pool.scale(SMOL, "trt", 1) == 0            # attempt 0 injected
+    assert plan.fired[0][4] == "spin_fail"
+    h = fe.submit(PROMPTS[0], max_new_tokens=4)       # spin-on-demand:
+    fe.serve_all()                                    # attempt 1 succeeds
+    assert h.response.completed
+    assert pool.replicas(*KEY)[0].incarnation == 1
+
+
+# -- graceful drain ----------------------------------------------------------
+
+def test_scale_down_drains_in_flight_work():
+    fe = _fe(paged=False)
+    h = fe.submit(PROMPTS[0], max_new_tokens=24)
+    fe.step()
+    fe.step()                                         # mid-decode
+    _, base = _run_pair(None, False, max_new=24)
+    pool = fe.pool
+    pool.scale(SMOL, "trt", 0)
+    # out of placement immediately, still stepping until done
+    assert not pool.replicas(*KEY)
+    assert pool.total_replicas() == 1
+    assert fe.registry.entry(*KEY).replicas == 0
+    assert any(e.kind == "drain" for e in pool.events)
+    fe.serve_all()
+    r = h.response
+    assert r.completed and len(r.new_tokens) == 24
+    assert r.new_tokens == base[0].new_tokens         # drain changed nothing
+    assert pool.total_replicas() == 0                 # retired after drain
+    assert any(e.kind == "drained" for e in pool.events)
+    assert fe.obs.registry._hists[("drain_s", SMOL)].count == 1
+
+
+def test_drain_deadline_evacuates_and_retries():
+    """A drain that can't finish in time force-evacuates; the evacuees
+    are resubmitted (deterministic retry) onto a fresh replica."""
+    _, base = _run_pair(None, False, max_new=24)
+    fe = _fe(paged=False, drain_deadline_s=0.0)
+    h = fe.submit(PROMPTS[0], max_new_tokens=24)
+    fe.step()
+    fe.step()
+    fe.pool.scale(SMOL, "trt", 0)                     # deadline already past
+    fe.serve_all()
+    r = h.response
+    assert r.completed and r.new_tokens == base[0].new_tokens
+    assert r.usage.retries == 1
+    assert any(e.kind == "drain-timeout" for e in fe.pool.events)
+    assert fe.pool.total_replicas() in (0, 1)         # respun on demand

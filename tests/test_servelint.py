@@ -28,6 +28,7 @@ def fixture_config() -> Config:
     data["exclude"] = []
     data["SL002"]["hot_functions"] = ["*::Engine._decode_once"]
     data["SL006"]["verify_functions"] = ["*::Engine._decode_spec"]
+    data["SL007"]["modules"] = ["*sl007_*.py"]
     return Config(data=data, root=str(ROOT))
 
 
@@ -49,6 +50,7 @@ PAIRS = [
     ("SL004", "sl004_donation_bad.py", "sl004_donation_ok.py", 1),
     ("SL005", "sl005_cardinality_bad.py", "sl005_cardinality_ok.py", 2),
     ("SL006", "sl006_spec_verify_bad.py", "sl006_spec_verify_ok.py", 3),
+    ("SL007", "sl007_fault_path_bad.py", "sl007_fault_path_ok.py", 3),
 ]
 
 
@@ -104,6 +106,21 @@ def test_sl005_catches_uid_label_and_shape_fork():
     msgs = [f.message for f in run_fixture("sl005_cardinality_bad.py")]
     assert any("unbounded cardinality" in m for m in msgs)
     assert any("plain label here but composite" in m for m in msgs)
+
+
+def test_sl007_names_each_swallowing_form():
+    kinds = {f.message.split(" swallows")[0]
+             for f in run_fixture("sl007_fault_path_bad.py")}
+    assert kinds == {"bare `except:`", "`except Exception`",
+                     "`except BaseException`"}
+
+
+def test_sl007_silent_outside_configured_modules():
+    """The rule is scoped: the same swallowing handler in an
+    unconfigured file is not the serve plane's business."""
+    src = (FIXTURES / "sl007_fault_path_bad.py").read_text()
+    cfg = fixture_config()
+    assert run_source("elsewhere/util.py", src, config=cfg) == []
 
 
 # ---------------------------------------------------------------------------
